@@ -1,0 +1,63 @@
+"""Kernel microbenchmarks (CPU interpret mode: correctness-path timing;
+the derived column reports the modeled TPU-side traffic so the roofline
+claims are auditable)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.faultmap import PAPER_MAP_SEED, FaultMap
+from repro.core.hbm import VCU128
+from repro.kernels.bitflip import ops as bops
+from repro.kernels.ecc import ops as eops
+from repro.kernels.flash_attention import ops as fops
+from repro.kernels.rglru import ops as rops
+
+FMAP = FaultMap.from_seed(VCU128, seed=PAPER_MAP_SEED)
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    n = 1 << 20
+    x = jnp.zeros((n,), jnp.uint32)
+    thr = FMAP.thresholds(0.90, pc=4)
+    us = _time(bops.inject_u32, x, thresholds=thr, seed=1)
+    rows.append({"name": "bitflip_word_1M_words", "us_per_call": us,
+                 "derived": f"hbm_rw_bytes={2*4*n}"})
+    thr2 = FMAP.thresholds(0.86, pc=4)
+    us = _time(bops.inject_u32, x, thresholds=thr2, seed=1,
+               method="bitwise")
+    rows.append({"name": "bitflip_bitwise_1M_words", "us_per_call": us,
+                 "derived": f"hbm_rw_bytes={2*4*n}"})
+    us = _time(eops.inject_and_correct_u32, x, thresholds=thr, seed=1)
+    rows.append({"name": "ecc_fused_1M_words", "us_per_call": us,
+                 "derived": f"hbm_rw_bytes={2*4*n}"})
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 1024, 128),
+                          jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 1024, 128),
+                          jnp.bfloat16)
+    us = _time(fops.flash_attention, q, k, k, causal=True)
+    flops = 4 * 1024 * 1024 * 8 * 128
+    rows.append({"name": "flash_attn_1k_8h", "us_per_call": us,
+                 "derived": f"flops={flops}"})
+
+    a = jax.random.uniform(jax.random.PRNGKey(2), (8, 1024, 256),
+                           jnp.float32, 0.9, 0.999)
+    b = jax.random.normal(jax.random.PRNGKey(3), (8, 1024, 256)) * 0.1
+    h0 = jnp.zeros((8, 256), jnp.float32)
+    us = _time(rops.rglru_scan, a, b, h0)
+    rows.append({"name": "rglru_scan_8x1k", "us_per_call": us,
+                 "derived": f"hbm_rw_bytes={3*8*1024*256*4}"})
+    return rows

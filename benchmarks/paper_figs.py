@@ -1,0 +1,140 @@
+"""Paper-reproduction benchmarks: one function per figure/table.
+
+Every function returns rows (list of dicts) and ASSERTS the paper's
+quantitative claims (C1-C11 in DESIGN.md) -- a failed anchor fails the
+benchmark run.  The reliability figures run the actual injection kernel
+through Algorithm 1 on scaled-down arrays; the power figures evaluate
+the calibrated model the measurements were fitted to.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import reliability as rel
+from repro.core.faultmap import PAPER_MAP_SEED, FaultMap
+from repro.core.faultmodel import (DEFAULT_FAULT_MODEL, V_CRITICAL, V_MIN,
+                                   V_NOM)
+from repro.core.hbm import VCU128
+from repro.core.tradeoff import TradeoffSolver, voltage_grid
+from repro.core.voltage import DEFAULT_POWER_MODEL
+
+FMAP = FaultMap.from_seed(VCU128, seed=PAPER_MAP_SEED)
+PM = DEFAULT_POWER_MODEL
+FM = DEFAULT_FAULT_MODEL
+
+
+def fig2_power():
+    """Fig. 2: normalized power vs voltage at 0/25/50/75/100% bandwidth."""
+    rows = []
+    for v in voltage_grid(step=0.05):
+        for util in (0.0, 0.25, 0.5, 0.75, 1.0):
+            rows.append({"fig": "fig2", "voltage": float(v), "util": util,
+                         "power": float(PM.power(v, util))})
+    # anchors: 1.5x at V_min for every utilization; 2.3x at 0.85 V;
+    # idle = 1/3 of full load (C2, C3, C10)
+    for util in (0.0, 0.5, 1.0):
+        assert abs(float(PM.savings(V_MIN, util)) - 1.5) < 0.01
+    assert abs(float(PM.savings(0.85)) - 2.3) < 0.05
+    assert abs(float(PM.power(V_NOM, 0.0)) - 1 / 3) < 1e-6
+    return rows
+
+
+def fig3_capacitance():
+    """Fig. 3: normalized alpha*C_L*f vs voltage."""
+    rows = [{"fig": "fig3", "voltage": float(v),
+             "alpha_clf": float(PM.alpha_clf(v))}
+            for v in voltage_grid(step=0.05)]
+    assert abs(float(PM.alpha_clf(0.98)) - 1.0) < 0.03   # flat in guardband
+    assert abs((1 - float(PM.alpha_clf(0.85))) - 0.14) < 0.01  # 14% drop
+    return rows
+
+
+def fig4_faultrate():
+    """Fig. 4: faulty fraction per stack vs voltage (analytic + empirical
+    via Algorithm 1 on a scaled-down PC)."""
+    rows = []
+    for v in voltage_grid(step=0.01):
+        rows.append({"fig": "fig4", "voltage": float(v),
+                     "hbm0": FMAP.stack_mean_rate(float(v), 0),
+                     "hbm1": FMAP.stack_mean_rate(float(v), 1)})
+    # C1/C5/C7 anchors
+    assert FMAP.stack_mean_rate(0.98, 0) == 0.0
+    assert FMAP.stack_mean_rate(0.83, 0) > 0.99
+    r0, r1 = FMAP.stack_mean_rate(0.92, 0), FMAP.stack_mean_rate(0.92, 1)
+    assert r1 > r0
+    # empirical spot-check with the injection kernel (C5 growth)
+    counts = []
+    for v in (0.92, 0.90, 0.88):
+        t = rel.run_pc_test(FMAP, v, pc=19, mem_words=1 << 18,
+                            pattern=rel.ALL_ZEROS, method="auto")
+        counts.append(t.fault_counts[0])
+        rows.append({"fig": "fig4_empirical", "voltage": v, "pc": 19,
+                     "faults": t.fault_counts[0]})
+    assert counts[0] < counts[1] < counts[2]
+    return rows
+
+
+def fig5_pcmap():
+    """Fig. 5: per-PC fault rates at representative voltages + pattern
+    asymmetry (C4, C6, C8)."""
+    rows = []
+    for v in (0.95, 0.93, 0.91, 0.89, 0.87):
+        total = FMAP.pc_total_rate(v)
+        for pc in range(FMAP.geometry.num_pcs):
+            rows.append({"fig": "fig5", "voltage": v, "pc": pc,
+                         "rate": float(total[pc]),
+                         "nf": bool(total[pc] * FMAP.geometry.bits_per_pc
+                                    < 1.0)})
+    total = FMAP.pc_total_rate(0.92)
+    med = float(np.median(total))
+    hot = [total[pc] for pc in (4, 5, 18, 19, 20)]
+    assert np.mean(hot) > 3 * med                       # C8
+    r01, r10 = FM.rates(0.90)
+    assert abs(float(r01) / float(r10) - 1.21) < 0.03   # C6
+    assert float(FM.rate_10(0.97)) > 0                  # C4 onsets
+    assert float(FM.rate_01(0.97)) < float(FM.rate_10(0.97)) * 1e-3
+    assert float(FM.rate_01(0.96)) > 0
+    return rows
+
+
+def fig6_tradeoff():
+    """Fig. 6: usable PCs vs voltage per tolerable fault rate, plus the
+    section III-C worked examples (C11)."""
+    solver = TradeoffSolver(FMAP)
+    rates = [0.0, 1e-8, 1e-6, 1e-4, 1e-2]
+    grid = voltage_grid()
+    matrix = solver.fig6_matrix(rates, grid)
+    rows = [{"fig": "fig6", "tolerable_rate": t, "voltage": float(v),
+             "usable_pcs": n}
+            for t in rates for v, n in zip(grid, matrix[t])]
+    # worked examples
+    p = solver.solve(VCU128.total_bytes, 0.0)
+    assert abs(p.voltage - 0.98) < 1e-6 and abs(p.savings - 1.5) < 0.01
+    p7 = solver.solve(7 * VCU128.bytes_per_pc, 0.0)
+    assert p7.savings >= 1.55                            # ~1.6x at 0.95V
+    ph = solver.solve(VCU128.total_bytes // 2, 1e-6)
+    assert abs(ph.voltage - 0.90) < 0.015
+    assert abs(ph.savings - 1.8) < 0.1
+    rows.append({"fig": "fig6_examples",
+                 "full_zero_fault_x": p.savings,
+                 "seven_pc_x": p7.savings,
+                 "half_cap_1e6_x": ph.savings})
+    return rows
+
+
+def guardband_table():
+    """Headline table: guardband fraction + region boundaries."""
+    assert abs(FM.guardband_fraction() - 0.19) < 0.005
+    return [{"fig": "guardband", "v_nom": V_NOM, "v_min": V_MIN,
+             "v_critical": V_CRITICAL,
+             "guardband_frac": FM.guardband_fraction()}]
+
+
+ALL = {
+    "fig2_power": fig2_power,
+    "fig3_capacitance": fig3_capacitance,
+    "fig4_faultrate": fig4_faultrate,
+    "fig5_pcmap": fig5_pcmap,
+    "fig6_tradeoff": fig6_tradeoff,
+    "guardband_table": guardband_table,
+}

@@ -1,0 +1,39 @@
+"""Roofline table: renders results/dryrun.json (produced by
+``python -m repro.launch.dryrun``) into the §Roofline rows."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def run(path: str = "results/dryrun.json"):
+    if not os.path.exists(path):
+        return [{"name": "roofline", "us_per_call": 0,
+                 "derived": "results/dryrun.json missing - run "
+                            "`python -m repro.launch.dryrun` first"}]
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for key, r in sorted(results.items()):
+        if r.get("status") == "skipped":
+            rows.append({"cell": key, "status": "skipped",
+                         "reason": r.get("reason", "")[:80]})
+            continue
+        if r.get("status") != "ok":
+            rows.append({"cell": key, "status": r.get("status"),
+                         "error": r.get("error", "")[:120]})
+            continue
+        if r["mesh"] != "single":
+            continue          # the roofline table is single-pod only
+        rows.append({
+            "cell": key,
+            "compute_s": round(r["compute_s"], 4),
+            "memory_s": round(r["memory_s"], 4),
+            "collective_s": round(r["collective_s"], 4),
+            "bottleneck": r["bottleneck"],
+            "useful_ratio": round(r["useful_ratio"], 3),
+            "peak_gib": round(r["memory_gb"]["peak"], 2),
+            "energy_098V": r["energy_savings"]["guardband_0.98V_x"],
+            "energy_085V": r["energy_savings"]["deep_0.85V_x"],
+        })
+    return rows

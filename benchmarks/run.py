@@ -1,0 +1,45 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows and writes the full
+structured results to results/benchmarks.json.  Paper anchors are
+asserted inside each figure benchmark -- a calibration regression
+fails the run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, paper_figs, roofline_table
+
+    all_rows = {}
+    print("name,us_per_call,derived")
+    for name, fn in paper_figs.ALL.items():
+        t0 = time.perf_counter()
+        rows = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        all_rows[name] = rows
+        print(f"{name},{us:.0f},rows={len(rows)};anchors=pass")
+
+    rows = kernel_bench.run()
+    all_rows["kernel_bench"] = rows
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
+
+    rows = roofline_table.run()
+    all_rows["roofline"] = rows
+    n_ok = sum(1 for r in rows if "bottleneck" in r)
+    n_skip = sum(1 for r in rows if r.get("status") == "skipped")
+    print(f"roofline_table,0,cells_ok={n_ok};skipped={n_skip}")
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+    print("# wrote results/benchmarks.json")
+
+
+if __name__ == "__main__":
+    main()

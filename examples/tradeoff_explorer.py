@@ -1,0 +1,38 @@
+"""Interactive-style exploration of the paper's three-factor trade-off:
+given a capacity requirement and a tolerable fault rate, print the
+optimal operating point and the Fig. 6 frontier.
+
+  PYTHONPATH=src python examples/tradeoff_explorer.py [cap_gb] [rate]
+"""
+import sys
+
+from repro.core.faultmap import PAPER_MAP_SEED, FaultMap
+from repro.core.hbm import VCU128
+from repro.core.tradeoff import TradeoffSolver, voltage_grid
+
+
+def main():
+    cap_gb = float(sys.argv[1]) if len(sys.argv) > 1 else 4.0
+    rate = float(sys.argv[2]) if len(sys.argv) > 2 else 1e-6
+    fmap = FaultMap.from_seed(VCU128, seed=PAPER_MAP_SEED)
+    solver = TradeoffSolver(fmap)
+
+    p = solver.solve(int(cap_gb * 2**30), rate)
+    print(f"requirement: {cap_gb} GB at fault rate <= {rate:g}")
+    print(f"  -> run HBM at {p.voltage:.2f} V on {len(p.pc_ids)} PCs")
+    print(f"     power savings {p.savings:.2f}x, worst PC rate "
+          f"{p.worst_pc_rate:.2e}")
+
+    print("\nFig. 6 frontier (usable PCs):")
+    rates = [0.0, 1e-8, 1e-6, 1e-4]
+    grid = [v for v in voltage_grid() if round(v * 100) % 2 == 0]
+    m = solver.fig6_matrix(rates, grid)
+    hdr = "   V   " + "".join(f"  tol={r:g}" for r in rates)
+    print(hdr)
+    for i, v in enumerate(grid):
+        print(f"  {v:.2f} " + "".join(
+            f"  {m[r][i]:7d}" for r in rates))
+
+
+if __name__ == "__main__":
+    main()

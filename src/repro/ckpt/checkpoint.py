@@ -1,0 +1,145 @@
+"""Atomic checkpoint/restore with async writing and elastic reshard.
+
+Format: one ``step_<N>.npz`` per checkpoint (leaves keyed by pytree
+keystr) + ``step_<N>.json`` metadata, written to a temp name and
+atomically renamed -- a torn write can never shadow a good checkpoint.
+Restore maps leaves back into a caller-provided template, casting to the
+template's dtypes, so a checkpoint taken on one mesh restores onto any
+other mesh/device count (elastic restart: the arrays are host numpy and
+get resharded by the next jit invocation).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+# numpy's npz format can't round-trip ml_dtypes (bfloat16, fp8); store
+# them as same-width uint views with the dtype encoded in the key.
+_VIEW_BITS = {2: np.uint16, 1: np.uint8, 4: np.uint32}
+
+
+def _encode(k: str, v: np.ndarray):
+    if v.dtype.kind == "V" or v.dtype.name not in np.sctypeDict:
+        view = _VIEW_BITS[v.dtype.itemsize]
+        return f"{k}@{v.dtype.name}", v.view(view)
+    return k, v
+
+
+def _decode(k: str, v: np.ndarray):
+    if "@" in k:
+        import ml_dtypes
+        k, name = k.rsplit("@", 1)
+        return k, v.view(np.dtype(getattr(ml_dtypes, name)))
+    return k, v
+
+
+def _flatten(state) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(state)
+    return {jax.tree_util.keystr(path): np.asarray(leaf)
+            for path, leaf in flat}
+
+
+def save(directory: str, step: int, state: Any,
+         metadata: Optional[Dict[str, Any]] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    leaves = dict(_encode(k, v) for k, v in _flatten(state).items())
+    final = os.path.join(directory, f"step_{step:08d}.npz")
+    tmp = final + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **leaves)
+    os.replace(tmp, final)                      # atomic
+    meta = {"step": step, **(metadata or {})}
+    mtmp = final.replace(".npz", ".json") + ".tmp"
+    with open(mtmp, "w") as f:
+        json.dump(meta, f)
+    os.replace(mtmp, final.replace(".npz", ".json"))
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(f[len("step_"):-len(".npz")])
+             for f in os.listdir(directory)
+             if f.startswith("step_") and f.endswith(".npz")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, template: Any,
+            step: Optional[int] = None) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into ``template``'s structure/dtypes (elastic-safe)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        stored = dict(_decode(k, data[k]) for k in data.files)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, leaf in flat:
+            key = jax.tree_util.keystr(p)
+            want = (leaf.dtype if hasattr(leaf, "dtype")
+                    else np.asarray(leaf).dtype)
+            leaves.append(stored[key].astype(want))
+        state = jax.tree_util.tree_unflatten(treedef, leaves)
+    with open(path.replace(".npz", ".json")) as f:
+        meta = json.load(f)
+    return state, meta
+
+
+class AsyncCheckpointer:
+    """Background-thread writer: training never blocks on I/O."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue()
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+        self._errors: list = []
+
+    def submit(self, step: int, state: Any,
+               metadata: Optional[Dict[str, Any]] = None) -> None:
+        # materialize on host before queuing so the device arrays are
+        # free to be donated/overwritten by the next step
+        host_state = jax.tree_util.tree_map(np.asarray, state)
+        self._q.put((step, host_state, metadata))
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, state, metadata = item
+            try:
+                save(self.directory, step, state, metadata)
+                self._gc()
+            except Exception as e:          # noqa: BLE001
+                self._errors.append(e)
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(f[len("step_"):-len(".npz")])
+            for f in os.listdir(self.directory)
+            if f.startswith("step_") and f.endswith(".npz"))
+        for s in steps[: -self.keep]:
+            for ext in (".npz", ".json"):
+                try:
+                    os.remove(os.path.join(self.directory,
+                                           f"step_{s:08d}{ext}"))
+                except OSError:
+                    pass
+
+    def finalize(self) -> None:
+        self._q.put(None)
+        self._worker.join(timeout=120)
+        if self._errors:
+            raise self._errors[0]

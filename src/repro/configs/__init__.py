@@ -1,0 +1,12 @@
+"""Assigned-architecture configs.  Importing this package registers all
+architectures with the model registry (``--arch <id>`` in the launcher)."""
+from repro.configs import (gemma3_4b, yi_34b, llama3_2_3b, llama3_8b,  # noqa
+                           recurrentgemma_9b, deepseek_v2_lite_16b,
+                           deepseek_v2_236b, xlstm_350m, internvl2_2b,
+                           whisper_large_v3, paper)
+
+ALL_ARCHS = (
+    "gemma3-4b", "yi-34b", "llama3.2-3b", "llama3-8b", "recurrentgemma-9b",
+    "deepseek-v2-lite-16b", "deepseek-v2-236b", "xlstm-350m",
+    "internvl2-2b", "whisper-large-v3",
+)

@@ -1,0 +1,29 @@
+"""recurrentgemma-9b [hybrid]: 38L d_model=4096 16H (MQA kv=1)
+d_ff=12288 vocab=256000 -- RG-LRU + local attention, 1 attn : 2 rec.
+[arXiv:2402.19427; unverified]"""
+import dataclasses
+
+from repro.models import base, rglru
+
+CFG = base.ArchConfig(
+    arch_id="recurrentgemma-9b", family="hybrid", n_layers=38,
+    d_model=4096, n_heads=16, n_kv_heads=1, head_dim=256, d_ff=12288,
+    vocab=256000, pattern=("rec", "rec", "local"), window=2048,
+    lru_width=4096, conv_width=4,
+)
+
+REDUCED = dataclasses.replace(
+    CFG, n_layers=5, d_model=48, n_heads=4, n_kv_heads=1, head_dim=12,
+    d_ff=96, vocab=251, window=8, lru_width=48)
+
+
+def bundle() -> base.ArchBundle:
+    return base.ArchBundle(
+        cfg=CFG, module=rglru, reduced=REDUCED,
+        # constant-size recurrent state + 2048-window attention
+        # => long_500k RUNS (the cell this family exists for).
+        skip_cells=(),
+    )
+
+
+base.register("recurrentgemma-9b", bundle)

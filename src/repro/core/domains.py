@@ -1,0 +1,169 @@
+"""Memory domains and physical placement.
+
+The paper's central systems observation is that HBM pseudo-channels are
+*independently controllable*, so an application can trade capacity for
+power by keeping only reliable-enough PCs at a reduced voltage (Fig. 6).
+This module operationalizes that:
+
+  * A :class:`MemoryDomain` is a named (voltage, PC subset, ECC flag)
+    region -- e.g. ``SAFE`` at 0.98 V holding optimizer state, ``CHEAP``
+    at 0.91 V holding fault-tolerant KV cache.
+  * A :class:`DomainAllocator` bump-allocates tensor groups into the
+    domain's PCs at DRAM-row granularity, producing physical segments;
+    the fault-injection kernel consumes physical word addresses so stuck
+    bits are stable properties of locations, not tensors.
+
+Placement works on avals (ShapeDtypeStruct) as well as concrete arrays,
+so capacity planning for full-scale models never allocates memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+
+from repro.core.faultmodel import V_CRITICAL, V_NOM
+from repro.core.hbm import HBMGeometry
+
+# Allocation alignment: the injection kernel processes 4096-word blocks,
+# so placements are aligned to 16 KiB to keep padded tails from aliasing.
+ALIGN_WORDS = 4096
+
+
+class DeviceCrashError(RuntimeError):
+    """Raised when a domain is driven below V_critical: the paper observes
+    the part stops responding and needs a power cycle (section III-B)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryDomain:
+    """A voltage/PC-subset region of one device's HBM."""
+
+    name: str
+    voltage: float
+    pc_ids: Tuple[int, ...]
+    ecc: bool = False
+
+    def validate(self, geometry: HBMGeometry) -> None:
+        if not self.pc_ids:
+            raise ValueError(f"domain {self.name!r} has no PCs")
+        if len(set(self.pc_ids)) != len(self.pc_ids):
+            raise ValueError(f"domain {self.name!r} repeats PCs")
+        for pc in self.pc_ids:
+            if not 0 <= pc < geometry.num_pcs:
+                raise ValueError(f"domain {self.name!r}: pc {pc} out of range")
+        if self.voltage > V_NOM + 1e-9:
+            raise ValueError(f"domain {self.name!r}: overvolting not modeled")
+        if self.voltage < V_CRITICAL - 1e-9:
+            raise DeviceCrashError(
+                f"domain {self.name!r} at {self.voltage:.2f} V is below "
+                f"V_critical={V_CRITICAL} V: HBM stops responding and "
+                "requires a power cycle")
+
+    def capacity_bytes(self, geometry: HBMGeometry) -> int:
+        return len(self.pc_ids) * geometry.bytes_per_pc
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A contiguous physical run backing part of one leaf."""
+
+    leaf_start_word: int   # offset within the flattened leaf (u32 words)
+    n_words: int
+    pc: int
+    phys_base_word: int    # global physical word address
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlacement:
+    path: str
+    n_words: int
+    segments: Tuple[Segment, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlacement:
+    group: str
+    domain: MemoryDomain
+    leaves: Tuple[LeafPlacement, ...]
+
+    @property
+    def total_words(self) -> int:
+        return sum(l.n_words for l in self.leaves)
+
+
+def _leaf_words(leaf) -> int:
+    size = 1
+    for d in leaf.shape:
+        size *= d
+    nbytes = size * jax.numpy.dtype(leaf.dtype).itemsize
+    return (nbytes + 3) // 4
+
+
+class DomainAllocator:
+    """Bump allocator over the concatenated extents of a domain's PCs."""
+
+    def __init__(self, geometry: HBMGeometry, domain: MemoryDomain):
+        domain.validate(geometry)
+        self.geometry = geometry
+        self.domain = domain
+        self.words_per_pc = geometry.bytes_per_pc // 4
+        self.capacity_words = len(domain.pc_ids) * self.words_per_pc
+        self.cursor = 0
+
+    @property
+    def free_words(self) -> int:
+        return self.capacity_words - self.cursor
+
+    def alloc(self, n_words: int) -> Tuple[Segment, ...]:
+        aligned = -(-n_words // ALIGN_WORDS) * ALIGN_WORDS
+        if aligned > self.free_words:
+            raise MemoryError(
+                f"domain {self.domain.name!r} out of capacity: need "
+                f"{aligned * 4} B, free {self.free_words * 4} B "
+                f"({len(self.domain.pc_ids)} PCs x "
+                f"{self.geometry.bytes_per_pc} B)")
+        segments: List[Segment] = []
+        leaf_off, remaining = 0, n_words
+        while remaining > 0:
+            pc_slot = self.cursor // self.words_per_pc
+            in_pc = self.cursor % self.words_per_pc
+            pc = self.domain.pc_ids[pc_slot]
+            take = min(remaining, self.words_per_pc - in_pc)
+            segments.append(Segment(
+                leaf_start_word=leaf_off, n_words=take, pc=pc,
+                phys_base_word=pc * self.words_per_pc + in_pc))
+            self.cursor += take
+            leaf_off += take
+            remaining -= take
+        # advance to the next aligned slot
+        self.cursor = min(self.capacity_words,
+                          -(-self.cursor // ALIGN_WORDS) * ALIGN_WORDS)
+        return tuple(segments)
+
+
+def place_groups(
+    groups: Dict[str, object],           # group name -> pytree (arrays/avals)
+    policy: Dict[str, str],              # group name -> domain name
+    domains: Dict[str, MemoryDomain],
+    geometry: HBMGeometry,
+) -> Dict[str, GroupPlacement]:
+    """Assign every leaf of every group a physical placement."""
+    allocators = {name: DomainAllocator(geometry, d)
+                  for name, d in domains.items()}
+    out: Dict[str, GroupPlacement] = {}
+    for group_name in sorted(groups):
+        domain_name = policy[group_name]
+        alloc = allocators[domain_name]
+        leaves, paths = [], jax.tree_util.tree_flatten_with_path(
+            groups[group_name])[0]
+        for path, leaf in sorted(paths, key=lambda kv: jax.tree_util.keystr(kv[0])):
+            n_words = _leaf_words(leaf)
+            leaves.append(LeafPlacement(
+                path=jax.tree_util.keystr(path), n_words=n_words,
+                segments=alloc.alloc(n_words)))
+        out[group_name] = GroupPlacement(
+            group=group_name, domain=domains[domain_name],
+            leaves=tuple(leaves))
+    return out

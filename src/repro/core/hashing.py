@@ -1,0 +1,67 @@
+"""Counter-based integer hashing shared by the fault-injection paths.
+
+Stuck-at faults are a property of *physical bit locations*: the same bit
+must be stuck across steps, and the fault set at voltage v' < v must be a
+superset of the one at v (lower voltage strictly removes timing margin).
+We get both properties by assigning every location a deterministic uniform
+value u = hash(seed, location) and declaring it stuck iff u < q(v), with
+q monotone in v.  The hash is a murmur3-style finalizer -- cheap enough to
+run per word inside the Pallas kernel, and bit-exact between the kernel
+and the pure-jnp reference.
+
+Seeds and stream ids are always Python ints (folded at trace time); only
+the counter is a traced uint32 array, so nothing here captures array
+constants inside a Pallas kernel body.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# Distinct stream constants so each use-site draws independent values.
+STREAM_WORD_01 = 0x9E3779B1   # word-level stuck-at-1 draw
+STREAM_WORD_10 = 0x85EBCA77   # word-level stuck-at-0 draw
+STREAM_BITPOS_01 = 0xC2B2AE3D
+STREAM_BITPOS_10 = 0x27D4EB2F
+STREAM_ROW = 0x165667B1       # weak-row selection
+STREAM_BITPLANE = 0xD3A2646C  # bitwise-path plane seeds
+
+_M1 = 0x7FEB352D
+_M2 = 0x846CA68B
+_MASK = 0xFFFFFFFF
+
+
+def mix32(x):
+    """Murmur3/splitmix-style 32-bit finalizer on a traced uint32 array."""
+    x = x ^ (x >> np.uint32(16))
+    x = x * np.uint32(_M1)
+    x = x ^ (x >> np.uint32(15))
+    x = x * np.uint32(_M2)
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def mix32_int(x: int) -> int:
+    """Pure-Python mix32 for trace-time seed folding."""
+    x &= _MASK
+    x ^= x >> 16
+    x = (x * _M1) & _MASK
+    x ^= x >> 15
+    x = (x * _M2) & _MASK
+    x ^= x >> 16
+    return x
+
+
+def hash_stream(seed: int, stream: int, counter):
+    """Deterministic uniform uint32 per (seed, stream, counter).
+
+    ``seed``/``stream`` are Python ints (compile-time); ``counter`` is a
+    traced uint32 array.
+    """
+    inner = np.uint32(mix32_int(int(seed) ^ int(stream)))
+    return mix32(counter ^ inner)
+
+
+def rate_to_u32_threshold(rate: float) -> int:
+    """Probability in [0,1] -> uint32 compare threshold (u < t <=> hit)."""
+    rate = min(1.0, max(0.0, float(rate)))
+    return min(0xFFFFFFFF, int(np.floor(rate * 4294967296.0)))

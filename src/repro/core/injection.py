@@ -1,0 +1,93 @@
+"""Pytree-level fault injection driven by a placement + fault map.
+
+This is the bridge between the paper's physical model and the training /
+serving loops: every step, each tensor group living in an unsafe memory
+domain is passed through the bitflip kernel segment-by-segment with its
+own pseudo-channel's calibrated thresholds.  ECC domains route through
+the fused ECC kernel instead (single-bit errors corrected, multi-bit
+errors kept and counted).
+
+Everything here is trace-friendly: the segment structure is static, so
+the per-leaf Python loops unroll inside jit.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.domains import GroupPlacement
+from repro.core.faultmap import FaultMap
+from repro.core.faultmodel import V_MIN
+from repro.kernels.bitflip import ops as bitflip_ops
+from repro.kernels.ecc import ops as ecc_ops
+
+
+def inject_leaf(x: jax.Array, placement, faultmap: FaultMap, voltage: float,
+                *, ecc: bool = False, method: str = "auto",
+                interpret=None, use_ref: bool = False):
+    """Apply the domain's stuck-at faults to one tensor.
+
+    Returns (faulted tensor, uncorrectable-fault count) -- the count is
+    zero unless ``ecc`` is set (without ECC nothing is even detected).
+    """
+    u32, meta = bitflip_ops._to_u32(x)
+    pieces = []
+    uncorrectable = jnp.zeros((), jnp.int32)
+    for seg in placement.segments:
+        chunk = u32[seg.leaf_start_word:seg.leaf_start_word + seg.n_words]
+        thr = faultmap.thresholds(voltage, seg.pc)
+        if ecc:
+            out, bad = ecc_ops.inject_and_correct_u32(
+                chunk, thresholds=thr, seed=faultmap.seed,
+                base_word=seg.phys_base_word, interpret=interpret,
+                use_ref=use_ref)
+            uncorrectable = uncorrectable + bad
+        else:
+            out = bitflip_ops.inject_u32(
+                chunk, thresholds=thr, seed=faultmap.seed,
+                base_word=seg.phys_base_word, method=method,
+                interpret=interpret, use_ref=use_ref)
+        pieces.append(out)
+    faulted = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces)
+    return bitflip_ops._from_u32(faulted, meta), uncorrectable
+
+
+def inject_group(tree, placement: GroupPlacement, faultmap: FaultMap,
+                 *, method: str = "auto", interpret=None,
+                 use_ref: bool = False):
+    """Apply the domain's faults to a whole tensor group.
+
+    Returns (faulted tree, total uncorrectable count).  A no-op (identity,
+    zero count) when the domain sits in the guardband -- the paper finds
+    zero faults at or above V_min = 0.98 V, and we hard-gate that.
+    """
+    domain = placement.domain
+    if domain.voltage >= V_MIN - 1e-9:
+        return tree, jnp.zeros((), jnp.int32)
+
+    by_path: Dict[str, object] = {l.path: l for l in placement.leaves}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out_leaves = []
+    total_bad = jnp.zeros((), jnp.int32)
+    for path, leaf in flat:
+        lp = by_path[jax.tree_util.keystr(path)]
+        faulted, bad = inject_leaf(
+            leaf, lp, faultmap, domain.voltage, ecc=domain.ecc,
+            method=method, interpret=interpret, use_ref=use_ref)
+        out_leaves.append(faulted)
+        total_bad = total_bad + bad
+    return (jax.tree_util.tree_unflatten(
+        treedef, out_leaves), total_bad)
+
+
+def clamp_nonfinite(tree, replacement: float = 0.0):
+    """Optional mitigation: bit flips in exponent bits create Inf/NaN;
+    fault-tolerant consumers can clamp them (EDEN-style preprocessing)."""
+    def fix(x):
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            return x
+        return jnp.where(jnp.isfinite(x), x,
+                         jnp.asarray(replacement, x.dtype))
+    return jax.tree_util.tree_map(fix, tree)

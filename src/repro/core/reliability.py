@@ -1,0 +1,95 @@
+"""Algorithm 1 of the paper: reliability assessment via sequential access.
+
+Writes a data pattern (all-1s or all-0s) through a pseudo-channel's
+address space, reads it back under the undervolt fault model, and counts
+mismatched bits.  The physical HBM is simulated (CPU-only container), but
+the tester itself is the paper's exact procedure -- including the voltage
+sweep from V_nom to V_critical in 10 mV steps, the per-PC scope, and the
+batch repetition (our stuck-at faults are deterministic per map seed, so
+batches validate consistency; an optional transient rate models run-to-
+run noise).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing as H
+from repro.core.faultmap import FaultMap
+from repro.core.tradeoff import voltage_grid
+from repro.kernels.bitflip import ops as bitflip_ops
+
+ALL_ONES = 0xFFFFFFFF
+ALL_ZEROS = 0x00000000
+
+STREAM_TRANSIENT = 0x68E31DA4
+
+
+@dataclasses.dataclass(frozen=True)
+class TestResult:
+    voltage: float
+    pc: int
+    pattern: int
+    mem_words: int
+    fault_counts: tuple  # one entry per batch
+
+
+def _count_flips(written: jax.Array, read: jax.Array) -> int:
+    return int(jnp.sum(jax.lax.population_count(written ^ read)))
+
+
+def run_pc_test(faultmap: FaultMap, voltage: float, pc: int, *,
+                mem_words: int, pattern: int = ALL_ZEROS,
+                batch_size: int = 1, method: str = "bitwise",
+                transient_rate: float = 0.0, seed: int = 0,
+                use_ref: bool = False) -> TestResult:
+    """Algorithm 1 on one pseudo-channel (scaled-down memSize)."""
+    thr = faultmap.thresholds(voltage, pc)
+    base = pc * (faultmap.geometry.bytes_per_pc // 4)
+    written = jnp.full((mem_words,), np.uint32(pattern), jnp.uint32)
+    counts: List[int] = []
+    for b in range(batch_size):
+        read = bitflip_ops.inject_u32(
+            written, thresholds=thr, seed=faultmap.seed, base_word=base,
+            method=method, use_ref=use_ref)
+        if transient_rate > 0.0:
+            # Per-batch transient upsets on top of the stuck-at faults.
+            q = np.uint32(H.rate_to_u32_threshold(
+                min(1.0, 32.0 * transient_rate)))
+            wid = jnp.arange(mem_words, dtype=jnp.uint32) + np.uint32(base)
+            u = H.hash_stream(seed + b + 1, STREAM_TRANSIENT, wid)
+            pos = H.hash_stream(seed ^ 0x5bd1e995, STREAM_TRANSIENT,
+                                wid) & np.uint32(31)
+            flip = jnp.where(u < q, np.uint32(1) << pos, np.uint32(0))
+            read = read ^ flip
+        counts.append(_count_flips(written, read))
+    return TestResult(voltage=float(voltage), pc=pc, pattern=pattern,
+                      mem_words=mem_words, fault_counts=tuple(counts))
+
+
+def sweep(faultmap: FaultMap, *, pcs: Sequence[int], mem_words: int,
+          patterns: Sequence[int] = (ALL_ZEROS, ALL_ONES),
+          v_grid: Optional[Sequence[float]] = None,
+          batch_size: int = 1, method: str = "bitwise",
+          use_ref: bool = False) -> Dict[float, List[TestResult]]:
+    """The paper's full sweep: V_nom -> V_critical, 10 mV steps."""
+    grid = list(v_grid if v_grid is not None else voltage_grid())
+    out: Dict[float, List[TestResult]] = {}
+    for v in grid:
+        out[float(v)] = [
+            run_pc_test(faultmap, float(v), pc, mem_words=mem_words,
+                        pattern=p, batch_size=batch_size, method=method,
+                        use_ref=use_ref)
+            for pc in pcs for p in patterns
+        ]
+    return out
+
+
+def observed_rate(result: TestResult) -> float:
+    """Observed per-bit flip rate for one test."""
+    mean = float(np.mean(result.fault_counts))
+    return mean / (result.mem_words * 32)

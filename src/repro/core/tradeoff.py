@@ -1,0 +1,112 @@
+"""The paper's three-factor trade-off: power x capacity x fault rate.
+
+Section III-C: because pseudo-channels are independently controllable, an
+application that tolerates fault rate T and needs capacity C can pick the
+deepest voltage at which enough sufficiently-reliable PCs remain.  The
+paper's worked examples (all re-asserted in benchmarks/fig6_tradeoff.py):
+
+  * zero faults + full 8 GB      -> guardband only: 1.5x at 0.98 V
+  * zero faults + 7 PCs          -> 1.6x at 0.95 V
+  * 1e-6 rate  + half capacity   -> ~1.8x at 0.90 V
+  * "2.3x savings is possible by sacrificing some memory space while the
+     remaining memory space can work with 0% to 50% fault rate" (0.85 V)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.faultmap import FaultMap
+from repro.core.faultmodel import V_CRITICAL, V_NOM
+from repro.core.voltage import DEFAULT_POWER_MODEL, PowerModel
+
+
+def voltage_grid(v_hi: float = V_NOM, v_lo: float = V_CRITICAL,
+                 step: float = 0.01) -> np.ndarray:
+    """The paper's sweep: V_nom down to V_critical in 10 mV steps."""
+    n = int(round((v_hi - v_lo) / step))
+    return np.round(v_hi - step * np.arange(n + 1), 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class TradeoffPoint:
+    voltage: float
+    savings: float                 # power factor vs nominal, same util
+    pc_ids: Tuple[int, ...]        # PCs kept powered/used
+    capacity_bytes: int
+    worst_pc_rate: float           # max stuck-cell rate among kept PCs
+    mean_pc_rate: float
+
+
+class TradeoffSolver:
+    """Searches the (voltage, PC-subset) space for maximum power savings
+    subject to capacity and tolerable-fault-rate constraints."""
+
+    def __init__(self, faultmap: FaultMap,
+                 power_model: PowerModel = DEFAULT_POWER_MODEL):
+        self.faultmap = faultmap
+        self.power = power_model
+        self.geometry = faultmap.geometry
+
+    def point(self, v: float, tolerable_rate: float,
+              required_bytes: int) -> Optional[TradeoffPoint]:
+        """Best PC subset at a fixed voltage, or None if infeasible."""
+        usable = self.faultmap.usable_pcs(v, tolerable_rate)
+        need = -(-required_bytes // self.geometry.bytes_per_pc)
+        if len(usable) < need or need == 0 and required_bytes > 0:
+            return None
+        keep = usable[:max(need, 1)] if required_bytes > 0 else usable
+        rates = self.faultmap.pc_total_rate(v)[keep]
+        return TradeoffPoint(
+            voltage=float(v),
+            savings=float(self.power.savings(v)),
+            pc_ids=tuple(int(p) for p in keep),
+            capacity_bytes=int(len(keep) * self.geometry.bytes_per_pc),
+            worst_pc_rate=float(rates.max()),
+            mean_pc_rate=float(rates.mean()),
+        )
+
+    def solve(self, required_bytes: int, tolerable_rate: float,
+              v_grid: Optional[Sequence[float]] = None) -> TradeoffPoint:
+        """Deepest feasible voltage == maximum power savings (power is
+        monotone in V, so scan low-to-high and return the first fit)."""
+        grid = np.asarray(v_grid if v_grid is not None else voltage_grid())
+        for v in np.sort(grid):          # lowest voltage first
+            p = self.point(float(v), tolerable_rate, required_bytes)
+            if p is not None:
+                return p
+        raise ValueError(
+            f"no feasible operating point: capacity {required_bytes} B, "
+            f"tolerable rate {tolerable_rate}")
+
+    def fig6_matrix(self, tolerable_rates: Sequence[float],
+                    v_grid: Optional[Sequence[float]] = None,
+                    ) -> Dict[float, List[int]]:
+        """Fig. 6: usable PC count per (tolerable rate, voltage)."""
+        grid = list(v_grid if v_grid is not None else voltage_grid())
+        return {
+            float(t): [self.faultmap.num_usable_pcs(float(v), float(t))
+                       for v in grid]
+            for t in tolerable_rates
+        }
+
+    def pareto(self, tolerable_rate: float,
+               v_grid: Optional[Sequence[float]] = None,
+               ) -> List[TradeoffPoint]:
+        """Capacity-vs-power frontier at one tolerable rate."""
+        grid = np.asarray(v_grid if v_grid is not None else voltage_grid())
+        pts = []
+        for v in np.sort(grid)[::-1]:    # nominal first
+            usable = self.faultmap.usable_pcs(float(v), tolerable_rate)
+            if len(usable) == 0:
+                continue
+            rates = self.faultmap.pc_total_rate(float(v))[usable]
+            pts.append(TradeoffPoint(
+                voltage=float(v), savings=float(self.power.savings(v)),
+                pc_ids=tuple(int(p) for p in usable),
+                capacity_bytes=int(len(usable) * self.geometry.bytes_per_pc),
+                worst_pc_rate=float(rates.max()),
+                mean_pc_rate=float(rates.mean())))
+        return pts

@@ -1,0 +1,1 @@
+from repro.kernels.bitflip.ops import inject, inject_u32  # noqa: F401

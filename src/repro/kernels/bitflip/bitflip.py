@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: stuck-at fault injection for undervolted HBM.
+
+This is the framework's perf-critical hot path: every tensor group placed
+in an unsafe memory domain is passed through this kernel each step, so it
+must stream at HBM bandwidth with one read-modify-write.  The kernel is
+tile-parallel over (8, 512)-word VMEM blocks (16 KiB -- MXU/VPU aligned:
+8 sublanes x 512 = 4x128 lanes), computes a counter-based hash per word,
+and ORs/ANDNs the resulting stuck-at masks into the data.
+
+The mask math is shared with :mod:`repro.kernels.bitflip.ref` (pure jnp
+integer ops), so kernel and oracle are bit-exact by construction; the
+tests assert exact equality over shape/dtype/method sweeps in interpret
+mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitflip import ref as _ref
+
+BLOCK_SUBLANES = 8
+BLOCK_LANES = 512
+BLOCK_WORDS = BLOCK_SUBLANES * BLOCK_LANES  # 4096 words = 16 KiB
+
+
+def _kernel(x_ref, o_ref, *, thresholds, seed, base_word, method):
+    x = x_ref[...]
+    # Physical word index of every element in this block.
+    i = pl.program_id(0).astype(jnp.uint32)
+    sub = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 0)
+    lane = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1)
+    wid = (np.uint32(base_word) + i * np.uint32(BLOCK_WORDS)
+           + sub * np.uint32(x.shape[1]) + lane)
+    if method == "word":
+        mask01, mask10 = _ref._word_masks(wid, seed, thresholds)
+    else:
+        mask01, mask10 = _ref._bitwise_masks(wid, seed, thresholds)
+    mask10 = mask10 & ~mask01
+    o_ref[...] = (x | mask01) & ~mask10
+
+
+def bitflip_pallas(data2d: jax.Array, *, thresholds, seed: int,
+                   base_word: int, method: str, interpret: bool):
+    """Apply stuck-at faults to a (M, 512) uint32 array, M % 8 == 0."""
+    m, n = data2d.shape
+    assert n == BLOCK_LANES and m % BLOCK_SUBLANES == 0, (m, n)
+    body = functools.partial(_kernel, thresholds=thresholds, seed=seed,
+                             base_word=base_word, method=method)
+    return pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint32),
+        grid=(m // BLOCK_SUBLANES,),
+        in_specs=[pl.BlockSpec((BLOCK_SUBLANES, BLOCK_LANES),
+                               lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_SUBLANES, BLOCK_LANES),
+                               lambda i: (i, 0)),
+        interpret=interpret,
+    )(data2d)

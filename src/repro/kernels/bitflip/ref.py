@@ -1,0 +1,110 @@
+"""Pure-jnp oracle for the undervolt fault-injection kernel.
+
+Two methods, bit-exact with the Pallas kernel (integer math only):
+
+  * ``word``: fast path for low fault rates.  Each 32-bit word is "hit"
+    with probability min(1, 32 p) and a hit word gets one stuck bit at a
+    hashed position.  Exact to O((32 p)^2) -- used for the training-loop
+    regime (p <= ~1e-3).
+  * ``bitwise``: exact per-bit Bernoulli via 20 bit-sliced random planes
+    (probability resolution 2^-20, so even strong-row rates just above
+    the word-path dispatch boundary stay within ~2% relative error).
+    Used near the collapse voltages where nearly every bit is stuck.
+
+Both derive stuck bits from hash(seed, physical word index), so the fault
+set is persistent across steps and monotone in voltage within a method.
+
+All helpers take ``seed`` as a Python int and use numpy scalar constants
+only, so they can be called from inside the Pallas kernel body without
+capturing array constants.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing as H
+
+_U0 = np.uint32(0)
+_U1 = np.uint32(1)
+_U31 = np.uint32(31)
+_FULL = np.uint32(0xFFFFFFFF)
+
+# Bit-planes in the bitwise path: probability resolution 2**-PLANES.
+PLANES = 20
+
+
+def _word_masks(wid, seed: int, thr):
+    """Stuck-at masks for the word-hit fast path."""
+    row = wid >> np.uint32(thr.words_per_row_log2)
+    weak = H.hash_stream(seed, H.STREAM_ROW, row) < np.uint32(thr.weak_row_q)
+
+    q01 = jnp.where(weak, np.uint32(thr.q01_weak), np.uint32(thr.q01_strong))
+    q10 = jnp.where(weak, np.uint32(thr.q10_weak), np.uint32(thr.q10_strong))
+
+    hit01 = H.hash_stream(seed, H.STREAM_WORD_01, wid) < q01
+    hit10 = H.hash_stream(seed, H.STREAM_WORD_10, wid) < q10
+    pos01 = H.hash_stream(seed, H.STREAM_BITPOS_01, wid) & _U31
+    pos10 = H.hash_stream(seed, H.STREAM_BITPOS_10, wid) & _U31
+
+    mask01 = jnp.where(hit01, _U1 << pos01, _U0)
+    mask10 = jnp.where(hit10, _U1 << pos10, _U0)
+    return mask01, mask10
+
+
+def _plane(seed: int, j: int, direction: int, wid):
+    """Random 32-lane bit plane j for one flip direction."""
+    plane_seed = H.mix32_int(int(seed) ^ (2 * j + direction + 1))
+    return H.hash_stream(plane_seed, H.STREAM_BITPLANE, wid)
+
+
+def _bitwise_lt(planes, t):
+    """Bit-sliced per-lane compare: lane's PLANES-bit uniform < t (vector).
+
+    planes[j] holds bit j of every lane's uniform; t is a per-word uint32
+    holding a PLANES-bit threshold broadcast across its 32 lanes.
+    """
+    lt = jnp.zeros_like(t)
+    eq = jnp.full_like(t, _FULL)
+    for j in range(PLANES - 1, -1, -1):
+        tmask = _U0 - ((t >> np.uint32(j)) & _U1)  # all-ones if bit set
+        b = planes[j]
+        lt = lt | (eq & ~b & tmask)
+        eq = eq & (b ^ ~tmask)
+    return lt
+
+
+def _tq(p: float) -> int:
+    return min(2**PLANES - 1, int(round(p * float(2**PLANES))))
+
+
+def _bitwise_masks(wid, seed: int, thr):
+    """Exact per-bit stuck-at masks (16-bit probability resolution)."""
+    row = wid >> np.uint32(thr.words_per_row_log2)
+    weak = H.hash_stream(seed, H.STREAM_ROW, row) < np.uint32(thr.weak_row_q)
+
+    def thresh(p_weak, p_strong):
+        return jnp.where(weak, np.uint32(_tq(p_weak)),
+                         np.uint32(_tq(p_strong)))
+
+    planes01 = [_plane(seed, j, 0, wid) for j in range(PLANES)]
+    planes10 = [_plane(seed, j, 1, wid) for j in range(PLANES)]
+    mask01 = _bitwise_lt(planes01, thresh(thr.p01_weak, thr.p01_strong))
+    mask10 = _bitwise_lt(planes10, thresh(thr.p10_weak, thr.p10_strong))
+    return mask01, mask10
+
+
+def inject_u32_ref(data_u32, *, thresholds, seed: int, base_word: int,
+                   method: str = "word"):
+    """Apply stuck-at faults to a flat uint32 array (reference)."""
+    data_u32 = jnp.asarray(data_u32, dtype=jnp.uint32)
+    n = data_u32.shape[0]
+    wid = np.uint32(base_word) + jnp.arange(n, dtype=jnp.uint32)
+    if method == "word":
+        mask01, mask10 = _word_masks(wid, seed, thresholds)
+    elif method == "bitwise":
+        mask01, mask10 = _bitwise_masks(wid, seed, thresholds)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    mask10 = mask10 & ~mask01  # a doubly-selected bit sticks at 1
+    return (data_u32 | mask01) & ~mask10

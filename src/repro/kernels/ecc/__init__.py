@@ -1,0 +1,1 @@
+from repro.kernels.ecc.ops import inject_and_correct_u32  # noqa: F401

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused fault-injection + SECDED(72,64) correction.
+
+Fusing the undervolt fault model with the ECC behavioral model keeps the
+mitigation path at one HBM read-modify-write per step -- the same budget
+as unprotected injection (a beyond-paper optimization; the paper treats
+ECC as future mitigation work and cites [57]).
+
+Block layout matches the bitflip kernel: (8, 512) uint32 VMEM tiles,
+grid-parallel over blocks.  Each block additionally reduces its
+uncorrectable-codeword count into a (1, 1) int32 output tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitflip.bitflip import (BLOCK_LANES, BLOCK_SUBLANES,
+                                           BLOCK_WORDS)
+from repro.kernels.ecc import ref as _ref
+
+
+def _kernel(x_ref, o_ref, bad_ref, *, thresholds, seed, base_word):
+    x = x_ref[...]
+    i = pl.program_id(0).astype(jnp.uint32)
+    sub = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 0)
+    lane = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1)
+    wid = (np.uint32(base_word) + i * np.uint32(BLOCK_WORDS)
+           + sub * np.uint32(x.shape[1]) + lane)
+    out, bad = _ref.ecc_codewords(x, wid, seed, thresholds)
+    o_ref[...] = out
+    bad_ref[0, 0] = jnp.sum(bad.astype(jnp.int32))
+
+
+def ecc_pallas(data2d: jax.Array, *, thresholds, seed: int, base_word: int,
+               interpret: bool):
+    """(M, 512) uint32, M % 8 == 0 -> (corrected, per-block bad counts)."""
+    m, n = data2d.shape
+    assert n == BLOCK_LANES and m % BLOCK_SUBLANES == 0, (m, n)
+    grid = (m // BLOCK_SUBLANES,)
+    body = functools.partial(_kernel, thresholds=thresholds, seed=seed,
+                             base_word=base_word)
+    return pl.pallas_call(
+        body,
+        out_shape=(jax.ShapeDtypeStruct((m, n), jnp.uint32),
+                   jax.ShapeDtypeStruct((grid[0], 1), jnp.int32)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_SUBLANES, BLOCK_LANES),
+                               lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((BLOCK_SUBLANES, BLOCK_LANES),
+                                lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))),
+        interpret=interpret,
+    )(data2d)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracle for the fused inject+ECC kernel.
+
+Emulates SECDED(72,64): each 64-bit codeword (two consecutive u32 words)
+carries 8 parity bits.  Under undervolting the parity bits are as
+vulnerable as data bits.  Behavioral emulation (we hold the pre-fault
+data, so no syndrome algebra is needed):
+
+  * 0 faults in the codeword  -> data unchanged
+  * 1 fault (data or parity)  -> corrected, i.e. data restored
+  * >=2 faults                -> uncorrectable: faulted data passes
+                                 through and the event is counted
+
+Word-path injection only: ECC is useful exactly in the low-rate regime
+(p <= ~1e-3); near array collapse every codeword is multi-fault and ECC
+buys nothing (the paper's all-faulty region).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing as H
+from repro.kernels.bitflip.ref import _word_masks
+
+STREAM_PARITY = 0x94D049BB
+
+_U0 = np.uint32(0)
+_U1 = np.uint32(1)
+
+
+def popcount32(v):
+    """SWAR popcount on uint32 lanes (portable into Pallas)."""
+    v = v - ((v >> _U1) & np.uint32(0x55555555))
+    v = (v & np.uint32(0x33333333)) + ((v >> np.uint32(2)) & np.uint32(0x33333333))
+    v = (v + (v >> np.uint32(4))) & np.uint32(0x0F0F0F0F)
+    return (v * np.uint32(0x01010101)) >> np.uint32(24)
+
+
+def parity_q(thr) -> tuple[int, int]:
+    """(weak, strong) word-hit thresholds for the 8 parity bits."""
+    qw = H.rate_to_u32_threshold(min(1.0, 8.0 * (thr.p01_weak + thr.p10_weak)))
+    qs = H.rate_to_u32_threshold(min(1.0, 8.0 * (thr.p01_strong + thr.p10_strong)))
+    return qw, qs
+
+
+def ecc_codewords(data_u32, wid, seed: int, thr):
+    """Returns (corrected_u32, uncorrectable_bool_per_codeword).
+
+    ``data_u32``/``wid`` must have an even number of elements along the
+    last axis (codewords are adjacent word pairs).
+    """
+    mask01, mask10 = _word_masks(wid, seed, thr)
+    mask10 = mask10 & ~mask01
+    faulted = (data_u32 | mask01) & ~mask10
+    fault_bits = faulted ^ data_u32
+
+    shape = data_u32.shape
+    pair = shape[:-1] + (shape[-1] // 2, 2)
+    fb = fault_bits.reshape(pair)
+    counts = popcount32(fb[..., 0]) + popcount32(fb[..., 1])
+
+    # Parity-bit faults: one draw per codeword, weak-row aware.
+    cw_id = wid.reshape(pair)[..., 0] >> _U1
+    row = wid.reshape(pair)[..., 0] >> np.uint32(thr.words_per_row_log2)
+    weak = H.hash_stream(seed, H.STREAM_ROW, row) < np.uint32(thr.weak_row_q)
+    qw, qs = parity_q(thr)
+    q = jnp.where(weak, np.uint32(qw), np.uint32(qs))
+    par_hit = H.hash_stream(seed, STREAM_PARITY, cw_id) < q
+    counts = counts + par_hit.astype(jnp.uint32)
+
+    uncorrectable = counts >= 2
+    keep_faulty = jnp.repeat(uncorrectable[..., None], 2, axis=-1).reshape(shape)
+    out = jnp.where(keep_faulty, faulted, data_u32)
+    return out, uncorrectable
+
+
+def inject_and_correct_u32_ref(data_u32, *, thresholds, seed: int,
+                               base_word: int):
+    data_u32 = jnp.asarray(data_u32, dtype=jnp.uint32)
+    n = data_u32.shape[0]
+    assert n % 2 == 0, "ECC reference needs an even word count"
+    wid = np.uint32(base_word) + jnp.arange(n, dtype=jnp.uint32)
+    out, bad = ecc_codewords(data_u32, wid, seed, thresholds)
+    return out, jnp.sum(bad.astype(jnp.int32))

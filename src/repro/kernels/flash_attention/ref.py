@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel: materialized-softmax
+attention with causal/window masks and GQA, f32 internals."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale=None):
+    """q: (B, H, Sq, D); k, v: (B, K, Sk, D); returns (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    _, kh, sk, _ = k.shape
+    g = h // kh
+    scale = d ** -0.5 if scale is None else scale
+    k_rep = jnp.repeat(k, g, axis=1)
+    v_rep = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   k_rep.astype(jnp.float32))
+    qi = np.arange(sq)[:, None]
+    ki = np.arange(sk)[None, :]
+    delta = qi - ki
+    mask = np.zeros((sq, sk), np.float32)
+    if causal:
+        mask = np.where(delta < 0, NEG_INF, mask)
+    if window > 0:
+        mask = np.where(delta >= window, NEG_INF, mask)
+    s = s + mask
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v_rep.astype(jnp.float32)).astype(v.dtype)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RG-LRU chunked-scan kernel: the seeded linear
+recurrence h_t = a_t * h_{t-1} + b_t via associative scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, bb, h0):
+    """a, bb: (B, S, R) f32; h0: (B, R) f32 -> (h_seq, h_last)."""
+    a = a.astype(jnp.float32)
+    bb = bb.astype(jnp.float32)
+    bb = bb.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(prev, nxt):
+        a1, b1 = prev
+        a2, b2 = nxt
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bb), axis=1)
+    return h, h[:, -1]

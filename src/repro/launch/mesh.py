@@ -1,0 +1,37 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 chips (data x model).
+Multi-pod: 2 x 16 x 16 = 512 chips (pod x data x model); the ``pod``
+axis carries only data parallelism (gradient all-reduce over DCI), the
+in-pod axes are unchanged -- so the multi-pod dry-run proves the pod
+axis shards without touching the in-pod layout.
+
+``make_production_mesh`` is a function (never module-level state): the
+dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512 before
+any jax import, and importing this module must not lock device state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """Mesh axes that carry data parallelism."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_smoke_mesh() -> jax.sharding.Mesh:
+    """1-device mesh with production axis names (CPU tests)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,126 @@
+"""Roofline model: compute / memory / collective terms per cell.
+
+Hardware target: TPU v5e --
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+    compute term    = HLO_FLOPs  / (peak FLOP/s)          [per chip]
+    memory term     = HLO_bytes  / (HBM bandwidth)        [per chip]
+    collective term = coll_bytes / (ICI link bandwidth)   [per chip]
+
+HLO quantities come from the weighted HLO analysis of the compiled
+dry-run artifact (post-SPMD shapes are per-device, so terms are already
+per-chip).  MODEL_FLOPS is the analytic useful compute (6*N*D dense /
+6*N_active*D MoE for training; 2*N*D for inference) -- the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/replication waste.
+
+The paper's power model is integrated here: the memory term over the
+step time gives HBM bandwidth utilization, which feeds P(v, util) -- so
+every roofline row also reports the undervolting energy savings this
+cell would see (1.5x guardband, up to ~2.3x deep undervolt).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.voltage import DEFAULT_POWER_MODEL
+from repro.models.base import SHAPES, get_arch
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+KNOWN_PARAMS: Dict[str, float] = {}
+
+
+def _total_params(arch_id: str) -> float:
+    if arch_id not in KNOWN_PARAMS:
+        from repro.models.base import count_params
+        b = get_arch(arch_id)
+        KNOWN_PARAMS[arch_id] = float(count_params(
+            b.module.param_specs(b.cfg)))
+    return KNOWN_PARAMS[arch_id]
+
+
+def _active_params(arch_id: str) -> float:
+    """Active (per-token) parameters: MoE counts top_k + shared experts."""
+    b = get_arch(arch_id)
+    cfg = b.cfg
+    total = _total_params(arch_id)
+    if cfg.n_experts == 0:
+        return total
+    expert_block = 3 * cfg.d_model * cfg.d_ff        # gate/up/down
+    routed_all = cfg.n_layers * cfg.n_experts * expert_block
+    routed_active = cfg.n_layers * cfg.top_k * expert_block
+    return total - routed_all + routed_active
+
+
+def model_flops(arch_id: str, shape_name: str) -> float:
+    """Analytic useful FLOPs per step (global, all chips)."""
+    shape = SHAPES[shape_name]
+    n_act = _active_params(arch_id)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_global: float
+    useful_ratio: float
+    step_s: float
+    hbm_util: float
+    memory_gb: Dict[str, float]
+    energy_savings: Dict[str, float]
+    collective_breakdown: Optional[Dict[str, float]] = None
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def build_row(arch: str, shape: str, mesh_name: str, chips: int,
+              costs, memory_gb: Dict[str, float]) -> RooflineRow:
+    compute_s = costs.flops / PEAK_FLOPS
+    memory_s = costs.bytes_accessed / HBM_BW
+    collective_s = costs.collective_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(compute_s, memory_s, collective_s)
+    mf = model_flops(arch, shape)
+    useful = mf / max(costs.flops * chips, 1.0)
+    hbm_util = min(1.0, memory_s / max(step_s, 1e-12))
+
+    pm = DEFAULT_POWER_MODEL
+    energy = {
+        "guardband_0.98V_x": round(float(pm.savings(0.98, hbm_util)), 3),
+        "tradeoff_0.91V_x": round(float(pm.savings(0.91, hbm_util)), 3),
+        "deep_0.85V_x": round(float(pm.savings(0.85, hbm_util)), 3),
+    }
+    return RooflineRow(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops_per_chip=costs.flops,
+        hlo_bytes_per_chip=costs.bytes_accessed,
+        collective_bytes_per_chip=costs.collective_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops_global=mf,
+        useful_ratio=useful, step_s=step_s, hbm_util=hbm_util,
+        memory_gb=memory_gb, energy_savings=energy,
+        collective_breakdown={k: round(v, 1) for k, v in
+                              costs.collective_breakdown.items()})

@@ -1,0 +1,124 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style), with
+divisibility checking and ordered fallbacks.
+
+The default table gives: TP over 'model' for heads/ffn/vocab/experts,
+FSDP-style 2D weight sharding ('embed' -> 'data', so every large matrix
+is sharded over both axes and optimizer state is fully distributed --
+ZeRO-3 equivalent under GSPMD), batch over ('pod','data'), and optional
+sequence sharding for batch-1 long-context caches.  A rule that doesn't
+divide the dimension falls back down its candidate list (e.g. internvl2's
+vocab 92553 is not 16-divisible -> replicated embedding rows), so every
+(arch x shape x mesh) cell resolves without hand-tuning -- resolution is
+pure logic over ParamSpecs, unit-tested per arch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.base import ParamSpec
+
+AxisAssign = Union[None, str, Tuple[str, ...]]
+
+# candidate lists, tried in order until one divides the dimension
+DEFAULT_TABLE: Dict[str, Tuple[AxisAssign, ...]] = {
+    "vocab": ("model", None),
+    "embed": ("data", None),          # FSDP 2D weight sharding
+    "heads": ("model", None),
+    "kv": ("model", None),
+    "mlp": ("model", None),
+    "experts": ("model", None),
+    "layers": (None,),
+    "frontend": (None,),
+    "batch": (("pod", "data"), ("data",), None),
+    "cache_seq": (None,),
+    "kv_heads": ("model", None),
+    # kv_heads rarely divides the model axis (GQA); the fused fallback is
+    # sharding the head_dim / MLA latent dim instead (memory first --
+    # the resulting per-layer all-reduce is a §Perf lever).
+    "head_dim": ("model", None),
+    "kv_lora": ("model", None),
+    # attention activations: heads replicated by default (few archs have
+    # model-axis-divisible head counts); hillclimb override shards them.
+    "attn_act_heads": (None,),
+}
+
+LONG_CONTEXT_OVERRIDES: Dict[str, Tuple[AxisAssign, ...]] = {
+    # batch=1: shard the KV/cache sequence instead of the batch
+    "batch": (None,),
+    "cache_seq": ("data", None),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    table: Dict[str, Tuple[AxisAssign, ...]]
+
+    @classmethod
+    def default(cls, long_context: bool = False,
+                overrides: Optional[Dict[str, Tuple[AxisAssign, ...]]] = None,
+                ) -> "ShardingRules":
+        table = dict(DEFAULT_TABLE)
+        if long_context:
+            table.update(LONG_CONTEXT_OVERRIDES)
+        if overrides:
+            table.update(overrides)
+        return cls(table=table)
+
+
+def _axis_size(mesh: jax.sharding.Mesh, assign: AxisAssign) -> int:
+    if assign is None:
+        return 1
+    names = (assign,) if isinstance(assign, str) else assign
+    return int(np.prod([mesh.shape[a] for a in names]))
+
+
+def _names(assign: AxisAssign) -> Tuple[str, ...]:
+    if assign is None:
+        return ()
+    return (assign,) if isinstance(assign, str) else tuple(assign)
+
+
+def resolve_spec(spec: ParamSpec, rules: ShardingRules,
+                 mesh: jax.sharding.Mesh) -> P:
+    """PartitionSpec for one ParamSpec under the rules and mesh."""
+    out = []
+    used: set = set()
+    for dim, logical in zip(spec.shape, spec.axes):
+        chosen: AxisAssign = None
+        if logical is not None:
+            for cand in rules.table.get(logical, (None,)):
+                names = tuple(n for n in _names(cand)
+                              if n in mesh.axis_names and n not in used)
+                if not names:
+                    if cand is None:
+                        chosen = None
+                        break
+                    continue
+                size = int(np.prod([mesh.shape[n] for n in names]))
+                if dim % size == 0:
+                    chosen = names if len(names) > 1 else names[0]
+                    used.update(names)
+                    break
+        out.append(chosen)
+    return P(*out)
+
+
+def tree_shardings(specs, rules: ShardingRules, mesh: jax.sharding.Mesh):
+    """Pytree of NamedShardings mirroring a pytree of ParamSpecs."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, resolve_spec(s, rules, mesh)),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def batch_sharding(mesh: jax.sharding.Mesh, rules: ShardingRules,
+                   ndim: int, batch_dim_divisible: int):
+    """NamedSharding for a batch-leading input array."""
+    spec = ParamSpec(shape=(batch_dim_divisible,) + (1,) * (ndim - 1),
+                     axes=("batch",) + (None,) * (ndim - 1),
+                     dtype=np.int32)
+    return NamedSharding(mesh, resolve_spec(spec, rules, mesh))

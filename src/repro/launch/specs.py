@@ -1,0 +1,183 @@
+"""Per-cell step plans: step function + input avals + shardings.
+
+A *cell* is (architecture x input shape x mesh).  ``build_cell`` returns
+everything ``dryrun.py`` needs to lower AOT: the step callable, its
+argument avals (ShapeDtypeStructs -- nothing is allocated), and matching
+NamedShardings.  The same plans drive real launches: ``train.py`` feeds
+concrete arrays through the identical jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+from repro.launch.sharding import ShardingRules, resolve_spec, tree_shardings
+from repro.models.base import (SHAPES, ArchBundle, ParamSpec, ShapeCell,
+                               get_arch, spec_avals)
+from repro.models.dist import DistContext
+from repro.optim import adamw
+from repro.training import trainer
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch_id: str
+    shape: ShapeCell
+    mesh: jax.sharding.Mesh
+    step_fn: Any
+    in_avals: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    layer_scan_trips: Dict[str, int]     # scan name -> trip count (roofline)
+    microbatches: int = 1
+
+    dist: Any = None
+
+    def lower(self):
+        from repro.models import dist as dist_mod
+        fn = jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                     out_shardings=self.out_shardings,
+                     donate_argnums=self.donate_argnums)
+        with self.mesh, dist_mod.use(self.dist):
+            return fn.lower(*self.in_avals)
+
+
+def _rules_for(shape: ShapeCell,
+               overrides=None) -> ShardingRules:
+    return ShardingRules.default(
+        long_context=(shape.name == "long_500k"), overrides=overrides)
+
+
+def _batch_avals(cfg, shape: ShapeCell, kind: str):
+    b = shape.global_batch
+    if kind == "decode":
+        toks = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    else:
+        s = shape.seq_len
+        if cfg.family == "vlm":
+            s = shape.seq_len - cfg.enc_len   # total context = seq_len
+        toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    out = {"tokens": toks}
+    if cfg.family == "vlm" and kind != "decode":
+        out["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_len, cfg.frontend_dim), jnp.float32)
+    if cfg.family == "audio" and kind != "decode":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_len, cfg.d_model), jnp.float32)
+    return out
+
+
+def _batch_shardings(batch_avals, mesh, rules):
+    def shard_one(a):
+        spec = ParamSpec(shape=a.shape,
+                         axes=("batch",) + (None,) * (a.ndim - 1),
+                         dtype=a.dtype)
+        return NamedSharding(mesh, resolve_spec(spec, rules, mesh))
+    return jax.tree_util.tree_map(shard_one, batch_avals)
+
+
+def _dp_shards(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in batch_axes(mesh)]))
+
+
+def pick_microbatches(shape: ShapeCell, mesh) -> int:
+    """Default grad-accumulation factor: one sequence per DP shard per
+    microbatch (bounds live activations; §Perf knob)."""
+    dp = _dp_shards(mesh)
+    m = max(1, shape.global_batch // dp)
+    while shape.global_batch % m or (shape.global_batch // m) % dp:
+        m -= 1
+    return max(m, 1)
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: jax.sharding.Mesh,
+               rule_overrides=None, microbatches: Optional[int] = None,
+               undervolt=None, remat: Optional[str] = None) -> CellPlan:
+    bundle = get_arch(arch_id)
+    cfg = bundle.cfg
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = SHAPES[shape_name]
+    rules = _rules_for(shape, rule_overrides)
+    dist = DistContext(mesh=mesh, batch_axes=batch_axes(mesh),
+                       model_axis="model", rules=rules)
+    scan_trips = _scan_trips(bundle, cfg)
+
+    if shape.kind == "train":
+        m = (microbatches if microbatches is not None
+             else pick_microbatches(shape, mesh))
+        tc = trainer.TrainConfig(microbatches=m, undervolt=undervolt)
+        step = trainer.make_train_step(bundle, cfg, tc, dist)
+        sspecs = trainer.state_specs(bundle, cfg, tc)
+        state_avals = spec_avals(sspecs)
+        state_sh = tree_shardings(sspecs, rules, mesh)
+        batch_avals = _batch_avals(cfg, shape, "train")
+        batch_sh = _batch_shardings(batch_avals, mesh, rules)
+        scan_trips = {**scan_trips, "microbatch": m}
+        return CellPlan(
+            arch_id=arch_id, shape=shape, mesh=mesh, step_fn=step,
+            in_avals=(state_avals, batch_avals),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,), layer_scan_trips=scan_trips,
+            microbatches=m, dist=dist)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return bundle.module.prefill(params, batch, cfg,
+                                         shape.seq_len, dist)
+        pspecs = bundle.module.param_specs(cfg)
+        cache_len = shape.seq_len + (cfg.enc_len if cfg.family == "vlm"
+                                     else 0)
+        cspecs = bundle.module.cache_specs(cfg, shape.global_batch,
+                                           cache_len)
+        return CellPlan(
+            arch_id=arch_id, shape=shape, mesh=mesh, step_fn=prefill_step,
+            in_avals=(spec_avals(pspecs),
+                      _batch_avals(cfg, shape, "prefill")),
+            in_shardings=(tree_shardings(pspecs, rules, mesh),
+                          _batch_shardings(
+                              _batch_avals(cfg, shape, "prefill"),
+                              mesh, rules)),
+            out_shardings=(None, tree_shardings(cspecs, rules, mesh)),
+            donate_argnums=(), layer_scan_trips=scan_trips, dist=dist)
+
+    # decode: one new token against a seq_len-deep cache
+    def decode_step(params, cache, batch, pos):
+        return bundle.module.decode_step(params, cache, batch, pos, cfg,
+                                         dist)
+
+    pspecs = bundle.module.param_specs(cfg)
+    cache_len = shape.seq_len + (cfg.enc_len if cfg.family == "vlm" else 0)
+    cspecs = bundle.module.cache_specs(cfg, shape.global_batch, cache_len)
+    cache_sh = tree_shardings(cspecs, rules, mesh)
+    batch_avals = _batch_avals(cfg, shape, "decode")
+    return CellPlan(
+        arch_id=arch_id, shape=shape, mesh=mesh, step_fn=decode_step,
+        in_avals=(spec_avals(pspecs), spec_avals(cspecs), batch_avals,
+                  jax.ShapeDtypeStruct((), jnp.int32)),
+        in_shardings=(tree_shardings(pspecs, rules, mesh), cache_sh,
+                      _batch_shardings(batch_avals, mesh, rules),
+                      NamedSharding(mesh, P())),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,), layer_scan_trips=scan_trips, dist=dist)
+
+
+def _scan_trips(bundle: ArchBundle, cfg) -> Dict[str, int]:
+    """Known scan trip counts, for weighting collectives found inside
+    while-loop bodies in the roofline analysis."""
+    trips: Dict[str, int] = {}
+    if hasattr(bundle.module, "layout"):
+        trips["layers"] = bundle.module.layout(cfg).n_periods
+    if cfg.family == "audio":
+        from repro.models import whisper as W
+        trips["enc_layers"] = W.enc_layout(cfg).n_periods
+        trips["layers"] = W.dec_layout(cfg).n_periods
+    return trips

@@ -1,0 +1,105 @@
+"""Training launcher: ``--arch <id>`` end-to-end driver.
+
+Runs the reduced config on CPU by default (the full configs are only
+lowered AOT via dryrun.py on this container).  Wires together the data
+pipeline, trainer, undervolt plan, async checkpointing, and crash/
+restore handling -- the same step function the dry-run lowers for the
+production meshes.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+      --steps 100 --undervolt 0.93 --ckpt-dir /tmp/ck --resume
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint as ckpt
+from repro.core.domains import DeviceCrashError
+from repro.core.hbm import TPU_V5E
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models.base import get_arch
+from repro.optim.adamw import AdamWConfig
+from repro.training import trainer
+from repro.training.undervolt import aggressive_plan, guardband_plan
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--undervolt", type=float, default=0.0,
+                    help="unsafe-domain voltage; 0 = guardband plan")
+    ap.add_argument("--mitigation", default="clamp",
+                    choices=["none", "clamp"])
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full-size config (needs real HW)")
+    args = ap.parse_args()
+
+    bundle = get_arch(args.arch)
+    cfg = bundle.cfg if args.full_config else bundle.reduced
+    try:
+        plan = (aggressive_plan(v_unsafe=args.undervolt,
+                                mitigation=args.mitigation,
+                                geometry=TPU_V5E)
+                if args.undervolt else guardband_plan(TPU_V5E))
+    except DeviceCrashError as e:
+        raise SystemExit(f"refusing to launch: {e}")
+
+    report = plan.power_report(utilization=0.7)
+    print(f"[undervolt] blended HBM savings "
+          f"{report['blended_savings_x']:.2f}x, "
+          f"{report['pcs_powered']}/{TPU_V5E.num_pcs} PCs powered")
+
+    tc = trainer.TrainConfig(
+        microbatches=args.microbatches,
+        adamw=AdamWConfig(lr=args.lr, warmup_steps=10,
+                          total_steps=args.steps),
+        undervolt=plan, grad_compression=args.grad_compression)
+    step_fn = jax.jit(trainer.make_train_step(bundle, cfg, tc))
+    state = trainer.init_state(bundle, cfg, jax.random.PRNGKey(0))
+    if tc.grad_compression == "int8_ef":
+        from repro.optim.compress import init_ef
+        state["ef"] = init_ef(state["params"])
+
+    start = 0
+    writer = None
+    if args.ckpt_dir:
+        writer = ckpt.AsyncCheckpointer(args.ckpt_dir)
+        if args.resume and ckpt.latest_step(args.ckpt_dir) is not None:
+            restored, meta = ckpt.restore(args.ckpt_dir, state)
+            state = jax.tree_util.tree_map(jnp.asarray, restored)
+            start = meta["step"]
+            print(f"[resume] restored step {start}")
+
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                    global_batch=args.batch, seed=0)
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in
+                 make_batch(dc, i, cfg).items()}
+        state, m = step_fn(state, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
+                  f"lr {float(m['lr']):.2e}  "
+                  f"gnorm {float(m['grad_norm']):.3f}")
+        if writer and (i + 1) % args.ckpt_every == 0:
+            writer.submit(i + 1, state, {"loss": float(m["loss"])})
+    if writer:
+        writer.submit(args.steps, state, {"loss": float(m["loss"])})
+        writer.finalize()
+        print(f"[ckpt] final checkpoint at step {args.steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""Model substrate: configs, parameter specs, logical-axis sharding.
+
+Flax-free functional modules: every architecture family exposes
+
+    param_specs(cfg)                  -> pytree of ParamSpec
+    forward_train(params, batch, cfg) -> (loss, metrics)
+    cache_specs(cfg, batch, seq)      -> pytree of ParamSpec (decode state)
+    decode_step(params, cache, batch, cfg) -> (logits, cache)
+
+ParamSpec carries *logical axes* (MaxText-style); launch/mesh.py resolves
+them to PartitionSpecs through per-arch rule tables, with divisibility
+checking and fallbacks.  Dry-runs materialize nothing: specs become
+ShapeDtypeStructs and the whole step is lowered AOT.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Shape/dtype/logical-axes/init description of one parameter."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis name per dim (or None)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"                 # normal | zeros | ones | scaled
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    @property
+    def aval(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def spec_avals(specs) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: s.aval, specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_params(specs, key) -> Any:
+    """Materialize parameters (smoke tests / examples only)."""
+    flat, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for s, k in zip(flat, keys):
+        if s.init == "zeros":
+            leaves.append(jnp.zeros(s.shape, s.dtype))
+        elif s.init == "ones":
+            leaves.append(jnp.ones(s.shape, s.dtype))
+        elif s.init == "const":
+            leaves.append(jnp.full(s.shape, s.scale, s.dtype))
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            std = s.scale / math.sqrt(max(fan_in, 1))
+            leaves.append(
+                (jax.random.normal(k, s.shape, jnp.float32) * std
+                 ).astype(s.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def count_params(specs) -> int:
+    flat = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(int(np.prod(s.shape)) for s in flat)
+
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One assigned architecture (exact numbers from the public pool)."""
+
+    arch_id: str
+    family: str                  # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    norm_eps: float = 1e-6
+    rope_theta: float = 10000.0
+    dtype: Any = jnp.bfloat16
+
+    # layer pattern, e.g. gemma3 5 local : 1 global, recurrentgemma 2 rec :
+    # 1 local-attention.  None means all layers identical.
+    pattern: Optional[Tuple[str, ...]] = None
+    window: int = 0              # sliding-window size for local attention
+
+    # MoE / MLA (deepseek family)
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 2.0
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    rope_head_dim: int = 0       # MLA decoupled rope dims
+    d_ff_dense: int = 0          # deepseek layer-0 dense MLP width
+
+    # ssm / hybrid
+    conv_width: int = 4
+    lru_width: int = 0
+
+    # enc-dec / vlm frontends (stubs provide precomputed embeddings)
+    enc_layers: int = 0
+    enc_len: int = 0             # whisper: 1500 frames; vlm: image tokens
+    frontend_dim: int = 0        # vlm: ViT output width fed to the projector
+    mlp_gated: bool = True       # whisper uses plain GELU MLPs
+
+    # training
+    remat: str = "block"         # none | block
+    seq_len_default: int = 4096
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer kind strings, honoring the repeating pattern."""
+        if self.pattern is None:
+            return ("global",) * self.n_layers
+        reps = -(-self.n_layers // len(self.pattern))
+        return (self.pattern * reps)[: self.n_layers]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One assigned input-shape cell."""
+
+    name: str                    # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                    # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], "ArchBundle"]] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchBundle:
+    """Everything the launcher needs for one architecture."""
+
+    cfg: ArchConfig
+    module: Any                       # the family module (dense, moe, ...)
+    reduced: Optional[ArchConfig] = None   # smoke-test configuration
+    # shape-cell applicability: long_500k only for sub-quadratic families
+    skip_cells: Tuple[str, ...] = ()
+    skip_reasons: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def register(arch_id: str, fn: Callable[[], ArchBundle]) -> None:
+    _REGISTRY[arch_id] = fn
+
+
+def get_arch(arch_id: str) -> ArchBundle:
+    if arch_id not in _REGISTRY:
+        # configs register lazily on import
+        import importlib
+        mod = arch_id.replace("-", "_").replace(".", "_")
+        importlib.import_module(f"repro.configs.{mod}")
+    return _REGISTRY[arch_id]()
+
+
+def list_archs() -> Tuple[str, ...]:
+    from repro import configs  # noqa: F401  (triggers registration)
+    return tuple(sorted(_REGISTRY))

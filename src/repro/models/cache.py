@@ -1,0 +1,64 @@
+"""Generic ring-buffer cache helpers (KV caches, MLA compressed caches).
+
+A cache is a dict with a ``pos`` int32 array (B, L) recording the
+absolute position stored in each slot (-1 = empty) plus any number of
+value arrays with the slot axis at dim 1.  Slot for position p is
+p % L, so full-length caches (L = max_len) behave like plain caches and
+window caches (L = window) roll over -- one code path for both.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import ParamSpec
+
+
+def init_cache(specs) -> Any:
+    def mk(s):
+        if s.dtype == jnp.int32:
+            return jnp.full(s.shape, -1, jnp.int32)
+        return jnp.zeros(s.shape, s.dtype)
+    return jax.tree_util.tree_map(
+        mk, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def ring_fill(cache: Dict[str, jax.Array], new: Dict[str, jax.Array],
+              positions: jax.Array) -> Dict[str, jax.Array]:
+    """Prefill: write a full sequence; keeps the last L entries."""
+    ln = cache["pos"].shape[1]
+    s = positions.shape[1]
+    out = {}
+    if s >= ln:
+        # slots for the kept tail are a static rotation of 0..L-1
+        slots = np.arange(s - ln, s) % ln
+        inv = np.argsort(slots)
+        for k, arr in new.items():
+            out[k] = arr[:, -ln:][:, inv]
+        out["pos"] = positions[:, -ln:][:, inv]
+    else:
+        for k, arr in new.items():
+            start = (0,) * arr.ndim
+            out[k] = jax.lax.dynamic_update_slice(cache[k], arr, start)
+        out["pos"] = jax.lax.dynamic_update_slice(cache["pos"], positions,
+                                                  (0, 0))
+    return out
+
+
+def ring_update(cache: Dict[str, jax.Array], new: Dict[str, jax.Array],
+                pos: jax.Array) -> Dict[str, jax.Array]:
+    """Decode: write one token at slot pos % L."""
+    ln = cache["pos"].shape[1]
+    slot = pos % ln
+    out = {}
+    for k, arr in new.items():
+        start = (0, slot) + (0,) * (arr.ndim - 2)
+        out[k] = jax.lax.dynamic_update_slice(cache[k], arr, start)
+    b = cache["pos"].shape[0]
+    out["pos"] = jax.lax.dynamic_update_slice(
+        cache["pos"],
+        jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32), (0, slot))
+    return out

@@ -1,0 +1,80 @@
+"""Distribution context threaded into model families that use explicit
+collectives (shard_map expert parallelism) and, via a trace-time context
+variable, into layers that need activation sharding constraints (the
+attention core pins q/k/v to a batch-sharded, head-replicated layout so
+GSPMD never inserts per-block collectives inside the chunk loops)."""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    mesh: jax.sharding.Mesh
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    rules: Any = None            # launch.sharding.ShardingRules | None
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    def activation_sharding(self, shape, leading_batch: bool = True):
+        """NamedSharding for an activation tensor (batch-leading).
+
+        Rank-4 tensors are attention activations (B, S, H, D): the
+        'attn_act_heads' rule (default: replicate) can shard the head
+        dim over the model axis when divisible -- the §Perf lever that
+        recovers TP attention for head-rich archs (deepseek's 128 MLA
+        heads, llama3-8b's 32)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.sharding import ShardingRules, resolve_spec
+        from repro.models.base import ParamSpec
+        rules = self.rules if self.rules is not None \
+            else ShardingRules.default()
+        lead = ("batch",) if leading_batch else (None,)
+        if len(shape) == 4:
+            axes = lead + (None, "attn_act_heads", None)
+        else:
+            axes = lead + (None,) * (len(shape) - 1)
+        spec = resolve_spec(
+            ParamSpec(shape=tuple(shape), axes=axes, dtype=jax.numpy.int32),
+            rules, self.mesh)
+        return NamedSharding(self.mesh, spec)
+
+
+_CURRENT: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_dist", default=None)
+
+
+@contextlib.contextmanager
+def use(dist: Optional["DistContext"]):
+    """Make ``dist`` visible to layer internals for the trace duration."""
+    token = _CURRENT.set(dist)
+    try:
+        yield
+    finally:
+        _CURRENT.reset(token)
+
+
+def current() -> Optional["DistContext"]:
+    return _CURRENT.get()
+
+
+@functools.lru_cache(maxsize=1)
+def local_dist() -> DistContext:
+    """1-device mesh for smoke tests / CPU examples."""
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return DistContext(mesh=mesh, batch_axes=("data",), model_axis="model")
+
+
+def ensure(dist: Optional[DistContext]) -> DistContext:
+    return dist if dist is not None else local_dist()

@@ -1,0 +1,309 @@
+"""Shared neural layers: RMSNorm, RoPE, chunked attention, gated MLP.
+
+Attention is *blockwise* (streaming softmax over KV chunks, optionally
+over Q chunks too), so no O(S^2) score tensor is ever materialized --
+this is what lets the 32k prefill and 500k decode cells lower with sane
+memory footprints on the production mesh.  The Pallas flash-attention
+kernel shares its reference math with this implementation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding; x: (..., S, H, D), positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # positions (..., S) -> angles (..., S, 1, half), broadcast over heads
+    angles = positions[..., :, None, None].astype(jnp.float32) * freq
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _chunk_mask(q_pos, k_pos, causal: bool, window: int):
+    """(..., Sq, Sk) additive mask from absolute positions."""
+    m = jnp.zeros(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]),
+                  jnp.float32)
+    delta = q_pos[..., :, None] - k_pos[..., None, :]
+    if causal:
+        m = jnp.where(delta < 0, NEG_INF, m)
+    if window > 0:
+        m = jnp.where(delta >= window, NEG_INF, m)
+    return m
+
+
+def attention(q, k, v, *, q_positions, k_positions, causal: bool = True,
+              window: int = 0, kv_valid: Optional[jax.Array] = None,
+              q_chunk: int = 1024, kv_chunk: int = 1024,
+              softmax_scale: Optional[float] = None):
+    """Blockwise multi-head attention with GQA and a flash-style VJP.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, K, Dk/Dv) with H % K == 0 (Dv may
+    differ from Dk: MLA absorbed decode).
+    q_positions: (B, Sq) absolute positions; k_positions: (B, Sk).
+    kv_valid: optional (B, Sk) bool -- False entries are masked out
+    (ring-buffer caches, padding).
+
+    Streams KV in chunks with a running softmax; never forms (Sq, Sk).
+    The custom VJP saves only (out, logsumexp) and *recomputes*
+    probability blocks in the backward pass -- the memory-efficient
+    (flash) attention algorithm, which is also what the Pallas kernel
+    implements for the TPU runtime.
+    """
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    if kv_valid is None:
+        kv_valid = jnp.ones((b, sk), bool)
+
+    # Pin attention activations to a batch-sharded, head-replicated
+    # layout: GQA head counts rarely divide the model axis, and letting
+    # GSPMD keep head_dim sharded makes it all-reduce every score block
+    # inside the chunk loops (measured 5.8 TB/chip on llama3.2 train --
+    # see EXPERIMENTS.md §Perf).  Head-replication costs redundant
+    # attention FLOPs on the model axis instead; recovering them is a
+    # hillclimb lever (head padding / ring attention).
+    from repro.models import dist as _dist
+    dctx = _dist.current()
+    if dctx is not None:
+        cons = jax.lax.with_sharding_constraint
+        q = cons(q, dctx.activation_sharding(q.shape))
+        k = cons(k, dctx.activation_sharding(k.shape))
+        v = cons(v, dctx.activation_sharding(v.shape))
+
+    cfg = (bool(causal), int(window), int(min(q_chunk, sq)),
+           int(min(kv_chunk, sk)), float(scale), h // kh)
+    out = _attention_cvjp(cfg, q, k, v, q_positions, k_positions, kv_valid)
+    if dctx is not None:
+        out = jax.lax.with_sharding_constraint(
+            out, dctx.activation_sharding(out.shape))
+    return out
+
+
+def _pad_time(x, n, value=0):
+    if n == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[1] = (0, n)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def _attention_fwd_impl(cfg, q, k, v, q_positions, k_positions, kv_valid):
+    causal, window, q_chunk, kv_chunk, scale, g = cfg
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    dv = v.shape[-1]
+    qs = (q.astype(jnp.float32) * scale).reshape(b, sq, kh, g, d)
+
+    n_kv = -(-sk // kv_chunk)
+    pad_k = n_kv * kv_chunk - sk
+    k_ = _pad_time(k, pad_k)
+    v_ = _pad_time(v, pad_k)
+    kp = _pad_time(k_positions, pad_k, np.iinfo(np.int32).max)
+    vm = _pad_time(kv_valid, pad_k, False)
+    kc = k_.reshape(b, n_kv, kv_chunk, kh, d).swapaxes(0, 1)
+    vc = v_.reshape(b, n_kv, kv_chunk, kh, dv).swapaxes(0, 1)
+    kpc = kp.reshape(b, n_kv, kv_chunk).swapaxes(0, 1)
+    vmc = vm.reshape(b, n_kv, kv_chunk).swapaxes(0, 1)
+
+    def process_q_chunk(args):
+        q_blk, qpos_blk = args              # (B, Cq, K, G, D), (B, Cq)
+        cq = q_blk.shape[1]
+        acc0 = jnp.zeros((b, cq, kh, g, dv), jnp.float32)
+        m0 = jnp.full((b, cq, kh, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, cq, kh, g), jnp.float32)
+
+        def body(carry, inputs):
+            acc, m, l = carry
+            k_blk, v_blk, kp_blk, vm_blk = inputs
+            s = jnp.einsum("bqkgd,bckd->bqkgc", q_blk,
+                           k_blk.astype(jnp.float32))
+            mask = _chunk_mask(qpos_blk, kp_blk, causal, window)
+            s = s + mask[:, :, None, None, :]
+            s = jnp.where(vm_blk[:, None, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p, v_blk.astype(jnp.float32))
+            l = l * corr + jnp.sum(p, axis=-1)
+            return (acc, m_new, l), None
+
+        (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                      (kc, vc, kpc, vmc))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # rows with no unmasked kv get lse=+big so the bwd recompute
+        # yields p == 0 for them
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), 1e30)
+        return out, lse
+
+    if sq <= q_chunk:
+        out, lse = process_q_chunk((qs, q_positions))
+    else:
+        n_q = -(-sq // q_chunk)
+        pad_q = n_q * q_chunk - sq
+        qq = _pad_time(qs, pad_q).reshape(
+            b, n_q, q_chunk, kh, g, d).swapaxes(0, 1)
+        qp = _pad_time(q_positions, pad_q).reshape(
+            b, n_q, q_chunk).swapaxes(0, 1)
+        out, lse = jax.lax.map(process_q_chunk, (qq, qp))
+        out = out.swapaxes(0, 1).reshape(b, -1, kh, g, dv)[:, :sq]
+        lse = lse.swapaxes(0, 1).reshape(b, -1, kh, g)[:, :sq]
+
+    return out.reshape(b, sq, h, dv).astype(v.dtype), lse
+
+
+def _attn_fwd(cfg, q, k, v, q_positions, k_positions, kv_valid):
+    out, lse = _attention_fwd_impl(cfg, q, k, v, q_positions, k_positions,
+                                   kv_valid)
+    return out, (q, k, v, q_positions, k_positions, kv_valid, out, lse)
+
+
+def _attn_bwd(cfg, res, dout):
+    causal, window, q_chunk, kv_chunk, scale, g = cfg
+    q, k, v, q_positions, k_positions, kv_valid, out, lse = res
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    dv = v.shape[-1]
+
+    dog = dout.reshape(b, sq, kh, g, dv).astype(jnp.float32)
+    og = out.reshape(b, sq, kh, g, dv).astype(jnp.float32)
+    dvec = jnp.sum(dog * og, axis=-1)              # (B, Sq, K, G)
+    qs = (q.astype(jnp.float32) * scale).reshape(b, sq, kh, g, d)
+
+    n_q = -(-sq // q_chunk)
+    pad_q = n_q * q_chunk - sq
+    qq = _pad_time(qs, pad_q).reshape(b, n_q, q_chunk, kh, g, d
+                                      ).swapaxes(0, 1)
+    qp = _pad_time(q_positions, pad_q).reshape(b, n_q, q_chunk
+                                               ).swapaxes(0, 1)
+    lsq = _pad_time(lse, pad_q, 1e30).reshape(b, n_q, q_chunk, kh, g
+                                              ).swapaxes(0, 1)
+    dvq = _pad_time(dvec, pad_q).reshape(b, n_q, q_chunk, kh, g
+                                         ).swapaxes(0, 1)
+    doq = _pad_time(dog, pad_q).reshape(b, n_q, q_chunk, kh, g, dv
+                                        ).swapaxes(0, 1)
+
+    n_kv = -(-sk // kv_chunk)
+    pad_k = n_kv * kv_chunk - sk
+    kc = _pad_time(k, pad_k).astype(jnp.float32).reshape(
+        b, n_kv, kv_chunk, kh, d).swapaxes(0, 1)
+    vc = _pad_time(v, pad_k).astype(jnp.float32).reshape(
+        b, n_kv, kv_chunk, kh, dv).swapaxes(0, 1)
+    kpc = _pad_time(k_positions, pad_k, np.iinfo(np.int32).max
+                    ).reshape(b, n_kv, kv_chunk).swapaxes(0, 1)
+    vmc = _pad_time(kv_valid, pad_k, False
+                    ).reshape(b, n_kv, kv_chunk).swapaxes(0, 1)
+
+    def kv_body(dq_acc, kv_in):
+        k_c, v_c, kp_c, vm_c = kv_in
+
+        def q_body(carry, q_in):
+            dk_c, dv_c = carry
+            q_blk, qp_blk, lse_blk, d_blk, do_blk = q_in
+            s = jnp.einsum("bqkgd,bckd->bqkgc", q_blk, k_c)
+            mask = _chunk_mask(qp_blk, kp_c, causal, window)
+            s = s + mask[:, :, None, None, :]
+            s = jnp.where(vm_c[:, None, None, None, :], s, NEG_INF)
+            p = jnp.exp(s - lse_blk[..., None])        # recomputed block
+            dv_c = dv_c + jnp.einsum("bqkgc,bqkgd->bckd", p, do_blk)
+            dp = jnp.einsum("bqkgd,bckd->bqkgc", do_blk, v_c)
+            ds = p * (dp - d_blk[..., None])
+            dq_blk = jnp.einsum("bqkgc,bckd->bqkgd", ds, k_c) * scale
+            dk_c = dk_c + jnp.einsum("bqkgc,bqkgd->bckd", ds, q_blk)
+            return (dk_c, dv_c), dq_blk
+
+        zeros = (jnp.zeros((b, kv_chunk, kh, d), jnp.float32),
+                 jnp.zeros((b, kv_chunk, kh, dv), jnp.float32))
+        (dk_c, dv_c), dq_chunks = jax.lax.scan(
+            q_body, zeros, (qq, qp, lsq, dvq, doq))
+        return dq_acc + dq_chunks, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((n_q, b, q_chunk, kh, g, d), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(kv_body, dq0, (kc, vc, kpc, vmc))
+
+    dq = dq.swapaxes(0, 1).reshape(b, -1, h, d)[:, :sq].astype(q.dtype)
+    dk = dks.swapaxes(0, 1).reshape(b, -1, kh, d)[:, :sk].astype(k.dtype)
+    dv_out = dvs.swapaxes(0, 1).reshape(b, -1, kh, dv)[:, :sk].astype(
+        v.dtype)
+
+    def f0(x):
+        return np.zeros(x.shape, jax.dtypes.float0)
+
+    return (dq, dk, dv_out, f0(q_positions), f0(k_positions), f0(kv_valid))
+
+
+import functools as _functools  # noqa: E402
+
+_attention_cvjp = jax.custom_vjp(
+    lambda cfg, q, k, v, qp, kp, vm: _attention_fwd_impl(
+        cfg, q, k, v, qp, kp, vm)[0],
+    nondiff_argnums=(0,))
+_attention_cvjp.defvjp(_attn_fwd, _attn_bwd)
+
+
+def gated_mlp(x, w_gate, w_up, w_down, act: str = "silu"):
+    """SwiGLU/GeGLU MLP: down(act(x@gate) * (x@up))."""
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return jnp.einsum("bsf,fd->bsd", (a * u).astype(x.dtype), w_down)
+
+
+def embed(tokens, table):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x, table):
+    """Tied output head: (B, S, D) x (V, D)^T -> (B, S, V)."""
+    return jnp.einsum("bsd,vd->bsv", x, table,
+                      preferred_element_type=jnp.float32)
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Token-mean cross-entropy; logits (B, S, V) f32, labels (B, S).
+
+    The gold logit is extracted with an iota-compare masked reduction
+    instead of take_along_axis: on a vocab-sharded logits tensor this
+    fuses into the local reduction + one small all-reduce, where a
+    gather would force SPMD to replicate the logits.
+    """
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    viota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    gold = jnp.sum(jnp.where(viota == labels[..., None], logits, 0.0),
+                   axis=-1)
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(nll.dtype)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_head_loss(x, table, labels, mask=None, dist=None):
+    """Fused unembed + cross-entropy with explicit logits sharding:
+    batch over the DP axes, vocab over the model axis -- the (B, S, V)
+    tensor is the biggest activation in small-vocab-dominated models and
+    must never be replicated."""
+    logits = unembed(x, table)
+    if dist is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        spec = PartitionSpec(dist.batch_axes, None, "model")
+        logits = jax.lax.with_sharding_constraint(
+            logits, NamedSharding(dist.mesh, spec))
+    return softmax_xent(logits, labels, mask)

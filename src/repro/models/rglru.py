@@ -1,0 +1,202 @@
+"""RecurrentGemma / Griffin family: RG-LRU recurrent blocks + local attention.
+
+Pattern: (rec, rec, local-attn) repeating -- period-scanned with
+heterogeneous slot caches: recurrent slots carry a constant-size state
+(B, lru) + conv tail, attention slots a window-sized ring cache.  Decode
+cost and state are O(1) in context length, which is why this arch runs
+the long_500k cell.
+
+The RG-LRU recurrence  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t*x_t)
+is evaluated with jax.lax.associative_scan (log-depth) for train/prefill;
+the Pallas kernel in kernels/rglru implements the same contraction with
+chunked VMEM tiles for the TPU runtime.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cache as C
+from repro.models import dense as D
+from repro.models import layers as L
+from repro.models import stack as S
+from repro.models.base import ArchConfig, ParamSpec
+
+RGLRU_C = 8.0  # the Griffin paper's fixed recurrence sharpness constant
+
+
+def rec_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, dt, r = cfg.d_model, cfg.dtype, cfg.lru_width
+    return {
+        "ln1": ParamSpec((d,), (None,), dt, "zeros"),
+        "w_a": ParamSpec((d, r), ("embed", "mlp"), dt),     # gelu branch
+        "w_b": ParamSpec((d, r), ("embed", "mlp"), dt),     # recurrent branch
+        "conv_w": ParamSpec((cfg.conv_width, r), (None, "mlp"), dt),
+        "conv_b": ParamSpec((r,), ("mlp",), dt, "zeros"),
+        "w_rg": ParamSpec((r, r), ("mlp", None), dt),       # recurrence gate
+        "b_rg": ParamSpec((r,), (None,), dt, "zeros"),
+        "w_ig": ParamSpec((r, r), ("mlp", None), dt),       # input gate
+        "b_ig": ParamSpec((r,), (None,), dt, "zeros"),
+        # Lambda init => a ~ 0.95 at r_g ~ 0.5 (Griffin's stable-decay init)
+        "lam": ParamSpec((r,), (None,), jnp.float32, "const", scale=-4.38),
+        "w_out": ParamSpec((r, d), ("mlp", "embed"), dt),
+        "ln2": ParamSpec((d,), (None,), dt, "zeros"),
+        "wg": ParamSpec((d, cfg.d_ff), ("embed", "mlp"), dt),
+        "wu": ParamSpec((d, cfg.d_ff), ("embed", "mlp"), dt),
+        "wd": ParamSpec((cfg.d_ff, d), ("mlp", "embed"), dt),
+    }
+
+
+def rec_cache_specs(cfg: ArchConfig, batch: int) -> Dict[str, ParamSpec]:
+    r = cfg.lru_width
+    return {
+        "h": ParamSpec((batch, r), ("batch", "mlp"), jnp.float32, "zeros"),
+        "conv": ParamSpec((batch, cfg.conv_width - 1, r),
+                          ("batch", None, "mlp"), cfg.dtype, "zeros"),
+    }
+
+
+def _causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv along time.  x: (B,S,R); w: (W,R).
+
+    tail: (B, W-1, R) previous inputs (decode/prefill continuation)."""
+    wdt = x.dtype
+    width = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], width - 1, x.shape[2]), wdt)
+           if tail is None else tail.astype(wdt))
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return out + b, xp[:, -(width - 1):]  # (B,S,R), new tail
+
+
+def _rglru(y, p, h0):
+    """RG-LRU over a sequence.  y: (B,S,R); h0: (B,R) f32."""
+    yf = y.astype(jnp.float32)
+    r_g = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", yf,
+                                    p["w_rg"].astype(jnp.float32))
+                         + p["b_rg"].astype(jnp.float32))
+    i_g = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", yf,
+                                    p["w_ig"].astype(jnp.float32))
+                         + p["b_ig"].astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r_g     # (B,S,R)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i_g * yf)
+
+    # h_t = a_t h_{t-1} + gated_t  via associative scan, seeded with h0
+    # by folding h0 into the first element.
+    gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(prev, nxt):
+        a1, b1 = prev
+        a2, b2 = nxt
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h, h[:, -1]  # (B,S,R) f32, final state
+
+
+def rec_apply(cfg: ArchConfig, p, x, cache, mode):
+    hpre = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    branch_a = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", hpre, p["w_a"]))
+    yb = jnp.einsum("bsd,dr->bsr", hpre, p["w_b"])
+    tail = cache["conv"] if cache is not None else None
+    yb, new_tail = _causal_conv(yb, p["conv_w"], p["conv_b"], tail)
+    h0 = (cache["h"] if cache is not None
+          else jnp.zeros((x.shape[0], cfg.lru_width), jnp.float32))
+    hseq, h_last = _rglru(yb, p, h0)
+    merged = branch_a * hseq.astype(x.dtype)
+    x = x + jnp.einsum("bsr,rd->bsd", merged, p["w_out"])
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.gated_mlp(h2, p["wg"], p["wu"], p["wd"], act="gelu")
+    new_cache = (None if cache is None
+                 else {"h": h_last, "conv": new_tail.astype(cfg.dtype)})
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# whole model
+# ---------------------------------------------------------------------------
+
+
+def slot_specs(cfg: ArchConfig, kind: str):
+    if kind == "rec":
+        return rec_specs(cfg)
+    return D.attn_mlp_specs(cfg, kind)   # "local"
+
+
+def slot_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int):
+    if kind == "rec":
+        return rec_cache_specs(cfg, batch)
+    return D.attn_cache_specs(cfg, kind, batch, max_len)
+
+
+def layout(cfg: ArchConfig) -> S.PeriodLayout:
+    return S.layout_from_kinds(cfg.layer_kinds(), len(cfg.pattern))
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), (None, "embed"),
+                           cfg.dtype),
+        "unembed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                             cfg.dtype),
+        "stack": S.stack_specs(layout(cfg),
+                               functools.partial(slot_specs, cfg)),
+        "ln_f": ParamSpec((cfg.d_model,), (None,), cfg.dtype, "zeros"),
+    }
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    return S.stack_cache_specs(
+        layout(cfg), lambda kind: slot_cache(cfg, kind, batch, max_len))
+
+
+def _run_stack(cfg, params, x, positions, cache, mode, pos=None):
+    def apply_slot(kind, p, xx, c):
+        if kind == "rec":
+            return rec_apply(cfg, p, xx, c, mode)
+        return D.attn_mlp_apply(cfg, kind, p, xx, c, positions, mode, pos)
+
+    x, new_cache = S.apply_stack(params["stack"], x, layout(cfg), apply_slot,
+                                 cache=cache, remat=(cfg.remat == "block"))
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps), new_cache
+
+
+def forward_train(params, batch, cfg: ArchConfig, dist=None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = L.embed(tokens, params["embed"]) * jnp.sqrt(float(cfg.d_model)
+                                                    ).astype(cfg.dtype)
+    x, _ = _run_stack(cfg, params, x, positions, None, "train")
+    loss = L.lm_head_loss(x[:, :-1], params["unembed"], tokens[:, 1:],
+                          batch.get("loss_mask", None), dist)
+    return loss, {"loss": loss}
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len: int, dist=None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    cache = C.init_cache(cache_specs(cfg, b, max_len))
+    x = L.embed(tokens, params["embed"]) * jnp.sqrt(float(cfg.d_model)
+                                                    ).astype(cfg.dtype)
+    x, cache = _run_stack(cfg, params, x, positions, cache, "prefill")
+    logits = L.unembed(x[:, -1:], params["unembed"])
+    return logits[:, 0], cache
+
+
+def decode_step(params, cache, batch, pos, cfg: ArchConfig, dist=None):
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    x = L.embed(tokens, params["embed"]) * jnp.sqrt(float(cfg.d_model)
+                                                    ).astype(cfg.dtype)
+    x, cache = _run_stack(cfg, params, x, positions, cache, "decode",
+                          pos=pos)
+    logits = L.unembed(x, params["unembed"])
+    return logits[:, 0], cache

@@ -1,0 +1,159 @@
+"""Period-scan layer stacking.
+
+Every assigned arch is a repetition of a short *period* of layer kinds
+(uniform transformers: period = 1 global-attention layer; gemma3:
+5 local + 1 global; recurrentgemma: 2 recurrent + 1 local-attention;
+xlstm: mLSTM + sLSTM).  We scan over full periods -- each slot in the
+period has its own parameter stack with a leading ``n_periods`` dim --
+and unroll the remainder layers.  This keeps the HLO compact (one scan
+body per arch regardless of depth: tractable 512-device compiles) while
+letting heterogeneous slots carry *differently shaped* params and caches
+(e.g. window-sized KV caches for local slots, full-length for global).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig, ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class PeriodLayout:
+    slots: Tuple[str, ...]        # layer kind per slot within the period
+    n_periods: int
+    remainder: Tuple[str, ...]    # trailing layers that don't fill a period
+    prefix: Tuple[str, ...] = ()  # leading layers before the periodic part
+    # (e.g. deepseek-v2's dense-MLP first layer)
+
+    @property
+    def n_layers(self) -> int:
+        return (len(self.prefix) + len(self.slots) * self.n_periods
+                + len(self.remainder))
+
+
+def layout_from_kinds(kinds: Tuple[str, ...], period_len: int,
+                      prefix_len: int = 0) -> PeriodLayout:
+    prefix = tuple(kinds[:prefix_len])
+    body = kinds[prefix_len:]
+    n_periods = len(body) // period_len
+    return PeriodLayout(slots=tuple(body[:period_len]),
+                        n_periods=n_periods,
+                        remainder=tuple(body[period_len * n_periods:]),
+                        prefix=prefix)
+
+
+def _stack_spec(spec: ParamSpec, n: int) -> ParamSpec:
+    return ParamSpec(shape=(n,) + spec.shape, axes=("layers",) + spec.axes,
+                     dtype=spec.dtype, init=spec.init, scale=spec.scale)
+
+
+def stack_specs(layout: PeriodLayout,
+                slot_specs: Callable[[str], Any]) -> Dict[str, Any]:
+    """Parameter specs for the whole stack.
+
+    slot_specs(kind) -> pytree[ParamSpec] for one layer of that kind.
+    """
+    periods = {
+        f"s{i}_{kind}": jax.tree_util.tree_map(
+            lambda s: _stack_spec(s, layout.n_periods), slot_specs(kind),
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+        for i, kind in enumerate(layout.slots)
+    }
+    rest = {f"r{i}_{kind}": slot_specs(kind)
+            for i, kind in enumerate(layout.remainder)}
+    pre = {f"p{i}_{kind}": slot_specs(kind)
+           for i, kind in enumerate(layout.prefix)}
+    return {"prefix": pre, "periods": periods, "rest": rest}
+
+
+def stack_cache_specs(layout: PeriodLayout,
+                      slot_cache: Callable[[str], Any]) -> Dict[str, Any]:
+    """Decode-state specs mirroring the parameter layout."""
+    periods = {
+        f"s{i}_{kind}": jax.tree_util.tree_map(
+            lambda s: _stack_spec(s, layout.n_periods), slot_cache(kind),
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+        for i, kind in enumerate(layout.slots)
+    }
+    rest = {f"r{i}_{kind}": slot_cache(kind)
+            for i, kind in enumerate(layout.remainder)}
+    pre = {f"p{i}_{kind}": slot_cache(kind)
+           for i, kind in enumerate(layout.prefix)}
+    return {"prefix": pre, "periods": periods, "rest": rest}
+
+
+def apply_stack(
+    params: Dict[str, Any],
+    x: jax.Array,
+    layout: PeriodLayout,
+    apply_slot: Callable[..., Any],   # (kind, params, x, cache) -> (x, cache)
+    cache: Optional[Dict[str, Any]] = None,
+    remat: bool = True,
+):
+    """Run the full layer stack; threads per-layer caches if given.
+
+    apply_slot(kind, slot_params, x, slot_cache) must return
+    (new_x, new_slot_cache); slot_cache is None when cache is None.
+    """
+    slots = layout.slots
+
+    def period_body(x, period_params, period_cache):
+        new_cache = {}
+        for i, kind in enumerate(slots):
+            key = f"s{i}_{kind}"
+            c = period_cache[key] if period_cache is not None else None
+            x, c_new = apply_slot(kind, period_params[key], x, c)
+            new_cache[key] = c_new
+        return x, (new_cache if period_cache is not None else None)
+
+    if remat:
+        period_body = jax.checkpoint(
+            period_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def apply_single(x, key, kind, params_d, cache_d):
+        c = cache_d[key] if cache_d is not None else None
+        body = (jax.checkpoint(
+            functools.partial(apply_slot, kind),
+            policy=jax.checkpoint_policies.nothing_saveable)
+            if remat else functools.partial(apply_slot, kind))
+        return body(params_d[key], x, c)
+
+    new_prefix = {}
+    for i, kind in enumerate(layout.prefix):
+        key = f"p{i}_{kind}"
+        x, c_new = apply_single(x, key, kind, params["prefix"],
+                                cache["prefix"] if cache is not None
+                                else None)
+        new_prefix[key] = c_new
+
+    if layout.n_periods > 0:
+        if cache is None:
+            x, _ = jax.lax.scan(
+                lambda x, p: (period_body(x, p, None)[0], None),
+                x, params["periods"])
+            new_period_cache = None
+        else:
+            def scan_fn(x, xs):
+                p, c = xs
+                return period_body(x, p, c)
+            x, new_period_cache = jax.lax.scan(
+                scan_fn, x, (params["periods"], cache["periods"]))
+    else:
+        new_period_cache = {} if cache is not None else None
+
+    new_rest = {}
+    for i, kind in enumerate(layout.remainder):
+        key = f"r{i}_{kind}"
+        x, c_new = apply_single(x, key, kind, params["rest"],
+                                cache["rest"] if cache is not None else None)
+        new_rest[key] = c_new
+
+    if cache is None:
+        return x, None
+    return x, {"prefix": new_prefix, "periods": new_period_cache,
+               "rest": new_rest}

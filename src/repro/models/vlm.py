@@ -1,0 +1,68 @@
+"""InternVL2 family: ViT frontend (stub) + InternLM2-style dense decoder.
+
+Per the assignment spec the modality frontend is a STUB: ``input_specs``
+provides precomputed patch embeddings (B, enc_len, frontend_dim); this
+module owns only the projector (ViT width -> d_model) and the language
+model.  Image tokens occupy positions [0, enc_len); text follows; loss
+is computed on text positions only.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from repro.models import cache as C
+from repro.models import dense as D
+from repro.models import layers as L
+from repro.models.base import ArchConfig, ParamSpec
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "lm": D.param_specs(cfg),
+        "proj_w": ParamSpec((cfg.frontend_dim, cfg.d_model),
+                            ("frontend", "embed"), cfg.dtype),
+        "proj_b": ParamSpec((cfg.d_model,), (None,), cfg.dtype, "zeros"),
+    }
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    return D.cache_specs(cfg, batch, max_len)
+
+
+def _embed_multimodal(params, batch, cfg):
+    patches = batch["patches"]                       # (B, enc_len, vit_dim)
+    tokens = batch["tokens"]                         # (B, S_text)
+    img = jnp.einsum("bpv,vd->bpd", patches.astype(cfg.dtype),
+                     params["proj_w"]) + params["proj_b"]
+    txt = L.embed(tokens, params["lm"]["embed"])
+    return jnp.concatenate([img, txt], axis=1)
+
+
+def forward_train(params, batch, cfg: ArchConfig, dist=None):
+    x = _embed_multimodal(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, _ = D._run_stack(cfg, params["lm"], x, positions, None, "train")
+    n_img = cfg.enc_len
+    tokens = batch["tokens"]
+    # hidden at position n_img-1+t predicts text token t
+    loss = L.lm_head_loss(x[:, n_img - 1:-1], params["lm"]["unembed"],
+                          tokens, batch.get("loss_mask", None), dist)
+    return loss, {"loss": loss}
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len: int, dist=None):
+    x = _embed_multimodal(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    cache = C.init_cache(cache_specs(cfg, b, max_len))
+    x, cache = D._run_stack(cfg, params["lm"], x, positions, cache,
+                            "prefill")
+    logits = L.unembed(x[:, -1:], params["lm"]["unembed"])
+    return logits[:, 0], cache
+
+
+def decode_step(params, cache, batch, pos, cfg: ArchConfig, dist=None):
+    return D.decode_step(params["lm"], cache, batch, pos, cfg)

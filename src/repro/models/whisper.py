@@ -1,0 +1,199 @@
+"""Whisper family: bidirectional audio encoder + causal text decoder.
+
+The conv frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, enc_len=1500, d_model) -- the output of
+whisper's two conv layers.  The encoder is enc_layers bidirectional
+blocks; the decoder stacks self-attention (cached), cross-attention to
+the encoder output (K/V cached at prefill), and plain-GELU MLPs
+(cfg.mlp_gated=False).  Deviation noted in DESIGN.md: rotary positions
+instead of whisper's learned/sinusoidal embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from repro.models import cache as C
+from repro.models import dense as D
+from repro.models import layers as L
+from repro.models import stack as S
+from repro.models.base import ArchConfig, ParamSpec
+
+
+def dec_specs(cfg: ArchConfig, kind: str) -> Dict[str, ParamSpec]:
+    d, dt = cfg.d_model, cfg.dtype
+    out = dict(D.attn_mlp_specs(cfg, "global"))
+    out.update({
+        "ln_x": ParamSpec((d,), (None,), dt, "zeros"),
+        "xq": ParamSpec((d, cfg.q_dim), ("embed", "heads"), dt),
+        "xk": ParamSpec((d, cfg.kv_dim), ("embed", "kv"), dt),
+        "xv": ParamSpec((d, cfg.kv_dim), ("embed", "kv"), dt),
+        "xo": ParamSpec((cfg.q_dim, d), ("heads", "embed"), dt),
+    })
+    return out
+
+
+def dec_cache_specs(cfg: ArchConfig, batch: int,
+                    max_len: int) -> Dict[str, ParamSpec]:
+    out = dict(D.attn_cache_specs(cfg, "global", batch, max_len))
+    cross = (batch, cfg.enc_len, cfg.n_kv_heads, cfg.head_dim)
+    out["ck"] = ParamSpec(cross, ("batch", None, "kv_heads", "head_dim"),
+                          cfg.dtype, "zeros")
+    out["cv"] = ParamSpec(cross, ("batch", None, "kv_heads", "head_dim"),
+                          cfg.dtype, "zeros")
+    return out
+
+
+def _cross_attend(cfg, p, x, ck, cv):
+    b, s, _ = x.shape
+    h = L.rms_norm(x, p["ln_x"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dq->bsq", h, p["xq"]).reshape(
+        b, s, cfg.n_heads, cfg.head_dim)
+    enc_pos = jnp.broadcast_to(
+        jnp.arange(ck.shape[1], dtype=jnp.int32), (b, ck.shape[1]))
+    out = L.attention(q, ck, cv,
+                      q_positions=jnp.zeros((b, s), jnp.int32),
+                      k_positions=enc_pos, causal=False)
+    return x + jnp.einsum("bsq,qd->bsd", out.reshape(b, s, -1), p["xo"])
+
+
+def dec_apply(cfg, p, x, cache, positions, mode, pos, enc_out):
+    """Decoder block: cached self-attn + cross-attn + GELU MLP."""
+    # --- causal self attention (ring cached) ---
+    window = 0
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = D._qkv(cfg, p, h, positions)
+    if mode == "train":
+        out = L.attention(q, k, v, q_positions=positions,
+                          k_positions=positions, causal=True, window=window)
+        new_cache = cache
+    elif mode == "prefill":
+        self_cache = {k_: cache[k_] for k_ in ("k", "v", "pos")}
+        new_self = C.ring_fill(self_cache, {"k": k, "v": v}, positions)
+        out = L.attention(q, k, v, q_positions=positions,
+                          k_positions=positions, causal=True, window=window)
+        new_cache = dict(new_self)
+    else:
+        self_cache = {k_: cache[k_] for k_ in ("k", "v", "pos")}
+        new_self = C.ring_update(self_cache, {"k": k, "v": v}, pos)
+        out = L.attention(q, new_self["k"], new_self["v"],
+                          q_positions=positions,
+                          k_positions=new_self["pos"], causal=True,
+                          kv_valid=new_self["pos"] >= 0)
+        new_cache = dict(new_self)
+    b, s, _, _ = out.shape
+    x = x + jnp.einsum("bsq,qd->bsd", out.reshape(b, s, -1), p["wo"])
+
+    # --- cross attention ---
+    if mode == "train":
+        ck = jnp.einsum("bed,dq->beq", enc_out, p["xk"]).reshape(
+            b, -1, cfg.n_kv_heads, cfg.head_dim)
+        cv = jnp.einsum("bed,dq->beq", enc_out, p["xv"]).reshape(
+            b, -1, cfg.n_kv_heads, cfg.head_dim)
+    elif mode == "prefill":
+        ck = jnp.einsum("bed,dq->beq", enc_out, p["xk"]).reshape(
+            b, -1, cfg.n_kv_heads, cfg.head_dim)
+        cv = jnp.einsum("bed,dq->beq", enc_out, p["xv"]).reshape(
+            b, -1, cfg.n_kv_heads, cfg.head_dim)
+        new_cache["ck"], new_cache["cv"] = ck, cv
+    else:
+        ck, cv = cache["ck"], cache["cv"]
+        new_cache["ck"], new_cache["cv"] = ck, cv
+    x = _cross_attend(cfg, p, x, ck, cv)
+
+    # --- MLP ---
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + D.mlp_apply(cfg, p, h2)
+    return x, (new_cache if mode != "train" else cache)
+
+
+# ---------------------------------------------------------------------------
+# whole model
+# ---------------------------------------------------------------------------
+
+
+def enc_layout(cfg):
+    return S.layout_from_kinds(("enc",) * cfg.enc_layers, 1)
+
+
+def dec_layout(cfg):
+    return S.layout_from_kinds(("dec",) * cfg.n_layers, 1)
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "enc_stack": S.stack_specs(
+            enc_layout(cfg), lambda kind: D.attn_mlp_specs(cfg, "enc")),
+        "ln_enc": ParamSpec((cfg.d_model,), (None,), cfg.dtype, "zeros"),
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), (None, "embed"),
+                           cfg.dtype),
+        "unembed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                             cfg.dtype),
+        "dec_stack": S.stack_specs(
+            dec_layout(cfg), functools.partial(dec_specs, cfg)),
+        "ln_f": ParamSpec((cfg.d_model,), (None,), cfg.dtype, "zeros"),
+    }
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    return S.stack_cache_specs(
+        dec_layout(cfg), lambda kind: dec_cache_specs(cfg, batch, max_len))
+
+
+def encode(params, frames, cfg: ArchConfig):
+    b, e, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(e, dtype=jnp.int32), (b, e))
+    apply_slot = lambda kind, p, xx, c: D.attn_mlp_apply(
+        cfg, "enc", p, xx, c, positions, "train")
+    x, _ = S.apply_stack(params["enc_stack"], frames.astype(cfg.dtype),
+                         enc_layout(cfg), apply_slot, cache=None,
+                         remat=(cfg.remat == "block"))
+    return L.rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _run_decoder(cfg, params, x, positions, cache, mode, pos, enc_out):
+    apply_slot = lambda kind, p, xx, c: dec_apply(
+        cfg, p, xx, c, positions, mode, pos, enc_out)
+    x, new_cache = S.apply_stack(params["dec_stack"], x, dec_layout(cfg),
+                                 apply_slot, cache=cache,
+                                 remat=(cfg.remat == "block"))
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps), new_cache
+
+
+def forward_train(params, batch, cfg: ArchConfig, dist=None):
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = L.embed(tokens, params["embed"])
+    x, _ = _run_decoder(cfg, params, x, positions, None, "train", None,
+                        enc_out)
+    loss = L.lm_head_loss(x[:, :-1], params["unembed"], tokens[:, 1:],
+                          batch.get("loss_mask", None), dist)
+    return loss, {"loss": loss}
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len: int, dist=None):
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    cache = C.init_cache(cache_specs(cfg, b, max_len))
+    x = L.embed(tokens, params["embed"])
+    x, cache = _run_decoder(cfg, params, x, positions, cache, "prefill",
+                            None, enc_out)
+    logits = L.unembed(x[:, -1:], params["unembed"])
+    return logits[:, 0], cache
+
+
+def decode_step(params, cache, batch, pos, cfg: ArchConfig, dist=None):
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    x = L.embed(tokens, params["embed"])
+    x, cache = _run_decoder(cfg, params, x, positions, cache, "decode",
+                            pos, None)
+    logits = L.unembed(x, params["unembed"])
+    return logits[:, 0], cache

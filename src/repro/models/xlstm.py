@@ -1,0 +1,330 @@
+"""xLSTM family: alternating mLSTM (matrix memory) and sLSTM blocks.
+
+mLSTM is evaluated in *chunked* form -- linear-attention math inside a
+chunk, a (B, H, Dk, Dv) matrix-memory state carried between chunks -- so
+train/prefill cost is O(S * chunk) and decode state is O(1) in context
+(this arch runs the long_500k cell).  Gating follows the xLSTM design
+with a simplification recorded in DESIGN.md: sigmoid input/forget gates
+(GLA-style) instead of the paper's exponential-gate + stabilizer in the
+chunked path; the sLSTM path keeps the exact stabilized exponential
+gating since it is evaluated step-recurrently anyway.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import stack as S
+from repro.models.base import ArchConfig, ParamSpec
+
+CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def mlstm_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, dt = cfg.d_model, cfg.dtype
+    di = d                      # inner width (projection factor 2 -> 2*di up)
+    h = cfg.n_heads
+    return {
+        "ln": ParamSpec((d,), (None,), dt, "zeros"),
+        "w_up": ParamSpec((d, 2 * di), ("embed", "mlp"), dt),
+        "conv_w": ParamSpec((cfg.conv_width, di), (None, "mlp"), dt),
+        "conv_b": ParamSpec((di,), ("mlp",), dt, "zeros"),
+        "w_q": ParamSpec((di, di), ("mlp", "heads"), dt),
+        "w_k": ParamSpec((di, di), ("mlp", "heads"), dt),
+        "w_v": ParamSpec((di, di), ("mlp", "heads"), dt),
+        "w_ig": ParamSpec((di, h), ("mlp", None), dt),
+        "b_ig": ParamSpec((h,), (None,), dt, "zeros"),
+        "w_fg": ParamSpec((di, h), ("mlp", None), dt),
+        # forget-gate bias init +3 => decay ~0.95: stable long memory
+        "b_fg": ParamSpec((h,), (None,), dt, "const", scale=3.0),
+        "w_down": ParamSpec((di, d), ("mlp", "embed"), dt),
+    }
+
+
+def mlstm_cache_specs(cfg: ArchConfig, batch: int) -> Dict[str, ParamSpec]:
+    di = cfg.d_model
+    h = cfg.n_heads
+    dh = di // h
+    return {
+        "mem": ParamSpec((batch, h, dh, dh), ("batch", "heads", None, None),
+                         jnp.float32, "zeros"),
+        "norm": ParamSpec((batch, h, dh), ("batch", "heads", None),
+                          jnp.float32, "zeros"),
+        "conv": ParamSpec((batch, cfg.conv_width - 1, di),
+                          ("batch", None, "mlp"), cfg.dtype, "zeros"),
+    }
+
+
+def _causal_conv(x, w, b, tail):
+    width = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+           if tail is None else tail.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return out + b, xp[:, -(width - 1):]
+
+
+def _mlstm_chunked(q, k, v, i_g, f_g, mem0, n0):
+    """Chunked gated linear attention.
+
+    q/k/v: (B, S, H, Dh); i_g/f_g: (B, S, H) in (0,1);
+    mem0: (B, H, Dh, Dh); n0: (B, H, Dh).  Returns (out, mem, n).
+    """
+    b, s, h, dh = q.shape
+    nc = -(-s // CHUNK)
+    pad = nc * CHUNK - s
+    if pad:
+        q, k, v = (jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for x in (q, k, v))
+        i_g = jnp.pad(i_g, ((0, 0), (0, pad), (0, 0)))
+        f_g = jnp.pad(f_g, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+
+    def resh(x):
+        return x.reshape(b, nc, CHUNK, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, ic, fc = map(resh, (q, k, v, i_g, f_g))
+
+    def body(carry, xs):
+        mem, n = carry                        # (B,H,Dh,Dh) f32, (B,H,Dh)
+        qb, kb, vb, ib, fb = xs               # (B,C,H,*)
+        fb = fb.astype(jnp.float32)
+        ib = ib.astype(jnp.float32)
+        logf = jnp.log(jnp.maximum(fb, 1e-6))
+        acc = jnp.cumsum(logf, axis=1)        # (B,C,H) log prod f_1..f_t
+        a_inc = jnp.exp(acc)                  # inclusive decay
+        a_tot = jnp.exp(acc[:, -1])           # (B,H)
+        qf = qb.astype(jnp.float32) * a_inc[..., None]
+        kf = kb.astype(jnp.float32) * (ib / jnp.maximum(a_inc, 1e-30)
+                                       )[..., None]
+        vf = vb.astype(jnp.float32)
+        # intra-chunk scores with causal mask
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+        mask = jnp.tril(jnp.ones((CHUNK, CHUNK), bool))
+        scores = jnp.where(mask, scores, 0.0)
+        intra = jnp.einsum("bhqk,bkhd->bqhd", scores, vf)
+        inter = jnp.einsum("bqhd,bhde->bqhe", qf, mem)
+        # mLSTM normalizer: |q . n_t| with n_t = decay*n + cumulative k mass
+        denom = jnp.sum(scores, axis=-1).swapaxes(1, 2)      # (B,C,H)
+        denom = denom + jnp.einsum("bqhd,bhd->bqh", qf, n)
+        out = (intra + inter) / jnp.maximum(
+            jnp.abs(denom)[..., None], 1.0)
+        # state update
+        kw = kb.astype(jnp.float32) * (ib * (a_tot[:, None]
+                                             / jnp.maximum(a_inc, 1e-30))
+                                       )[..., None]
+        mem_new = mem * a_tot[..., None, None] + jnp.einsum(
+            "bkhd,bkhe->bhde", kw, vf)
+        n_new = n * a_tot[..., None] + jnp.einsum("bkhd->bhd", kw)
+        return (mem_new, n_new), out
+
+    (mem, n), outs = jax.lax.scan(body, (mem0, n0), (qc, kc, vc, ic, fc))
+    out = outs.swapaxes(0, 1).reshape(b, nc * CHUNK, h, dh)[:, :s]
+    return out, mem, n
+
+
+def mlstm_apply(cfg: ArchConfig, p, x, cache, mode):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    di = d
+    dh = di // h
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", xn, p["w_up"])
+    xm, z = up[..., :di], up[..., di:]
+    tail = cache["conv"] if cache is not None else None
+    xm, new_tail = _causal_conv(xm, p["conv_w"], p["conv_b"], tail)
+    xm = jax.nn.silu(xm)
+
+    q = jnp.einsum("bse,ef->bsf", xm, p["w_q"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bse,ef->bsf", xm, p["w_k"]).reshape(b, s, h, dh) \
+        * (dh ** -0.5)
+    v = jnp.einsum("bse,ef->bsf", xm, p["w_v"]).reshape(b, s, h, dh)
+    i_g = jax.nn.sigmoid(jnp.einsum("bse,eh->bsh", xm, p["w_ig"])
+                         + p["b_ig"])
+    f_g = jax.nn.sigmoid(jnp.einsum("bse,eh->bsh", xm, p["w_fg"])
+                         + p["b_fg"])
+
+    mem0 = (cache["mem"] if cache is not None
+            else jnp.zeros((b, h, dh, dh), jnp.float32))
+    n0 = (cache["norm"] if cache is not None
+          else jnp.zeros((b, h, dh), jnp.float32))
+    out, mem, n = _mlstm_chunked(q, k, v, i_g, f_g, mem0, n0)
+
+    out = out.reshape(b, s, di).astype(x.dtype) * jax.nn.silu(z)
+    x = x + jnp.einsum("bse,ed->bsd", out, p["w_down"])
+    new_cache = (None if cache is None else
+                 {"mem": mem, "norm": n, "conv": new_tail.astype(cfg.dtype)})
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def slstm_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, dt = cfg.d_model, cfg.dtype
+    h = cfg.n_heads
+    dh = d // h
+    f_mlp = int(4 * d / 3)
+    gates = {}
+    for g in ("z", "i", "f", "o"):
+        gates[f"w_{g}"] = ParamSpec((d, d), ("embed", "mlp"), dt)
+        gates[f"r_{g}"] = ParamSpec((h, dh, dh), ("heads", None, None), dt)
+        gates[f"b_{g}"] = ParamSpec(
+            (d,), (None,), dt, "const" if g == "f" else "zeros",
+            scale=3.0 if g == "f" else 1.0)
+    return {
+        "ln": ParamSpec((d,), (None,), dt, "zeros"),
+        **gates,
+        "w_out": ParamSpec((d, d), ("mlp", "embed"), dt),
+        "ln2": ParamSpec((d,), (None,), dt, "zeros"),
+        "wg": ParamSpec((d, f_mlp), ("embed", "mlp"), dt),
+        "wu": ParamSpec((d, f_mlp), ("embed", "mlp"), dt),
+        "wd": ParamSpec((f_mlp, d), ("mlp", "embed"), dt),
+    }
+
+
+def slstm_cache_specs(cfg: ArchConfig, batch: int) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    return {k: ParamSpec((batch, d), ("batch", "mlp"), jnp.float32, "zeros")
+            for k in ("h", "c", "n", "m")}
+
+
+def _slstm_scan(xz, xi, xf, xo, p, state, n_heads):
+    """Stabilized exponential-gating sLSTM recurrence over time.
+
+    x?: (B, S, D) preactivations (input contributions); state: dict of
+    (B, D) f32.  Block-diagonal recurrent weights per head.
+    """
+    b, s, d = xz.shape
+    dh = d // n_heads
+
+    def rmat(name):
+        return p[name].astype(jnp.float32)
+
+    def step(st, xs):
+        z_x, i_x, f_x, o_x = xs               # (B, D) each
+        h, c, n, m = st["h"], st["c"], st["n"], st["m"]
+        hh = h.reshape(b, n_heads, dh)
+
+        def rec(name):
+            return jnp.einsum("bhd,hde->bhe", hh,
+                              rmat(name)).reshape(b, d)
+
+        z = jnp.tanh(z_x + rec("r_z"))
+        o = jax.nn.sigmoid(o_x + rec("r_o"))
+        i_t = i_x + rec("r_i")
+        f_t = f_x + rec("r_f")
+        # stabilizer (xLSTM eq. 15-17)
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(f_t + m - m_new)
+        c_new = f_p * c + i_p * z
+        n_new = f_p * n + i_p
+        h_new = o * (c_new / jnp.maximum(jnp.abs(n_new), 1.0))
+        return ({"h": h_new, "c": c_new, "n": n_new, "m": m_new}, h_new)
+
+    xs = tuple(x.astype(jnp.float32).swapaxes(0, 1) for x in (xz, xi, xf, xo))
+    state, hs = jax.lax.scan(step, state, xs)
+    return hs.swapaxes(0, 1), state           # (B,S,D) f32
+
+
+def slstm_apply(cfg: ArchConfig, p, x, cache, mode):
+    b, s, d = x.shape
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    pre = {g: jnp.einsum("bsd,de->bse", xn, p[f"w_{g}"]) + p[f"b_{g}"]
+           for g in ("z", "i", "f", "o")}
+    state = (cache if cache is not None else
+             {k: jnp.zeros((b, d), jnp.float32) for k in
+              ("h", "c", "n", "m")})
+    state = {k: state[k] for k in ("h", "c", "n", "m")}
+    hs, new_state = _slstm_scan(pre["z"], pre["i"], pre["f"], pre["o"],
+                                p, state, cfg.n_heads)
+    x = x + jnp.einsum("bsd,de->bse", hs.astype(x.dtype), p["w_out"])
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.gated_mlp(h2, p["wg"], p["wu"], p["wd"], act="gelu")
+    return x, (new_state if cache is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# whole model
+# ---------------------------------------------------------------------------
+
+
+def slot_specs(cfg: ArchConfig, kind: str):
+    return mlstm_specs(cfg) if kind == "mlstm" else slstm_specs(cfg)
+
+
+def slot_cache(cfg: ArchConfig, kind: str, batch: int):
+    return (mlstm_cache_specs(cfg, batch) if kind == "mlstm"
+            else slstm_cache_specs(cfg, batch))
+
+
+def layout(cfg: ArchConfig) -> S.PeriodLayout:
+    return S.layout_from_kinds(cfg.layer_kinds(), len(cfg.pattern))
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), (None, "embed"),
+                           cfg.dtype),
+        "unembed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                             cfg.dtype),
+        "stack": S.stack_specs(layout(cfg),
+                               functools.partial(slot_specs, cfg)),
+        "ln_f": ParamSpec((cfg.d_model,), (None,), cfg.dtype, "zeros"),
+    }
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    del max_len  # state size is context-independent (the ssm advantage)
+    return S.stack_cache_specs(
+        layout(cfg), lambda kind: slot_cache(cfg, kind, batch))
+
+
+def _run_stack(cfg, params, x, cache, mode):
+    def apply_slot(kind, p, xx, c):
+        if kind == "mlstm":
+            return mlstm_apply(cfg, p, xx, c, mode)
+        return slstm_apply(cfg, p, xx, c, mode)
+
+    x, new_cache = S.apply_stack(params["stack"], x, layout(cfg), apply_slot,
+                                 cache=cache, remat=(cfg.remat == "block"))
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps), new_cache
+
+
+def forward_train(params, batch, cfg: ArchConfig, dist=None):
+    tokens = batch["tokens"]
+    x = L.embed(tokens, params["embed"])
+    x, _ = _run_stack(cfg, params, x, None, "train")
+    loss = L.lm_head_loss(x[:, :-1], params["unembed"], tokens[:, 1:],
+                          batch.get("loss_mask", None), dist)
+    return loss, {"loss": loss}
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len: int, dist=None):
+    from repro.models import cache as C
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    cache = C.init_cache(cache_specs(cfg, b, max_len))
+    x = L.embed(tokens, params["embed"])
+    x, cache = _run_stack(cfg, params, x, cache, "prefill")
+    logits = L.unembed(x[:, -1:], params["unembed"])
+    return logits[:, 0], cache
+
+
+def decode_step(params, cache, batch, pos, cfg: ArchConfig, dist=None):
+    tokens = batch["tokens"]
+    x = L.embed(tokens, params["embed"])
+    x, cache = _run_stack(cfg, params, x, cache, "decode")
+    logits = L.unembed(x, params["unembed"])
+    return logits[:, 0], cache

@@ -1,0 +1,94 @@
+"""AdamW with decoupled weight decay, cosine schedule, global grad-norm
+clipping.  Optimizer moments are stored f32 regardless of param dtype;
+their logical sharding axes mirror the parameters (ZeRO-1 style: the
+mesh rules additionally shard the moments over the data axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def moment_specs(param_specs) -> Dict[str, Any]:
+    """ParamSpecs for optimizer moments (f32, same logical axes, with the
+    'zero1' marker prepended so mesh rules can shard them over data)."""
+    def f32(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(shape=s.shape, axes=s.axes, dtype=jnp.float32,
+                         init="zeros")
+    m = jax.tree_util.tree_map(
+        f32, param_specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return {"mu": m, "nu": m,
+            "step": ParamSpec((), (), jnp.int32, "zeros")}
+
+
+def init(params) -> Dict[str, Any]:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"mu": zeros, "nu": zeros, "step": jnp.zeros((), jnp.int32)}
+
+
+def schedule(step, cfg: AdamWConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def update(grads, opt_state, params,
+           cfg: AdamWConfig) -> Tuple[Any, Dict[str, Any], Dict[str, Any]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(step, cfg)
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        m_hat = mu / c1
+        v_hat = nu / c2
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    out = jax.tree_util.tree_map(upd, params, grads, opt_state["mu"],
+                                 opt_state["nu"])
+    new_params = jax.tree_util.tree_map(
+        lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree_util.tree_map(
+        lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree_util.tree_map(
+        lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

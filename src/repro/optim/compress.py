@@ -1,0 +1,54 @@
+"""Gradient compression: per-tensor int8 quantization with error
+feedback (EF-SGD style).
+
+At 1000-node scale the DP gradient all-reduce is the dominant inter-pod
+collective; int8 cuts its bytes 4x vs f32 (2x vs bf16).  Under GSPMD the
+reduction is implicit, so the compression is applied as a
+quantize-dequantize transform with a persistent error-feedback buffer --
+numerically exactly what the compressed collective computes when the
+reduction is performed on dequantized values.  The roofline model in
+benchmarks/roofline.py exposes the corresponding collective-byte what-if
+(§Perf); the EF buffer guarantees the quantization error stays bounded
+instead of accumulating (unit-tested convergence property).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_quantize_grads(grads: Any, ef: Any) -> Tuple[Any, Any]:
+    """Quantize each gradient leaf with error feedback.
+
+    Returns (dequantized grads used by the optimizer, new EF buffers).
+    """
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g)
+        dq = dequantize_int8(q, s)
+        return dq, g - dq
+
+    out = jax.tree_util.tree_map(one, grads, ef)
+    dq = jax.tree_util.tree_map(lambda t: t[0], out,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree_util.tree_map(lambda t: t[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    return dq, new_ef
+
+
+def init_ef(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

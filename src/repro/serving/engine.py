@@ -1,0 +1,81 @@
+"""Batched serving engine: prefill + greedy/temperature decode, with
+optional undervolted KV-cache domains (the EDEN-style application-level
+trade-off: KV bits ride cheap memory; the model's robustness to rare
+flips buys the paper's deep power savings)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchBundle, ArchConfig, spec_avals
+from repro.models.dist import DistContext
+from repro.training.undervolt import UndervoltPlan
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    undervolt: Optional[UndervoltPlan] = None
+
+
+def _kv_placement(bundle, cfg, batch_size, sc):
+    if sc.undervolt is None or not sc.undervolt.enabled:
+        return None
+    if "kv_cache" not in sc.undervolt.policy:
+        return None
+    cache_avals = spec_avals(
+        bundle.module.cache_specs(cfg, batch_size, sc.max_len))
+    return sc.undervolt.place({"kv_cache": cache_avals})
+
+
+def generate(bundle: ArchBundle, cfg: ArchConfig, params, batch: Dict,
+             sc: ServeConfig, dist: Optional[DistContext] = None,
+             key=None) -> jnp.ndarray:
+    """Prefill on batch['tokens'] then decode max_new_tokens greedily."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    placement = _kv_placement(bundle, cfg, b, sc)
+    fmap = sc.undervolt.fault_map() if placement is not None else None
+
+    prefill = jax.jit(lambda p, bt: bundle.module.prefill(
+        p, bt, cfg, sc.max_len, dist))
+    step = jax.jit(lambda p, c, t, pos: bundle.module.decode_step(
+        p, c, t, pos, cfg, dist))
+
+    logits, cache = prefill(params, batch)
+    pos0 = s + (cfg.enc_len if cfg.family == "vlm" else 0)
+
+    def inject_cache(c):
+        if placement is None:
+            return c
+        from repro.core.injection import inject_group
+        faulted, _ = inject_group(c, placement["kv_cache"], fmap)
+        return faulted
+
+    cache = inject_cache(cache)
+    out = []
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    def sample(lg, k):
+        if sc.temperature <= 0.0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, lg / sc.temperature).astype(
+            jnp.int32)
+
+    key, k0 = jax.random.split(key)
+    tok = sample(logits, k0)[:, None]
+    out.append(tok)
+    for i in range(sc.max_new_tokens - 1):
+        logits, cache = step(params, cache, {"tokens": tok},
+                             jnp.int32(pos0 + i))
+        cache = inject_cache(cache)
+        key, ki = jax.random.split(key)
+        tok = sample(logits, ki)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

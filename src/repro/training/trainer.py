@@ -1,0 +1,131 @@
+"""Train-step factory: microbatched grad accumulation, AdamW, optional
+undervolt plan (stuck-at injection after the optimizer write), optional
+int8+error-feedback gradient compression at the DP boundary.
+
+The returned step is a pure function (state, batch) -> (state, metrics)
+suitable for jit with in_shardings/out_shardings -- the same function the
+multi-pod dry-run lowers AOT.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchBundle, ArchConfig, spec_avals
+from repro.models.dist import DistContext
+from repro.optim import adamw
+from repro.optim.compress import ef_quantize_grads
+from repro.training.undervolt import UndervoltPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    adamw: adamw.AdamWConfig = adamw.AdamWConfig()
+    undervolt: Optional[UndervoltPlan] = None
+    grad_compression: str = "none"          # none | int8_ef
+
+
+def init_state(bundle: ArchBundle, cfg: ArchConfig, key) -> Dict[str, Any]:
+    from repro.models.base import init_params
+    params = init_params(bundle.module.param_specs(cfg), key)
+    state = {"params": params, "opt": adamw.init(params)}
+    return state
+
+
+def state_specs(bundle: ArchBundle, cfg: ArchConfig,
+                tc: Optional[TrainConfig] = None) -> Dict[str, Any]:
+    """ParamSpecs for the full train state (dry-run / sharding rules)."""
+    pspecs = bundle.module.param_specs(cfg)
+    out = {"params": pspecs, "opt": adamw.moment_specs(pspecs)}
+    if tc is not None and tc.grad_compression == "int8_ef":
+        out["ef"] = adamw.moment_specs(pspecs)["mu"]
+    return out
+
+
+def _placements(bundle, cfg, tc):
+    if tc.undervolt is None or not tc.undervolt.enabled:
+        return None
+    pspecs = bundle.module.param_specs(cfg)
+    avals = spec_avals(pspecs)
+    mspecs = spec_avals(adamw.moment_specs(pspecs))
+    groups = {"params": avals, "mu": mspecs["mu"], "nu": mspecs["nu"]}
+    return tc.undervolt.place(groups)
+
+
+def make_train_step(bundle: ArchBundle, cfg: ArchConfig,
+                    tc: TrainConfig, dist: Optional[DistContext] = None):
+    """Build the jit-able train step."""
+    module = bundle.module
+    placements = _placements(bundle, cfg, tc)
+
+    def loss_fn(params, mb):
+        loss, metrics = module.forward_train(params, mb, cfg, dist)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(state, batch):
+        params = state["params"]
+
+        if tc.microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+        else:
+            m = tc.microbatches
+
+            def resh(x):
+                b = x.shape[0]
+                assert b % m == 0, (b, m)
+                return x.reshape(m, b // m, *x.shape[1:])
+
+            mbs = jax.tree_util.tree_map(resh, batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def mb_step(acc, mb):
+                (l, _), g = grad_fn(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return acc, l
+
+            grads, losses = jax.lax.scan(mb_step, zeros, mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / m, grads)
+            loss = jnp.mean(losses)
+            metrics = {"loss": loss}
+
+        new_state = dict(state)
+        if tc.grad_compression == "int8_ef":
+            grads, new_ef = ef_quantize_grads(grads, state["ef"])
+            new_state["ef"] = new_ef
+
+        new_params, new_opt, opt_metrics = adamw.update(
+            grads, state["opt"], params, tc.adamw)
+        metrics = {**metrics, **opt_metrics}
+
+        if placements is not None:
+            groups = {"params": new_params, "mu": new_opt["mu"],
+                      "nu": new_opt["nu"]}
+            faulted, uv_metrics = tc.undervolt.apply(groups, placements)
+            new_params = faulted["params"]
+            new_opt = {**new_opt, "mu": faulted["mu"], "nu": faulted["nu"]}
+            metrics = {**metrics, **uv_metrics}
+
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        return new_state, metrics
+
+    return step
+
+
+def make_eval_loss(bundle: ArchBundle, cfg: ArchConfig,
+                   dist: Optional[DistContext] = None):
+    def eval_loss(params, batch):
+        loss, _ = bundle.module.forward_train(params, batch, cfg, dist)
+        return loss
+    return eval_loss

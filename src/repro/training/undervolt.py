@@ -1,0 +1,114 @@
+"""Undervolt plan: the paper's technique as a first-class training/serving
+feature.
+
+A plan assigns each tensor *group* (params / optimizer moments / KV
+cache) to a MemoryDomain (voltage + pseudo-channel subset + ECC).  The
+physical placement is computed once from avals; every step, groups in
+unsafe domains pass through the stuck-at injection kernel after being
+written -- exactly the semantics of storing them in undervolted HBM
+(writes to stuck bits don't take).
+
+``power_report`` integrates the calibrated power model over the domains:
+the headline numbers (1.5x guardband / up to 2.3x deep undervolt) carry
+straight through to training-step energy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.domains import GroupPlacement, MemoryDomain, place_groups
+from repro.core.faultmap import PAPER_MAP_SEED, FaultMap
+from repro.core.faultmodel import V_MIN, V_NOM
+from repro.core.hbm import HBMGeometry, TPU_V5E
+from repro.core.injection import clamp_nonfinite, inject_group
+from repro.core.voltage import DEFAULT_POWER_MODEL
+
+
+@dataclasses.dataclass(frozen=True)
+class UndervoltPlan:
+    domains: Dict[str, MemoryDomain]
+    policy: Dict[str, str]                  # tensor group -> domain name
+    geometry: HBMGeometry = TPU_V5E
+    map_seed: int = PAPER_MAP_SEED
+    mitigation: str = "none"                # none | clamp
+    enabled: bool = True
+
+    def fault_map(self) -> FaultMap:
+        return FaultMap.from_seed(self.geometry, self.map_seed)
+
+    def place(self, groups: Dict[str, Any]) -> Dict[str, GroupPlacement]:
+        return place_groups(groups, self.policy, self.domains,
+                            self.geometry)
+
+    def apply(self, groups: Dict[str, Any],
+              placements: Dict[str, GroupPlacement]):
+        """Inject each group's domain faults; returns (groups, metrics)."""
+        fmap = self.fault_map()
+        out, total_bad = {}, jnp.zeros((), jnp.int32)
+        for name, tree in groups.items():
+            faulted, bad = inject_group(tree, placements[name], fmap)
+            if self.mitigation == "clamp":
+                faulted = clamp_nonfinite(faulted)
+            out[name] = faulted
+            total_bad = total_bad + bad
+        return out, {"uncorrectable_faults": total_bad}
+
+    def power_report(self, utilization: float = 1.0) -> Dict[str, Any]:
+        """Per-domain and blended power factors vs. nominal."""
+        pm = DEFAULT_POWER_MODEL
+        per = {}
+        total_pcs = 0
+        blended = 0.0
+        for name, d in self.domains.items():
+            s = float(pm.savings(d.voltage, utilization))
+            per[name] = {"voltage": d.voltage, "savings_x": s,
+                         "pcs": len(d.pc_ids), "ecc": d.ecc,
+                         "region": ("guardband" if d.voltage >= V_MIN
+                                    else "unsafe")}
+            total_pcs += len(d.pc_ids)
+            blended += len(d.pc_ids) * float(
+                pm.power(d.voltage, utilization))
+        unused = self.geometry.num_pcs - total_pcs
+        # PCs not in any domain are powered off (capacity sacrifice).
+        blended = blended / max(total_pcs, 1)
+        nominal = float(pm.power(V_NOM, utilization))
+        return {"domains": per,
+                "pcs_powered": total_pcs,
+                "pcs_off": unused,
+                "blended_savings_x": nominal / max(blended, 1e-9)}
+
+
+def guardband_plan(geometry: HBMGeometry = TPU_V5E) -> UndervoltPlan:
+    """The zero-risk default: everything at V_min, 1.5x savings (C2)."""
+    all_pcs = tuple(range(geometry.num_pcs))
+    return UndervoltPlan(
+        domains={"safe": MemoryDomain("safe", V_MIN, all_pcs)},
+        policy={"params": "safe", "mu": "safe", "nu": "safe",
+                "kv_cache": "safe"},
+        geometry=geometry)
+
+
+def aggressive_plan(v_unsafe: float = 0.91, mitigation: str = "clamp",
+                    ecc: bool = False,
+                    geometry: HBMGeometry = TPU_V5E,
+                    map_seed: int = PAPER_MAP_SEED) -> UndervoltPlan:
+    """Three-factor trade-off in action: optimizer moments + master params
+    stay in a guardband-safe domain on the most reliable PCs; bulk
+    read-mostly tensors ride the unsafe region for extra savings."""
+    fmap = FaultMap.from_seed(geometry, map_seed)
+    order = list(fmap.usable_pcs(v_unsafe, 1.0))  # most reliable first
+    order += [p for p in range(geometry.num_pcs) if p not in order]
+    safe_pcs = tuple(int(p) for p in order[:16])
+    cheap_pcs = tuple(int(p) for p in order[16:])
+    return UndervoltPlan(
+        domains={
+            "safe": MemoryDomain("safe", V_MIN, safe_pcs),
+            "cheap": MemoryDomain("cheap", v_unsafe, cheap_pcs, ecc=ecc),
+        },
+        policy={"params": "cheap", "mu": "safe", "nu": "safe",
+                "kv_cache": "cheap"},
+        geometry=geometry, map_seed=map_seed, mitigation=mitigation)

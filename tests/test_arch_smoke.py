@@ -1,0 +1,97 @@
+"""Per-architecture smoke tests: reduced config, one train step + one
+decode step on CPU, asserting output shapes and no NaNs (assignment
+requirement (f))."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALL_ARCHS
+from repro.models.base import get_arch, init_params
+
+BATCH, SEQ = 2, 16
+
+
+def _batch(cfg, key):
+    b = {"tokens": jax.random.randint(key, (BATCH, SEQ), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        b["patches"] = jax.random.normal(
+            key, (BATCH, cfg.enc_len, cfg.frontend_dim), jnp.float32)
+    if cfg.family == "audio":
+        b["frames"] = jax.random.normal(
+            key, (BATCH, cfg.enc_len, cfg.d_model), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_smoke(arch):
+    bundle = get_arch(arch)
+    cfg = bundle.reduced
+    params = init_params(bundle.module.param_specs(cfg),
+                         jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    loss, metrics = jax.jit(
+        lambda p, b: bundle.module.forward_train(p, b, cfg))(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    grads = jax.jit(jax.grad(
+        lambda p, b: bundle.module.forward_train(p, b, cfg)[0]))(params,
+                                                                 batch)
+    gn = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+             for g in jax.tree_util.tree_leaves(grads))
+    assert jnp.isfinite(gn) and gn > 0.0, arch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_serve_smoke(arch):
+    bundle = get_arch(arch)
+    cfg = bundle.reduced
+    params = init_params(bundle.module.param_specs(cfg),
+                         jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    max_len = SEQ + 8 + (cfg.enc_len if cfg.family == "vlm" else 0)
+    logits, cache = jax.jit(
+        lambda p, b: bundle.module.prefill(p, b, cfg, max_len))(params,
+                                                                batch)
+    assert logits.shape == (BATCH, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+    pos0 = SEQ + (cfg.enc_len if cfg.family == "vlm" else 0)
+    step = jax.jit(
+        lambda p, c, t, pos: bundle.module.decode_step(
+            p, c, t, pos, cfg))
+    tok = batch["tokens"][:, -1:]
+    for i in range(2):
+        logits, cache = step(params, cache, {"tokens": tok},
+                             jnp.int32(pos0 + i))
+        assert logits.shape == (BATCH, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits))), arch
+        tok = jnp.argmax(logits, -1, keepdims=True).astype(jnp.int32)
+
+
+def test_full_configs_match_assignment():
+    """The full configs carry the exact pool numbers."""
+    import numpy as np
+    from repro.models.base import count_params
+    expect = {
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+    }
+    for arch, (nl, dm, nh, nkv, dff, voc) in expect.items():
+        cfg = get_arch(arch).cfg
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (nl, dm, nh, nkv, dff, voc), arch
+
+    # spot-check parameter counts against the names (order of magnitude)
+    n = count_params(get_arch("llama3-8b").module.param_specs(
+        get_arch("llama3-8b").cfg))
+    assert 7e9 < n < 9e9, n
+    n = count_params(get_arch("deepseek-v2-236b").module.param_specs(
+        get_arch("deepseek-v2-236b").cfg))
+    assert 2.0e11 < n < 2.6e11, n

@@ -1,0 +1,130 @@
+"""Per-kernel tests: bitflip Pallas kernel vs. pure-jnp oracle.
+
+The kernel runs in interpret mode on CPU; parity with ref.py is exact
+(integer equality), per the guide's kernel-testing contract.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.faultmap import PAPER_MAP_SEED, FaultMap
+from repro.core.hbm import VCU128
+from repro.kernels.bitflip import ops
+
+FMAP = FaultMap.from_seed(VCU128, seed=PAPER_MAP_SEED)
+
+
+def _bits(x):
+    """Bit-pattern view for comparisons (NaN-safe)."""
+    return np.asarray(jax.lax.bitcast_convert_type(
+        x, {2: jnp.uint16, 4: jnp.uint32, 1: jnp.uint8}[x.dtype.itemsize]))
+
+
+@pytest.mark.parametrize("shape", [(64,), (1000, 7), (16, 8, 33), (4095,),
+                                   (4096,), (4097,), (3, 1, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+@pytest.mark.parametrize("method", ["word", "bitwise"])
+def test_kernel_matches_ref(shape, dtype, method):
+    thr = FMAP.thresholds(0.86 if method == "bitwise" else 0.90, pc=4)
+    if jnp.issubdtype(dtype, jnp.floating):
+        x = jnp.asarray(np.random.RandomState(0).rand(*shape), dtype)
+    else:
+        x = jnp.asarray(np.random.RandomState(0).randint(-100, 100, shape),
+                        dtype)
+    y_kernel = ops.inject(x, thresholds=thr, seed=11, base_word=8192,
+                          method=method)
+    y_ref = ops.inject(x, thresholds=thr, seed=11, base_word=8192,
+                       method=method, use_ref=True)
+    assert y_kernel.shape == x.shape and y_kernel.dtype == x.dtype
+    np.testing.assert_array_equal(_bits(y_kernel), _bits(y_ref))
+
+
+def test_word_path_rate_matches_model():
+    thr = FMAP.thresholds(0.90, pc=18)
+    n = 1 << 21
+    z = jnp.zeros((n,), jnp.uint32)
+    out = ops.inject_u32(z, thresholds=thr, seed=3)
+    observed = float(jnp.sum(jax.lax.population_count(out))) / (n * 32)
+    expected = float(FMAP.pc_rates(0.90)[0][18])  # 0->1 on zeros
+    assert observed == pytest.approx(expected, rel=0.25)
+
+
+def test_bitwise_path_rate_matches_model():
+    thr = FMAP.thresholds(0.88, pc=4)
+    n = 1 << 20
+    z = jnp.zeros((n,), jnp.uint32)
+    out = ops.inject_u32(z, thresholds=thr, seed=3, method="bitwise")
+    observed = float(jnp.sum(jax.lax.population_count(out))) / (n * 32)
+    expected = float(FMAP.pc_rates(0.88)[0][4])
+    assert observed == pytest.approx(expected, rel=0.15)
+
+
+def test_asymmetry_observed():
+    # C6: more 0->1 than 1->0 flips at the same voltage.
+    thr = FMAP.thresholds(0.88, pc=4)
+    n = 1 << 20
+    zeros = jnp.zeros((n,), jnp.uint32)
+    ones = jnp.full((n,), np.uint32(0xFFFFFFFF))
+    f01 = float(jnp.sum(jax.lax.population_count(
+        ops.inject_u32(zeros, thresholds=thr, seed=3, method="bitwise"))))
+    f10 = float(jnp.sum(jax.lax.population_count(
+        ops.inject_u32(ones, thresholds=thr, seed=3, method="bitwise")
+        ^ ones)))
+    assert f01 / f10 == pytest.approx(1.21, rel=0.1)
+
+
+def test_persistent_across_calls():
+    thr = FMAP.thresholds(0.89, pc=7)
+    x = jnp.asarray(np.random.RandomState(5).rand(4096 * 2), jnp.float32)
+    a = ops.inject(x, thresholds=thr, seed=9, base_word=4096)
+    b = ops.inject(x, thresholds=thr, seed=9, base_word=4096)
+    np.testing.assert_array_equal(_bits(a), _bits(b))
+
+
+@pytest.mark.parametrize("method,volts", [
+    ("word", (0.93, 0.91, 0.89, 0.87)),
+    ("bitwise", (0.89, 0.87, 0.85)),
+])
+def test_monotone_fault_sets_in_voltage(method, volts):
+    """Stuck bits at a higher voltage stay stuck at every lower voltage.
+
+    Guaranteed within one injection method (the two methods use
+    independent random streams, so crossing the auto-dispatch boundary
+    reshuffles identities while preserving rates -- documented behavior).
+    """
+    n = 1 << 19
+    zeros = jnp.zeros((n,), jnp.uint32)
+    prev = np.zeros((n,), np.uint32)
+    for v in volts:
+        thr = FMAP.thresholds(v, pc=19)
+        out = np.asarray(ops.inject_u32(zeros, thresholds=thr, seed=1,
+                                        method=method))
+        assert (prev & ~out).sum() == 0, f"fault lost going down to {v}"
+        prev = out
+
+
+def test_clustering_observed():
+    """C9: faults concentrate in weak rows."""
+    thr = FMAP.thresholds(0.90, pc=20)
+    n = 1 << 20
+    z = jnp.zeros((n,), jnp.uint32)
+    out = np.asarray(ops.inject_u32(z, thresholds=thr, seed=2))
+    words_per_row = 1 << thr.words_per_row_log2
+    per_row = out.reshape(-1, words_per_row)
+    row_has_fault = (per_row != 0).any(axis=1)
+    faults_per_row = np.unpackbits(
+        per_row.view(np.uint8), axis=1).sum(axis=1)
+    # the top 10% of rows should hold the large majority of the faults
+    top = np.sort(faults_per_row)[::-1]
+    k = max(1, int(0.1 * len(top)))
+    assert top[:k].sum() > 0.7 * top.sum()
+    assert row_has_fault.mean() < 0.3
+
+
+def test_different_seeds_differ():
+    thr = FMAP.thresholds(0.89, pc=7)
+    z = jnp.zeros((1 << 18,), jnp.uint32)
+    a = ops.inject_u32(z, thresholds=thr, seed=1)
+    b = ops.inject_u32(z, thresholds=thr, seed=2)
+    assert not bool(jnp.all(a == b))

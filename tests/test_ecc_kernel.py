@@ -1,0 +1,60 @@
+"""Per-kernel tests: fused inject+ECC kernel vs. oracle + behavior."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.faultmap import PAPER_MAP_SEED, FaultMap
+from repro.core.hbm import VCU128
+from repro.kernels.bitflip import ops as bops
+from repro.kernels.ecc import ops as eops
+
+FMAP = FaultMap.from_seed(VCU128, seed=PAPER_MAP_SEED)
+
+
+@pytest.mark.parametrize("n", [4096, 8192, 70000, 100])
+@pytest.mark.parametrize("v", [0.93, 0.90, 0.88])
+def test_kernel_matches_ref(n, v):
+    thr = FMAP.thresholds(v, pc=5)
+    x = jnp.asarray(np.random.RandomState(1).randint(
+        0, 2**31, size=n, dtype=np.int64).astype(np.uint32))
+    k, badk = eops.inject_and_correct_u32(x, thresholds=thr, seed=5)
+    r, badr = eops.inject_and_correct_u32(x, thresholds=thr, seed=5,
+                                          use_ref=True)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+    assert int(badk) == int(badr)
+
+
+def test_ecc_corrects_most_faults():
+    """SECDED removes all single-bit-per-codeword faults; in the word-path
+    regime nearly every faulty codeword has exactly one stuck bit."""
+    thr = FMAP.thresholds(0.89, pc=18)
+    n = 1 << 20
+    x = jnp.zeros((n,), jnp.uint32)
+    raw = bops.inject_u32(x, thresholds=thr, seed=5)
+    corrected, bad = eops.inject_and_correct_u32(x, thresholds=thr, seed=5)
+    raw_faults = int(jnp.sum(raw != x))
+    residual = int(jnp.sum(corrected != x))
+    assert raw_faults > 50
+    assert residual < raw_faults * 0.2
+    # residual faulty words come only from uncorrectable codewords
+    assert residual <= 2 * int(bad)
+
+
+def test_guardband_noop():
+    thr = FMAP.thresholds(1.0, pc=0)
+    x = jnp.asarray(np.arange(8192), jnp.uint32)
+    out, bad = eops.inject_and_correct_u32(x, thresholds=thr, seed=5)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+    assert int(bad) == 0
+
+
+def test_uncorrectable_grows_with_depth():
+    n = 1 << 19
+    x = jnp.zeros((n,), jnp.uint32)
+    bads = []
+    for v in (0.90, 0.88, 0.86):
+        thr = FMAP.thresholds(v, pc=18)
+        _, bad = eops.inject_and_correct_u32(x, thresholds=thr, seed=5)
+        bads.append(int(bad))
+    assert bads[0] <= bads[1] <= bads[2]
+    assert bads[2] > bads[0]

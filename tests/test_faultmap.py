@@ -1,0 +1,83 @@
+"""Unit tests: fault-map synthesis (process variation + clustering)."""
+import numpy as np
+import pytest
+
+from repro.core.faultmap import PAPER_MAP_SEED, FaultMap
+from repro.core.hbm import TPU_V5E, VCU128
+
+
+@pytest.fixture(scope="module")
+def fmap():
+    return FaultMap.from_seed(VCU128, seed=PAPER_MAP_SEED)
+
+
+def test_deterministic(fmap):
+    again = FaultMap.from_seed(VCU128, seed=PAPER_MAP_SEED)
+    assert again.pc_multiplier == fmap.pc_multiplier
+
+
+def test_stack_skew(fmap):
+    # C7: HBM1's mean fault rate above HBM0's in the unsafe region, while
+    # V_min / V_critical (the saturation regime) stay shared.
+    r0 = fmap.stack_mean_rate(0.92, 0)
+    r1 = fmap.stack_mean_rate(0.92, 1)
+    assert r1 > r0
+    assert r1 / r0 == pytest.approx(1.13, abs=0.15)
+    # same collapse behavior for both stacks
+    assert fmap.stack_mean_rate(0.83, 0) == pytest.approx(
+        fmap.stack_mean_rate(0.83, 1), rel=0.01)
+
+
+def test_hot_pcs_are_more_sensitive(fmap):
+    # C8: the paper's named hot PCs sit well above the median.
+    total = fmap.pc_total_rate(0.92)
+    median = float(np.median(total))
+    hot = [total[pc] for pc in (4, 5, 18, 19, 20)]
+    assert all(h > 1.3 * median for h in hot)
+    assert np.mean(hot) > 3.0 * median
+
+
+def test_guardband_fault_free(fmap):
+    assert fmap.pc_total_rate(0.98).max() == 0.0
+    assert fmap.num_usable_pcs(0.98, 0.0) == 32
+
+
+def test_fig6_anchor_points(fmap):
+    # Fig. 6 worked examples from section III-C.
+    assert fmap.num_usable_pcs(0.95, 0.0) == pytest.approx(7, abs=2)
+    assert fmap.num_usable_pcs(0.90, 1e-6) == pytest.approx(16, abs=3)
+    # at collapse voltages nothing is usable at any practical tolerance
+    assert fmap.num_usable_pcs(0.83, 0.01) == 0
+
+
+def test_usable_pcs_monotone(fmap):
+    for tol in (0.0, 1e-8, 1e-6, 1e-4):
+        prev = 33
+        for v in (0.97, 0.95, 0.93, 0.91, 0.89, 0.87, 0.85):
+            n = fmap.num_usable_pcs(v, tol)
+            assert n <= prev, (v, tol)
+            prev = n
+    # looser tolerance never shrinks the usable set
+    for v in (0.95, 0.92, 0.89):
+        assert (fmap.num_usable_pcs(v, 1e-6)
+                <= fmap.num_usable_pcs(v, 1e-4))
+
+
+def test_clustering_mass_preserving(fmap):
+    weak, strong = fmap.row_multipliers()
+    f = fmap.weak_row_frac
+    assert f * weak + (1 - f) * strong == pytest.approx(1.0, rel=1e-9)
+    assert weak > 10.0  # faults really are concentrated (C9)
+
+
+def test_thresholds_monotone_in_voltage(fmap):
+    t_hi = fmap.thresholds(0.93, pc=3)
+    t_lo = fmap.thresholds(0.91, pc=3)
+    assert t_lo.q01_weak >= t_hi.q01_weak
+    assert t_lo.q10_strong >= t_hi.q10_strong
+
+
+def test_v5e_geometry_scales():
+    m = FaultMap.from_seed(TPU_V5E, seed=0)
+    assert m.geometry.total_bytes == 16 * 2**30
+    assert m.geometry.num_pcs == 32

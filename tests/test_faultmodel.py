@@ -1,0 +1,89 @@
+"""Unit tests: the calibrated fault model reproduces the paper's anchors."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import pytest
+
+from repro.core.faultmodel import (DEFAULT_FAULT_MODEL as M, V_ALL_FAULTY,
+                                   V_CRITICAL, V_MIN, V_NOM, V_ONSET_01,
+                                   V_ONSET_10)
+
+
+def test_guardband_is_19_percent():
+    assert M.guardband_fraction() == pytest.approx(0.19, abs=0.005)
+
+
+def test_guardband_zero_faults():
+    # C1: no faults anywhere in [V_min, V_nom].
+    for v in [round(V_MIN + 0.01 * i, 4) for i in range(23)]:
+        assert float(M.stuck_fraction(v)) == 0.0, v
+
+
+def test_fault_onsets():
+    # C4: first 1->0 flips at 0.97 V, first 0->1 flips at 0.96 V.
+    assert float(M.rate_10(V_ONSET_10)) > 0.0
+    assert float(M.rate_01(V_ONSET_10)) < float(M.rate_10(V_ONSET_10)) * 1e-3
+    assert float(M.rate_01(V_ONSET_01)) > 0.0
+    # The onset rate is a detection-floor rate: ~10 bits in 8 GB.
+    bits_8gb = 8 * 2**30 * 8
+    assert 1.0 < float(M.rate_10(V_ONSET_10)) * bits_8gb < 100.0
+
+
+def test_asymmetry_21_percent():
+    # C6: 0->1 flips 21% more frequent than 1->0 in the exponential regime.
+    for v in (0.96, 0.94, 0.92, 0.90, 0.88):
+        ratio = float(M.rate_01(v)) / float(M.rate_10(v))
+        assert ratio == pytest.approx(1.21, rel=0.02), v
+
+
+def test_exponential_growth():
+    # C5: each 10 mV step multiplies the rate by a constant factor.
+    rates = [float(M.rate_10(round(0.97 - 0.01 * i, 4))) for i in range(6)]
+    factors = [rates[i + 1] / rates[i] for i in range(5)]
+    for f in factors:
+        assert f == pytest.approx(factors[0], rel=0.02)
+    assert factors[0] > 2.0  # genuinely exponential
+
+
+def test_all_faulty_region():
+    # C5: essentially all bits faulty between 0.84 and V_critical.
+    for v in (V_ALL_FAULTY, 0.83, 0.82, V_CRITICAL):
+        assert float(M.stuck_fraction(v)) > 0.99, v
+
+
+def test_alpha_drop_14_percent_at_085():
+    # C3 / Fig. 3: active capacitance 14% below nominal at 0.85 V.
+    assert 1.0 - float(M.alpha_factor(0.85)) == pytest.approx(0.14, abs=0.01)
+    # And within 3% of nominal anywhere in the guardband.
+    assert float(M.alpha_factor(0.98)) == pytest.approx(1.0, abs=0.03)
+
+
+def test_regions():
+    assert M.region(V_NOM) == "guardband"
+    assert M.region(0.99) == "guardband"
+    assert M.region(0.95) == "unsafe"
+    assert M.region(0.83) == "all_faulty"
+    assert M.region(0.80) == "crash"
+
+
+@hypothesis.given(
+    v1=st.floats(min_value=V_CRITICAL, max_value=V_NOM),
+    v2=st.floats(min_value=V_CRITICAL, max_value=V_NOM),
+    mult=st.floats(min_value=0.01, max_value=100.0),
+)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_rates_monotone_in_voltage(v1, v2, mult):
+    """Lower voltage never has fewer faults (guardband invariant)."""
+    lo, hi = min(v1, v2), max(v1, v2)
+    assert float(M.stuck_fraction(lo, mult)) >= float(
+        M.stuck_fraction(hi, mult)) - 1e-12
+
+
+@hypothesis.given(v=st.floats(min_value=V_CRITICAL, max_value=V_NOM),
+                  mult=st.floats(min_value=0.01, max_value=1000.0))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_rates_are_probabilities(v, mult):
+    r01, r10 = M.rates(v, mult)
+    assert 0.0 <= float(r01) <= 1.0
+    assert 0.0 <= float(r10) <= 1.0
+    assert float(r01) + float(r10) <= 1.0 + 1e-6

@@ -1,0 +1,58 @@
+"""Unit tests: the power model reproduces the paper's headline numbers."""
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.faultmodel import V_CRITICAL, V_MIN, V_NOM
+from repro.core.voltage import DEFAULT_POWER_MODEL as P, P_IDLE_FRAC
+
+
+def test_guardband_savings_1_5x():
+    # C2: 1.5x power savings at the bottom of the guardband.
+    assert float(P.savings(V_MIN)) == pytest.approx(1.5, abs=0.01)
+
+
+def test_deep_undervolt_savings_2_3x():
+    # C3: 2.3x total savings at 0.85 V.
+    assert float(P.savings(0.85)) == pytest.approx(2.3, abs=0.05)
+
+
+def test_savings_independent_of_utilization():
+    # C2: "the amount of power savings is independent of the bandwidth
+    # utilization" -- undervolting does not touch bandwidth.
+    base = float(P.savings(V_MIN, 1.0))
+    for util in (0.0, 0.25, 0.5, 0.75):
+        assert float(P.savings(V_MIN, util)) == pytest.approx(base, rel=1e-5)
+    base85 = float(P.savings(0.85, 1.0))
+    for util in (0.0, 0.5):
+        assert float(P.savings(0.85, util)) == pytest.approx(base85, rel=1e-5)
+
+
+def test_idle_power_one_third():
+    # C10: idle HBM burns ~1/3 of full-load power.
+    assert float(P.power(V_NOM, 0.0)) == pytest.approx(P_IDLE_FRAC, rel=1e-6)
+    assert float(P.power(V_NOM, 1.0)) == pytest.approx(1.0, rel=1e-6)
+
+
+def test_alpha_clf_flat_in_guardband_drops_below():
+    # Fig. 3: alpha*C_L*f within 3% of nominal above 0.98 V, ~14% lower
+    # at 0.85 V.
+    for v in (1.2, 1.1, 1.0, 0.98):
+        assert float(P.alpha_clf(v)) == pytest.approx(1.0, abs=0.03)
+    assert 1.0 - float(P.alpha_clf(0.85)) == pytest.approx(0.14, abs=0.01)
+
+
+@hypothesis.given(v=st.floats(min_value=V_CRITICAL, max_value=V_NOM),
+                  util=st.floats(min_value=0.0, max_value=1.0))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_power_monotone_in_voltage_and_util(v, util):
+    assert float(P.power(v, util)) <= float(P.power(V_NOM, util)) + 1e-9
+    assert float(P.power(v, util)) <= float(P.power(v, 1.0)) + 1e-9
+    assert float(P.power(v, util)) > 0.0
+
+
+def test_quadratic_scaling_in_guardband():
+    # Eq. (1): pure V^2 inside the guardband (no stuck bits).
+    for v in (1.1, 1.05, 1.0, 0.98):
+        expected = (v / V_NOM) ** 2
+        assert float(P.power(v, 1.0)) == pytest.approx(expected, rel=1e-5)

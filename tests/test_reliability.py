@@ -1,0 +1,65 @@
+"""Integration tests: Algorithm 1 reliability tester on the fault model."""
+import numpy as np
+import pytest
+
+from repro.core import reliability as rel
+from repro.core.faultmap import PAPER_MAP_SEED, FaultMap
+from repro.core.hbm import VCU128
+
+FMAP = FaultMap.from_seed(VCU128, seed=PAPER_MAP_SEED)
+MEM_WORDS = 1 << 18  # scaled-down memSize (1 MiB per test array)
+
+
+def test_guardband_sweep_no_faults():
+    res = rel.sweep(FMAP, pcs=[0, 18], mem_words=MEM_WORDS,
+                    v_grid=[1.2, 1.1, 1.0, 0.98], method="word")
+    for v, results in res.items():
+        for r in results:
+            assert r.fault_counts == (0,), (v, r.pc)
+
+
+def test_fault_counts_grow_as_voltage_drops():
+    counts = []
+    for v in (0.92, 0.90, 0.88, 0.86):
+        r = rel.run_pc_test(FMAP, v, pc=19, mem_words=MEM_WORDS,
+                            pattern=rel.ALL_ZEROS, method="auto")
+        counts.append(r.fault_counts[0])
+    assert counts == sorted(counts)
+    assert counts[-1] > counts[0] > 0
+
+
+def test_pattern_asymmetry():
+    # 0->1 flips (zeros pattern) outnumber 1->0 flips (ones pattern).
+    z = rel.run_pc_test(FMAP, 0.88, pc=19, mem_words=MEM_WORDS,
+                        pattern=rel.ALL_ZEROS)
+    o = rel.run_pc_test(FMAP, 0.88, pc=19, mem_words=MEM_WORDS,
+                        pattern=rel.ALL_ONES)
+    assert z.fault_counts[0] > o.fault_counts[0]
+
+
+def test_batches_consistent_without_transients():
+    r = rel.run_pc_test(FMAP, 0.89, pc=4, mem_words=MEM_WORDS,
+                        batch_size=3)
+    assert len(set(r.fault_counts)) == 1
+
+
+def test_transient_noise_varies_batches():
+    r = rel.run_pc_test(FMAP, 0.89, pc=4, mem_words=MEM_WORDS,
+                        batch_size=3, transient_rate=1e-5, seed=7)
+    assert len(set(r.fault_counts)) > 1
+
+
+def test_observed_rate_matches_model():
+    v, pc = 0.88, 18
+    r = rel.run_pc_test(FMAP, v, pc=pc, mem_words=MEM_WORDS,
+                        pattern=rel.ALL_ZEROS)
+    observed = rel.observed_rate(r)
+    expected = float(FMAP.pc_rates(v)[0][pc])
+    assert observed == pytest.approx(expected, rel=0.2)
+
+
+def test_all_faulty_region():
+    r = rel.run_pc_test(FMAP, 0.83, pc=0, mem_words=1 << 14,
+                        pattern=rel.ALL_ZEROS, method="bitwise")
+    # essentially every 0 flipped to 1 in the 0->1 share of cells
+    assert rel.observed_rate(r) > 0.4

@@ -1,0 +1,95 @@
+"""Unit + property tests for the sharding-rule resolution logic (pure
+logic over ParamSpecs -- no devices needed beyond the default one)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ALL_ARCHS
+from repro.launch.sharding import ShardingRules, resolve_spec
+from repro.models.base import ParamSpec, get_arch
+
+
+class FakeMesh:
+    """Shape-only stand-in (resolve_spec touches shape/axis_names only)."""
+
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+RULES = ShardingRules.default()
+
+
+def test_basic_2d_weight():
+    s = ParamSpec((4096, 14336), ("embed", "mlp"))
+    assert resolve_spec(s, RULES, MESH) == P("data", "model")
+
+
+def test_divisibility_fallback():
+    # internvl2 vocab 92553 is not 16-divisible -> replicated
+    s = ParamSpec((92553, 2048), ("vocab", "embed"))
+    assert resolve_spec(s, RULES, MESH) == P(None, "data")
+
+
+def test_no_axis_reuse():
+    s = ParamSpec((64, 64, 64), ("kv_heads", "head_dim", None))
+    spec = resolve_spec(s, RULES, MESH)
+    assert spec == P("model", None, None)  # head_dim can't reuse model
+
+
+def test_batch_axes_multi_pod():
+    s = ParamSpec((256, 4096), ("batch", None))
+    assert resolve_spec(s, RULES, MESH3) == P(("pod", "data"), None)
+    s1 = ParamSpec((1, 4096), ("batch", None))
+    assert resolve_spec(s1, RULES, MESH3) == P(None, None)
+
+
+def test_long_context_overrides():
+    r = ShardingRules.default(long_context=True)
+    s = ParamSpec((1, 524288, 4, 256),
+                  ("batch", "cache_seq", "kv_heads", "head_dim"))
+    spec = resolve_spec(s, r, MESH)
+    assert spec == P(None, "data", None, "model")
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_every_arch_resolves(arch):
+    """Every parameter of every arch gets a legal PartitionSpec: no
+    repeated mesh axes, all sharded dims divisible."""
+    bundle = get_arch(arch)
+    specs = bundle.module.param_specs(bundle.cfg)
+    flat = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    for s in flat:
+        spec = resolve_spec(s, RULES, MESH3)
+        used = []
+        for dim, assign in zip(s.shape, tuple(spec) + (None,) * 8):
+            if assign is None:
+                continue
+            names = (assign,) if isinstance(assign, str) else assign
+            for n in names:
+                assert n not in used, (arch, s)
+                used.append(n)
+            size = int(np.prod([MESH3.shape[n] for n in names]))
+            assert dim % size == 0, (arch, s, spec)
+
+
+@hypothesis.given(
+    dim=st.integers(min_value=1, max_value=8192),
+    logical=st.sampled_from(["vocab", "embed", "heads", "mlp", "batch",
+                             "kv_heads", "experts"]),
+)
+@hypothesis.settings(max_examples=80, deadline=None)
+def test_resolution_never_breaks_divisibility(dim, logical):
+    s = ParamSpec((dim,), (logical,))
+    spec = resolve_spec(s, RULES, MESH)
+    assign = spec[0]
+    if assign is not None:
+        names = (assign,) if isinstance(assign, str) else assign
+        size = int(np.prod([MESH.shape[n] for n in names]))
+        assert dim % size == 0

@@ -1,0 +1,89 @@
+"""Unit tests: the three-factor trade-off solver (paper section III-C)."""
+import numpy as np
+import pytest
+
+from repro.core.faultmap import PAPER_MAP_SEED, FaultMap
+from repro.core.hbm import VCU128
+from repro.core.tradeoff import TradeoffSolver, voltage_grid
+
+FMAP = FaultMap.from_seed(VCU128, seed=PAPER_MAP_SEED)
+SOLVER = TradeoffSolver(FMAP)
+
+
+def test_voltage_grid_is_papers_sweep():
+    g = voltage_grid()
+    assert g[0] == 1.2 and g[-1] == 0.81
+    assert len(g) == 40
+    assert np.allclose(np.diff(g), -0.01)
+
+
+def test_zero_tolerance_full_capacity_needs_guardband():
+    # "Applications that cannot tolerate any faults and need the entire
+    #  8GB are restricted to the guardband region" -> 1.5x at 0.98 V.
+    p = SOLVER.solve(VCU128.total_bytes, 0.0)
+    assert p.voltage == pytest.approx(0.98)
+    assert p.savings == pytest.approx(1.5, abs=0.01)
+    assert len(p.pc_ids) == 32
+    assert p.worst_pc_rate == 0.0
+
+
+def test_zero_tolerance_small_capacity_goes_deeper():
+    # "up to 1.6X power savings ... by using only 7 fault-free PCs
+    #  operating at 0.95V."
+    p = SOLVER.solve(7 * VCU128.bytes_per_pc, 0.0)
+    assert p.voltage <= 0.96
+    assert p.savings >= 1.55
+    assert p.worst_pc_rate * VCU128.bits_per_pc < 1.0
+
+
+def test_half_capacity_1e6_rate():
+    # "an application that can tolerate a 1e-6 fault rate and requires
+    #  only half of the total memory capacity can push the voltage down
+    #  to ~0.90V and save power by a factor of about 1.8X."
+    p = SOLVER.solve(VCU128.total_bytes // 2, 1e-6)
+    assert p.voltage == pytest.approx(0.90, abs=0.015)
+    assert p.savings == pytest.approx(1.8, abs=0.1)
+
+
+def test_deep_savings_with_capacity_sacrifice():
+    # "2.3X power savings is possible by sacrificing some memory space
+    #  while the remaining memory space can work with 0% to 50% fault
+    #  rate" -- at 0.85 V some PCs are below a 50% rate.
+    p = SOLVER.point(0.85, 0.5, VCU128.bytes_per_pc)
+    if p is not None:
+        assert p.savings == pytest.approx(2.3, abs=0.06)
+
+
+def test_infeasible_raises():
+    with pytest.raises(ValueError):
+        SOLVER.solve(VCU128.total_bytes * 2, 0.0)
+
+
+def test_solution_monotonicity():
+    """Looser constraints never yield worse savings (solver invariant)."""
+    s_strict = SOLVER.solve(VCU128.total_bytes, 0.0).savings
+    s_cap = SOLVER.solve(VCU128.total_bytes // 2, 0.0).savings
+    s_rate = SOLVER.solve(VCU128.total_bytes, 1e-4).savings
+    assert s_cap >= s_strict - 1e-9
+    assert s_rate >= s_strict - 1e-9
+
+
+def test_fig6_matrix_shape_and_monotonicity():
+    rates = [0.0, 1e-7, 1e-5, 1e-3]
+    m = SOLVER.fig6_matrix(rates)
+    grid = voltage_grid()
+    for t in rates:
+        assert len(m[t]) == len(grid)
+    # at every voltage, a looser tolerance admits >= as many PCs
+    for i in range(len(grid)):
+        col = [m[t][i] for t in rates]
+        assert col == sorted(col)
+
+
+def test_pareto_frontier():
+    pts = SOLVER.pareto(1e-6)
+    # savings grow as voltage drops; capacity shrinks (or holds)
+    for a, b in zip(pts, pts[1:]):
+        assert b.voltage < a.voltage
+        assert b.savings >= a.savings
+        assert b.capacity_bytes <= a.capacity_bytes
