@@ -9,14 +9,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine, injection
+from repro.core.domains import MemoryDomain, place_groups
 from repro.core.faultmap import PAPER_MAP_SEED, FaultMap
-from repro.core.hbm import VCU128
+from repro.core.hbm import VCU128, HBMGeometry
 from repro.kernels.bitflip import ops as bops
 from repro.kernels.ecc import ops as eops
 from repro.kernels.flash_attention import ops as fops
 from repro.kernels.rglru import ops as rops
 
 FMAP = FaultMap.from_seed(VCU128, seed=PAPER_MAP_SEED)
+
+# Small-PC geometry for the arena rows: a multi-leaf domain spanning
+# several pseudo-channels, the case the legacy path paid O(segments)
+# launches for.  Shared with voltage_sweep.py so both benchmarks
+# measure the same workload.
+ARENA_GEOM = HBMGeometry(name="bench", num_stacks=2, channels_per_stack=2,
+                         pcs_per_channel=2, bytes_per_pc=1024 * 1024)
+ARENA_FMAP = FaultMap.from_seed(ARENA_GEOM, seed=7)
+
+
+def arena_tree():
+    """The multi-leaf (~640k-word) tensor group used by the arena rows."""
+    rng = np.random.RandomState(0)
+    return {"w": jnp.asarray(rng.rand(1 << 19), jnp.float32),
+            "kv": jnp.asarray(rng.rand(64, 4096), jnp.bfloat16)}
 
 
 def _time(fn, *args, reps=3, **kw):
@@ -43,6 +60,32 @@ def run():
     us = _time(eops.inject_and_correct_u32, x, thresholds=thr, seed=1)
     rows.append({"name": "ecc_fused_1M_words", "us_per_call": us,
                  "derived": f"hbm_rw_bytes={2*4*n}"})
+
+    # Arena engine: one fused launch per domain, thresholds as runtime
+    # data (voltage sweeps recompile nothing).
+    tree = arena_tree()
+    for ecc in (False, True):
+        domains = {"d": MemoryDomain("d", 0.90, tuple(range(6)), ecc=ecc)}
+        placement = place_groups({"g": tree}, {"g": "d"}, domains,
+                                 ARENA_GEOM)["g"]
+        n_segments = sum(len(l.segments) for l in placement.leaves)
+        inject = jax.jit(lambda t, v, p=placement: injection.inject_group(
+            t, p, ARENA_FMAP, voltage=v, method="word")[0])
+        legacy = jax.jit(lambda t, p=placement: injection.inject_group(
+            t, p, ARENA_FMAP, method="word", engine="segments")[0])
+        launches = engine.count_pallas_calls(jax.make_jaxpr(
+            lambda t: injection.inject_group(
+                t, placement, ARENA_FMAP, method="word"))(tree).jaxpr)
+        tag = "ecc" if ecc else "word"
+        us = _time(inject, tree, jnp.float32(0.90))
+        rows.append({"name": f"arena_{tag}_domain_640k_words",
+                     "us_per_call": us,
+                     "derived": (f"launches_per_domain={launches};"
+                                 f"legacy_launches={n_segments}")})
+        us = _time(legacy, tree)
+        rows.append({"name": f"legacy_{tag}_domain_640k_words",
+                     "us_per_call": us,
+                     "derived": f"launches_per_domain={n_segments}"})
 
     q = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 1024, 128),
                           jnp.bfloat16)

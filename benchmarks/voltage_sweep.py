@@ -1,0 +1,67 @@
+"""Zero-recompile voltage sweep: the arena engine's headline property.
+
+The paper's methodology is a 10 mV-step voltage sweep (Figs. 4-6); with
+the legacy per-segment path every sweep point retraced and recompiled
+the injection kernels (thresholds were static jit arguments).  The arena
+engine folds the voltage->threshold synthesis into the trace, so one
+compiled function serves the whole sweep.  This benchmark runs a jitted
+sweep over a multi-leaf, multi-PC domain, *asserts* trace-count == 1 and
+launches-per-domain == 1, and reports per-point execution time.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # run as a package module (python -m benchmarks.run) ...
+    from benchmarks.kernel_bench import (ARENA_FMAP as FMAP,
+                                         ARENA_GEOM as GEOM, arena_tree)
+except ImportError:  # ... or as a file (python benchmarks/voltage_sweep.py)
+    from kernel_bench import (ARENA_FMAP as FMAP, ARENA_GEOM as GEOM,
+                              arena_tree)
+from repro.core import engine, injection
+from repro.core.domains import MemoryDomain, place_groups
+
+VOLTAGES = (0.93, 0.92, 0.91, 0.90, 0.89)
+
+
+def run():
+    tree = arena_tree()
+    domains = {"cheap": MemoryDomain("cheap", 0.91, tuple(range(6)))}
+    placement = place_groups({"g": tree}, {"g": "cheap"}, domains, GEOM)["g"]
+
+    traces = []
+
+    @jax.jit
+    def sweep_point(t, v):
+        traces.append(1)
+        out, _ = injection.inject_group(t, placement, FMAP, voltage=v,
+                                        method="word")
+        return out
+
+    jaxpr = jax.make_jaxpr(lambda t: injection.inject_group(
+        t, placement, FMAP, method="word"))(tree)
+    launches = engine.count_pallas_calls(jaxpr.jaxpr)
+    assert launches == 1, f"expected 1 launch per domain, saw {launches}"
+
+    times = []
+    for v in VOLTAGES:
+        t0 = time.perf_counter()
+        jax.block_until_ready(sweep_point(tree, jnp.float32(v)))
+        times.append((time.perf_counter() - t0) * 1e6)
+    assert len(traces) == 1, f"sweep retraced {len(traces)} times"
+
+    n_blocks = placement.block_table().num_blocks
+    rows = [{"name": "voltage_sweep_5pt",
+             "us_per_call": float(np.mean(times[1:])),
+             "derived": (f"traces=1;launches_per_domain={launches};"
+                         f"blocks={n_blocks};first_call_us={times[0]:.0f}")}]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")

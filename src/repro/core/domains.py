@@ -19,6 +19,7 @@ so capacity planning for full-scale models never allocates memory.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Tuple
 
 import jax
@@ -28,6 +29,11 @@ from repro.core.hbm import HBMGeometry
 
 # Allocation alignment: the injection kernel processes 4096-word blocks,
 # so placements are aligned to 16 KiB to keep padded tails from aliasing.
+# This is also the arena-engine block size: because every leaf starts on
+# an aligned slot and PC extents are aligned multiples, each 4096-word
+# block of a packed leaf lands in exactly one segment (one PC, one
+# contiguous physical run) -- the invariant that lets a placement export
+# a flat block-indexed table.
 ALIGN_WORDS = 4096
 
 
@@ -83,6 +89,56 @@ class LeafPlacement:
 
 
 @dataclasses.dataclass(frozen=True)
+class BlockTable:
+    """Flat block-indexed export of a :class:`GroupPlacement`.
+
+    The arena engine packs all leaves of a group (each padded to a
+    multiple of ALIGN_WORDS) into one buffer; entry ``i`` describes
+    arena block ``i``:
+
+      * ``block_pc[i]``: pseudo-channel owning the block (indexes the
+        fault map's threshold table),
+      * ``block_base[i]``: physical base word of the block's first word,
+      * ``leaf_blocks``: per leaf (in placement order) the
+        ``(start_block, n_blocks, n_words)`` triple used to pack and
+        unpack the arena.
+    """
+
+    block_pc: Tuple[int, ...]
+    block_base: Tuple[int, ...]
+    leaf_blocks: Tuple[Tuple[int, int, int], ...]
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.block_pc)
+
+
+@functools.lru_cache(maxsize=256)
+def _block_table(placement: "GroupPlacement") -> BlockTable:
+    block_pc: List[int] = []
+    block_base: List[int] = []
+    leaf_blocks: List[Tuple[int, int, int]] = []
+    for leaf in placement.leaves:
+        start_block = len(block_pc)
+        for si, seg in enumerate(leaf.segments):
+            assert seg.leaf_start_word % ALIGN_WORDS == 0, (
+                "segment not block-aligned within its leaf")
+            assert seg.phys_base_word % ALIGN_WORDS == 0, (
+                "segment not block-aligned physically")
+            last = si == len(leaf.segments) - 1
+            assert last or seg.n_words % ALIGN_WORDS == 0, (
+                "non-final segment with a partial block")
+            n_blocks = -(-seg.n_words // ALIGN_WORDS)
+            for b in range(n_blocks):
+                block_pc.append(seg.pc)
+                block_base.append(seg.phys_base_word + b * ALIGN_WORDS)
+        leaf_blocks.append((start_block, len(block_pc) - start_block,
+                            leaf.n_words))
+    return BlockTable(block_pc=tuple(block_pc), block_base=tuple(block_base),
+                      leaf_blocks=tuple(leaf_blocks))
+
+
+@dataclasses.dataclass(frozen=True)
 class GroupPlacement:
     group: str
     domain: MemoryDomain
@@ -91,6 +147,11 @@ class GroupPlacement:
     @property
     def total_words(self) -> int:
         return sum(l.n_words for l in self.leaves)
+
+    def block_table(self) -> BlockTable:
+        """Block-indexed segment table for the arena engine (cached --
+        placements are frozen)."""
+        return _block_table(self)
 
 
 def _leaf_words(leaf) -> int:

@@ -1,0 +1,285 @@
+"""Arena-based fault-injection engine: one fused pass per memory domain.
+
+The legacy path (:mod:`repro.core.injection`) walks a placement segment
+by segment, launching one Pallas call per segment per leaf with the
+thresholds baked in as static jit arguments -- O(segments) launches plus
+a full retrace for every distinct (voltage, PC) pair.  This module
+replaces that hot path:
+
+  * every leaf of a group is packed (block-aligned) into one flat
+    *arena* buffer, using the placement's exported
+    :class:`~repro.core.domains.BlockTable`;
+  * the fault map's voltage->threshold table is evaluated *inside the
+    trace* -- voltage may be a traced scalar -- and gathered into
+    per-block threshold rows;
+  * a single ``pallas_call`` with a grid over all arena blocks performs
+    the read-modify-write for the entire domain, reading each block's
+    physical base word and threshold row from scalar-prefetch operands.
+
+Consequences: injecting a multi-leaf, multi-PC group costs one kernel
+launch instead of hundreds, and a jitted voltage sweep (the paper's
+10 mV-step methodology, online V_min search, per-request voltage
+schedules) compiles exactly once.
+
+The ``use_ref`` path is the table-driven oracle: identical mask math on
+the same arena/threshold operands, pure jnp -- bit-exact with the kernel
+by construction and asserted by the tests.
+"""
+from __future__ import annotations
+
+import functools
+import warnings
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.domains import ALIGN_WORDS, GroupPlacement
+from repro.core.faultmap import NUM_THR_COLS, FaultMap
+from repro.core.faultmodel import V_MIN
+from repro.kernels.bitflip import ops as bitflip_ops
+from repro.kernels.bitflip.bitflip import (BLOCK_LANES, BLOCK_WORDS,
+                                           arena_bitflip_pallas, arena_masks)
+from repro.kernels.ecc.ecc import arena_ecc_codewords, arena_ecc_pallas
+
+assert BLOCK_WORDS == ALIGN_WORDS, "arena blocks must match allocation slots"
+
+
+@functools.lru_cache(maxsize=256)
+def _block_arrays(placement: GroupPlacement):
+    """Numpy block tables for a placement (bounded cache: a long-lived
+    server may build placements for many distinct batch/length shapes).
+    Kept as numpy -- they embed as constants both eagerly and under jit;
+    caching device arrays here would leak tracers out of whatever trace
+    first touched them."""
+    table = placement.block_table()
+    return (np.asarray(table.block_pc, np.int32),
+            np.asarray(table.block_base, np.uint32))
+
+
+def _static_value(v):
+    """``float(v)`` for any concrete scalar (python, numpy, or a
+    non-traced jax array), ``None`` for traced values.  Concrete jax
+    scalars drive static decisions (method dispatch, guardband
+    early-out) exactly like python floats."""
+    try:
+        return float(v)
+    except (TypeError, jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError):
+        return None
+
+
+def resolve_method(faultmap: FaultMap, placement: GroupPlacement,
+                   voltage=None) -> str:
+    """Static word/bitwise dispatch for a whole domain.
+
+    The fast word path is exact to O((32p)^2), so it is chosen only if
+    *every* PC of the domain is inside its validity regime.  A traced
+    voltage override cannot drive dispatch (method selects a trace);
+    it falls back to the domain's configured voltage (with a trace-time
+    warning) -- callers sweeping into the collapse regime should pass
+    ``method='bitwise'`` explicitly.
+    """
+    v = _static_value(voltage)
+    if v is None:
+        v = placement.domain.voltage
+        warnings.warn(
+            f"method='auto' with a traced voltage dispatches from domain "
+            f"{placement.domain.name!r}'s configured {v:.2f} V; sweeps "
+            "crossing per-bit rates ~1e-3 should pass method='bitwise' "
+            "explicitly", stacklevel=3)
+    if any(bitflip_ops.pick_method(faultmap.thresholds(v, pc)) ==
+           "bitwise" for pc in placement.domain.pc_ids):
+        return "bitwise"
+    return "word"
+
+
+def pack_arena(tree, placement: GroupPlacement):
+    """Pack a group's leaves into one (num_blocks * 8, 512) uint32 arena.
+
+    Returns (arena2d, pack_meta).  Leaves are matched to placements by
+    pytree path, exactly like the legacy path.  ``pack_meta`` records,
+    in the *tree's flatten order* (placement order is keystr-sorted and
+    may differ -- e.g. list index 10 sorts before 2), each leaf's arena
+    slot and dtype-recovery metadata for :func:`unpack_arena`.
+    """
+    table = placement.block_table()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaf_by_path = {jax.tree_util.keystr(p): leaf for p, leaf in flat}
+    pieces = []
+    slot_by_path = {}
+    for lp, (start, n_blocks, n_words) in zip(placement.leaves,
+                                              table.leaf_blocks):
+        u32, meta = bitflip_ops.to_u32(leaf_by_path[lp.path])
+        assert u32.shape[0] == n_words == lp.n_words, (
+            lp.path, u32.shape, n_words, lp.n_words)
+        pad = n_blocks * BLOCK_WORDS - n_words
+        if pad:
+            u32 = jnp.concatenate([u32, jnp.zeros((pad,), jnp.uint32)])
+        pieces.append(u32)
+        slot_by_path[lp.path] = (meta, start, n_words)
+    arena = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces)
+    slots = tuple(slot_by_path[jax.tree_util.keystr(p)] for p, _ in flat)
+    return arena.reshape(-1, BLOCK_LANES), (treedef, slots)
+
+
+def unpack_arena(arena2d, pack_meta):
+    """Inverse of :func:`pack_arena`: arena -> original pytree."""
+    treedef, slots = pack_meta
+    flat_arena = arena2d.reshape(-1)
+    leaves = [
+        bitflip_ops.from_u32(
+            flat_arena[start * BLOCK_WORDS:start * BLOCK_WORDS + n_words],
+            meta)
+        for meta, start, n_words in slots]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _arena_oracle(arena2d, block_base, block_thr, *, seed: int, method: str,
+                  words_per_row_log2: int, ecc: bool):
+    """Table-driven pure-jnp oracle: same operands, same mask math."""
+    num_blocks = block_base.shape[0]
+    x = arena2d.reshape(num_blocks, BLOCK_WORDS)
+    wid = (block_base[:, None]
+           + jnp.arange(BLOCK_WORDS, dtype=jnp.uint32)[None, :])
+    thr_row = tuple(block_thr[:, c][:, None] for c in range(NUM_THR_COLS))
+    if ecc:
+        out, bad = arena_ecc_codewords(
+            x, wid, thr_row, seed=seed,
+            words_per_row_log2=words_per_row_log2)
+        return (out.reshape(arena2d.shape),
+                jnp.sum(bad.astype(jnp.int32)))
+    mask01, mask10 = arena_masks(wid, thr_row, seed=seed, method=method,
+                                 words_per_row_log2=words_per_row_log2)
+    mask10 = mask10 & ~mask01
+    out = (x | mask01) & ~mask10
+    return out.reshape(arena2d.shape), jnp.zeros((), jnp.int32)
+
+
+def inject_placement(tree, placement: GroupPlacement, faultmap: FaultMap,
+                     *, voltage=None, method: str = "auto",
+                     interpret: Optional[bool] = None,
+                     use_ref: bool = False):
+    """Inject a whole group through one fused arena pass.
+
+    ``voltage``: optional override of the domain's configured voltage.
+    May be a *traced* scalar -- thresholds are computed inside the trace,
+    so sweeping voltages re-executes, never recompiles.  When the
+    effective voltage is static and inside the guardband the call is an
+    exact no-op (identity tree); a traced voltage in the guardband is a
+    numerical no-op (the threshold table gates itself to zero).
+
+    Returns (faulted tree, uncorrectable-fault count) -- the count is
+    zero unless the domain has ECC.
+    """
+    domain = placement.domain
+    if not placement.leaves:  # empty group: nothing placed, nothing to do
+        return tree, jnp.zeros((), jnp.int32)
+    if voltage is None:
+        voltage = domain.voltage
+    sv = _static_value(voltage)
+    if sv is not None and sv >= V_MIN - 1e-9:
+        return tree, jnp.zeros((), jnp.int32)
+    if method == "auto":
+        # ECC is word-path-only by design; don't resolve (or warn).
+        method = "word" if domain.ecc else resolve_method(
+            faultmap, placement, voltage)
+    if interpret is None:
+        interpret = bitflip_ops.default_interpret()
+
+    block_pc, block_base = _block_arrays(placement)
+    block_base = jnp.asarray(block_base)
+    arena2d, pack_meta = pack_arena(tree, placement)
+    block_thr = faultmap.threshold_table(voltage)[jnp.asarray(block_pc)]
+    wprl2 = faultmap.words_per_row_log2
+
+    if use_ref:
+        out2d, bad = _arena_oracle(
+            arena2d, block_base, block_thr, seed=faultmap.seed,
+            method=method, words_per_row_log2=wprl2, ecc=domain.ecc)
+    elif domain.ecc:
+        out2d, bad_blocks = arena_ecc_pallas(
+            arena2d, block_base, block_thr, seed=faultmap.seed,
+            words_per_row_log2=wprl2, interpret=bool(interpret))
+        bad = jnp.sum(bad_blocks)
+    else:
+        out2d = arena_bitflip_pallas(
+            arena2d, block_base, block_thr, seed=faultmap.seed,
+            method=method, words_per_row_log2=wprl2,
+            interpret=bool(interpret))
+        bad = jnp.zeros((), jnp.int32)
+    return unpack_arena(out2d, pack_meta), bad
+
+
+def _subjaxprs(params):
+    """Jaxprs nested in an eqn's params (duck-typed: no jax.core
+    internals, which get pruned across jax releases)."""
+    stack = list(params.values())
+    while stack:
+        v = stack.pop()
+        if hasattr(v, "eqns"):          # Jaxpr
+            yield v
+        elif hasattr(v, "jaxpr"):       # ClosedJaxpr
+            yield v.jaxpr
+        elif isinstance(v, (list, tuple)):
+            stack.extend(v)
+
+
+def count_pallas_calls(jaxpr) -> int:
+    """Number of ``pallas_call`` equations in a jaxpr (recursive).
+
+    The arena engine's structural contract -- one launch per domain --
+    is asserted with this in the tests and reported by the benchmarks.
+    """
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for sub in _subjaxprs(eqn.params):
+            n += count_pallas_calls(sub)
+    return n
+
+
+def inject_groups(groups: Dict[str, object],
+                  placements: Dict[str, GroupPlacement],
+                  faultmap: FaultMap, *, voltage=None, method: str = "auto",
+                  interpret: Optional[bool] = None, use_ref: bool = False):
+    """Arena-inject every group: one fused pass per domain.
+
+    ``voltage`` as a scalar (possibly traced) overrides only domains
+    *configured below the guardband* -- domains placed at or above
+    V_MIN hold state the plan promises to keep safe (master params,
+    optimizer moments) and are never dragged down by a sweep.  Pass a
+    ``{domain name: scalar}`` dict to target domains explicitly,
+    including safe ones.
+
+    Returns (faulted groups dict, total uncorrectable count).
+    """
+    if isinstance(voltage, dict):
+        # Validate against every provided placement (callers sharing one
+        # schedule dict across calls can pass their full placements map
+        # with a subset of groups).
+        known = {p.domain.name for p in placements.values()}
+        unknown = set(voltage) - known
+        if unknown:
+            raise ValueError(
+                f"voltage override names unknown domains {sorted(unknown)}; "
+                f"placements cover {sorted(known)}")
+    out: Dict[str, object] = {}
+    total_bad = jnp.zeros((), jnp.int32)
+    for name, tree in groups.items():
+        placement = placements[name]
+        if isinstance(voltage, dict):
+            v = voltage.get(placement.domain.name)
+        elif (voltage is not None
+              and placement.domain.voltage < V_MIN - 1e-9):
+            v = voltage
+        else:
+            v = None
+        faulted, bad = inject_placement(
+            tree, placement, faultmap, voltage=v,
+            method=method, interpret=interpret, use_ref=use_ref)
+        out[name] = faulted
+        total_bad = total_bad + bad
+    return out, total_bad

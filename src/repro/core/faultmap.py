@@ -21,8 +21,11 @@ thresholds (fault injection), and the reliability tester.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing
@@ -51,9 +54,34 @@ WEAK_ROW_SHARE = 0.90
 WEAK_RUN_ROWS = 8
 
 
+# Threshold-table column layout: one uint32 row per pseudo-channel.
+# Word-path uint32 hit thresholds, weak-row selection threshold, bitwise
+# PLANES-bit thresholds, and the fused-ECC parity-hit thresholds -- i.e.
+# everything voltage-dependent the kernels need, so a (num_pcs, NUM_COLS)
+# table computed from a *traced* voltage scalar fully parameterizes one
+# injection pass.
+COL_Q01_WEAK = 0
+COL_Q01_STRONG = 1
+COL_Q10_WEAK = 2
+COL_Q10_STRONG = 3
+COL_WEAK_ROW_Q = 4
+COL_T01_WEAK = 5
+COL_T01_STRONG = 6
+COL_T10_WEAK = 7
+COL_T10_STRONG = 8
+COL_PAR_Q_WEAK = 9
+COL_PAR_Q_STRONG = 10
+NUM_THR_COLS = 11
+
+
 @dataclasses.dataclass(frozen=True)
 class KernelThresholds:
-    """Integer thresholds consumed by the bitflip kernel for one segment."""
+    """Integer thresholds consumed by the bitflip kernel for one segment.
+
+    Constructed by :meth:`FaultMap.thresholds` from one row of the
+    vectorized threshold table, so the static per-segment path and the
+    arena engine consume bit-identical integers.
+    """
 
     q01_weak: int
     q01_strong: int
@@ -61,10 +89,16 @@ class KernelThresholds:
     q10_strong: int
     weak_row_q: int        # uint32 threshold for weak-row selection
     words_per_row_log2: int
-    p01_weak: float        # raw per-bit rates (bitwise path uses these)
-    p01_strong: float
-    p10_weak: float
+    p01_weak: float        # per-bit rates at PLANES-bit resolution
+    p01_strong: float      # (p = t / 2**PLANES, so the bitwise path
+    p10_weak: float        #  round-trips exactly through the table)
     p10_strong: float
+    t01_weak: int          # bitwise-path PLANES-bit thresholds
+    t01_strong: int
+    t10_weak: int
+    t10_strong: int
+    par_q_weak: int        # ECC parity-bit word-hit thresholds
+    par_q_strong: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,34 +181,54 @@ class FaultMap:
         return weak, strong
 
     # ---- kernel thresholds ----------------------------------------------
+    @property
+    def words_per_row_log2(self) -> int:
+        words_per_row = self.geometry.row_bytes // 4
+        assert words_per_row & (words_per_row - 1) == 0, "row must be pow2"
+        return int(words_per_row.bit_length() - 1)
+
+    def threshold_table(self, v) -> jax.Array:
+        """(num_pcs, NUM_THR_COLS) uint32 kernel-threshold table at ``v``.
+
+        ``v`` may be a traced scalar: the whole synthesis -- fault-model
+        regimes, per-PC multipliers, weak/strong clustering, word-hit /
+        bitwise / ECC-parity quantization -- is jnp float32, so a jitted
+        voltage sweep retraces nothing.  Clustering (weak/strong rows)
+        modulates only the exponential regime; the saturation collapse is
+        spatially uniform.  The weak-row selection threshold is voltage-
+        independent and broadcast as a constant column.
+
+        ``v`` always crosses a jit boundary as a *runtime* scalar: XLA
+        constant-folds transcendentals at a different precision than it
+        evaluates them at runtime, and routing every caller (eager or
+        traced) through the same compiled graph is what keeps the
+        per-segment path, the arena engine, and the oracles
+        bit-identical.
+        """
+        return _threshold_table_jit(self, jnp.asarray(v, jnp.float32))
+
     def thresholds(self, v: float, pc: int) -> KernelThresholds:
         """Integer thresholds for the injection kernel on one PC segment.
 
-        Clustering (weak/strong rows) modulates only the exponential
-        regime; the saturation collapse is spatially uniform.
+        One row of :meth:`threshold_table`, materialized -- the legacy
+        per-segment path therefore stays bit-exact with the arena engine
+        at any concrete voltage.
         """
-        e01, e10, s01, s10 = (float(x) for x in self.model.components(
-            v, self.pc_multiplier[pc]))
-        wm, sm = self.row_multipliers()
-        words_per_row = self.geometry.row_bytes // 4
-        assert words_per_row & (words_per_row - 1) == 0, "row must be pow2"
-
-        def word_q(p: float) -> int:
-            # Word-hit probability for the fast path: one stuck bit per
-            # hit word; exact to O((32p)^2) for small p.
-            return hashing.rate_to_u32_threshold(min(1.0, 32.0 * p))
-
-        p01w = min(1.0, e01 * wm + s01)
-        p01s = min(1.0, e01 * sm + s01)
-        p10w = min(1.0, e10 * wm + s10)
-        p10s = min(1.0, e10 * sm + s10)
+        row = _threshold_table_np(self, float(v))[pc]
+        inv = 1.0 / float(2 ** hashing.PLANES)
         return KernelThresholds(
-            q01_weak=word_q(p01w), q01_strong=word_q(p01s),
-            q10_weak=word_q(p10w), q10_strong=word_q(p10s),
-            weak_row_q=hashing.rate_to_u32_threshold(self.weak_row_frac),
-            words_per_row_log2=int(np.log2(words_per_row)),
-            p01_weak=p01w, p01_strong=p01s,
-            p10_weak=p10w, p10_strong=p10s,
+            q01_weak=int(row[COL_Q01_WEAK]), q01_strong=int(row[COL_Q01_STRONG]),
+            q10_weak=int(row[COL_Q10_WEAK]), q10_strong=int(row[COL_Q10_STRONG]),
+            weak_row_q=int(row[COL_WEAK_ROW_Q]),
+            words_per_row_log2=self.words_per_row_log2,
+            p01_weak=int(row[COL_T01_WEAK]) * inv,
+            p01_strong=int(row[COL_T01_STRONG]) * inv,
+            p10_weak=int(row[COL_T10_WEAK]) * inv,
+            p10_strong=int(row[COL_T10_STRONG]) * inv,
+            t01_weak=int(row[COL_T01_WEAK]), t01_strong=int(row[COL_T01_STRONG]),
+            t10_weak=int(row[COL_T10_WEAK]), t10_strong=int(row[COL_T10_STRONG]),
+            par_q_weak=int(row[COL_PAR_Q_WEAK]),
+            par_q_strong=int(row[COL_PAR_Q_STRONG]),
         )
 
     # ---- capacity planning ----------------------------------------------
@@ -192,3 +246,48 @@ class FaultMap:
 
     def num_usable_pcs(self, v: float, tolerable_rate: float) -> int:
         return int(len(self.usable_pcs(v, tolerable_rate)))
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _threshold_table_jit(fmap: FaultMap, v) -> jax.Array:
+    mult = jnp.asarray(fmap.pc_multiplier, jnp.float32)
+    e01, e10, s01, s10 = fmap.model.components_jnp(v, mult)
+    wm, sm = fmap.row_multipliers()
+    p01w = jnp.clip(e01 * jnp.float32(wm) + s01, 0.0, 1.0)
+    p01s = jnp.clip(e01 * jnp.float32(sm) + s01, 0.0, 1.0)
+    p10w = jnp.clip(e10 * jnp.float32(wm) + s10, 0.0, 1.0)
+    p10s = jnp.clip(e10 * jnp.float32(sm) + s10, 0.0, 1.0)
+
+    def word_q(p):
+        # Word-hit probability for the fast path: one stuck bit per hit
+        # word; exact to O((32p)^2) for small p.
+        return hashing.rate_to_u32_threshold_jnp(32.0 * p)
+
+    def par_q(p01, p10):
+        # 8 parity bits per SECDED(72,64) codeword, either direction.
+        return hashing.rate_to_u32_threshold_jnp(8.0 * (p01 + p10))
+
+    weak_row_q = jnp.full(
+        mult.shape,
+        np.uint32(hashing.rate_to_u32_threshold(fmap.weak_row_frac)))
+    return jnp.stack(
+        [word_q(p01w), word_q(p01s), word_q(p10w), word_q(p10s),
+         weak_row_q,
+         hashing.rate_to_plane_threshold_jnp(p01w),
+         hashing.rate_to_plane_threshold_jnp(p01s),
+         hashing.rate_to_plane_threshold_jnp(p10w),
+         hashing.rate_to_plane_threshold_jnp(p10s),
+         par_q(p01w, p10w), par_q(p01s, p10s)],
+        axis=1)
+
+
+@functools.lru_cache(maxsize=512)
+def _threshold_table_np(fmap: FaultMap, v: float) -> np.ndarray:
+    """Materialized threshold table for a concrete voltage, memoized on
+    the (frozen, hashable) map so repeated per-segment calls are free.
+
+    Evaluated outside any ambient trace (the inputs are concrete Python
+    values even when a caller asks for static thresholds mid-trace, e.g.
+    method dispatch inside a jitted train step)."""
+    with jax.ensure_compile_time_eval():
+        return np.asarray(fmap.threshold_table(v))

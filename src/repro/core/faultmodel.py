@@ -1,7 +1,7 @@
 """Calibrated voltage -> fault-rate model for undervolted HBM.
 
 Every constant below is anchored to a measurement reported in the paper
-(section III); the anchors are re-asserted by ``benchmarks/fig4_faultrate.py``
+(section III); the anchors are re-asserted by ``benchmarks/paper_figs.py``
 and the unit tests.
 
   * V_nom = 1.2 V, V_min = 0.98 V  -> 19% guardband, zero faults inside (C1)
@@ -55,7 +55,7 @@ _W10 = 1.0 / (1.0 + ASYMMETRY_01_OVER_10)
 ALPHA_DROP_MAX = 0.1425
 
 
-def _exp_rate(v, onset):
+def _exp_rate(v, onset, f0=F0, decades_per_step=DECADES_PER_STEP):
     """Exponential-regime fault fraction, gated to 0 above ``onset``.
 
     The curve itself is anchored at V_ONSET_10 for *both* directions so
@@ -65,7 +65,7 @@ def _exp_rate(v, onset):
     """
     v = np.asarray(v, dtype=np.float64)
     steps_below = (V_ONSET_10 - v) / STEP
-    rate = F0 * np.power(10.0, DECADES_PER_STEP * steps_below)
+    rate = f0 * np.power(10.0, decades_per_step * steps_below)
     return np.where(v <= onset + 1e-9, rate, 0.0)
 
 
@@ -95,12 +95,43 @@ class FaultModel:
         stacks and all-bits-faulty behavior below 0.84 V.
         """
         gate = np.asarray(v) < V_MIN - 1e-9  # C1: guardband is fault-free
-        exp01 = self.asymmetry * _exp_rate(v, V_ONSET_01) * multiplier
-        exp10 = _exp_rate(v, V_ONSET_10) * multiplier
+        exp01 = (self.asymmetry
+                 * _exp_rate(v, V_ONSET_01, self.f0, self.decades_per_step)
+                 * multiplier)
+        exp10 = (_exp_rate(v, V_ONSET_10, self.f0, self.decades_per_step)
+                 * multiplier)
         sat = _saturation(v)
         z = np.zeros_like(sat)
         return (np.where(gate, exp01, z), np.where(gate, exp10, z),
                 np.where(gate, _W01 * sat, z), np.where(gate, _W10 * sat, z))
+
+    def components_jnp(self, v, multiplier):
+        """Traced float32 port of :meth:`components`.
+
+        ``v`` may be a traced jax scalar (runtime voltage); ``multiplier``
+        is a float32 vector of per-PC sensitivities.  Same regime gating
+        as the numpy path, evaluated with ``jnp.where`` so a single trace
+        covers every voltage -- this is what lets the arena injection
+        engine sweep voltages with zero recompiles.
+        """
+        import jax.numpy as jnp
+
+        v = jnp.asarray(v, jnp.float32)
+        m = jnp.asarray(multiplier, jnp.float32)
+        gate = v < jnp.float32(V_MIN - 1e-9)
+        steps_below = (jnp.float32(V_ONSET_10) - v) / jnp.float32(STEP)
+        base = jnp.float32(self.f0) * jnp.power(
+            jnp.float32(10.0), jnp.float32(self.decades_per_step) * steps_below)
+        z = jnp.zeros_like(m)
+        e01 = jnp.where(v <= jnp.float32(V_ONSET_01 + 1e-9),
+                        jnp.float32(self.asymmetry) * base, 0.0) * m
+        e10 = jnp.where(v <= jnp.float32(V_ONSET_10 + 1e-9), base, 0.0) * m
+        sat = 1.0 / (1.0 + jnp.exp((v - jnp.float32(SAT_CENTER))
+                                   / jnp.float32(SAT_WIDTH)))
+        s01 = jnp.broadcast_to(jnp.float32(_W01) * sat, m.shape)
+        s10 = jnp.broadcast_to(jnp.float32(_W10) * sat, m.shape)
+        return (jnp.where(gate, e01, z), jnp.where(gate, e10, z),
+                jnp.where(gate, s01, z), jnp.where(gate, s10, z))
 
     def rate_01(self, v, multiplier=1.0):
         """Fraction of bits stuck-at-1 (observed as 0->1 flips)."""

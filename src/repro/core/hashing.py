@@ -15,6 +15,7 @@ constants inside a Pallas kernel body.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 # Distinct stream constants so each use-site draws independent values.
@@ -28,6 +29,11 @@ STREAM_BITPLANE = 0xD3A2646C  # bitwise-path plane seeds
 _M1 = 0x7FEB352D
 _M2 = 0x846CA68B
 _MASK = 0xFFFFFFFF
+
+# Bit-planes in the bitwise injection path: probability resolution
+# 2**-PLANES.  Lives here (not in the kernel package) so the fault-map's
+# threshold-table synthesis needs no kernel import.
+PLANES = 20
 
 
 def mix32(x):
@@ -65,3 +71,24 @@ def rate_to_u32_threshold(rate: float) -> int:
     """Probability in [0,1] -> uint32 compare threshold (u < t <=> hit)."""
     rate = min(1.0, max(0.0, float(rate)))
     return min(0xFFFFFFFF, int(np.floor(rate * 4294967296.0)))
+
+
+def rate_to_u32_threshold_jnp(rate):
+    """Traced counterpart of :func:`rate_to_u32_threshold`.
+
+    Accepts a float32 array of probabilities (possibly traced, e.g. a
+    function of a runtime voltage) and returns uint32 thresholds.  A rate
+    that rounds to 1.0 in float32 saturates to 0xFFFFFFFF, so the hit is
+    certain up to one part in 2**32.
+    """
+    t = jnp.floor(jnp.clip(jnp.asarray(rate, jnp.float32), 0.0, 1.0)
+                  * jnp.float32(4294967296.0))
+    return jnp.where(t >= jnp.float32(4294967296.0),
+                     jnp.uint32(0xFFFFFFFF), t.astype(jnp.uint32))
+
+
+def rate_to_plane_threshold_jnp(rate):
+    """Probability -> PLANES-bit integer threshold for the bitwise path,
+    matching round(p * 2**PLANES) clipped to 2**PLANES - 1."""
+    t = jnp.round(jnp.asarray(rate, jnp.float32) * jnp.float32(2 ** PLANES))
+    return jnp.clip(t, 0.0, float(2 ** PLANES - 1)).astype(jnp.uint32)

@@ -1,14 +1,18 @@
 """Pytree-level fault injection driven by a placement + fault map.
 
 This is the bridge between the paper's physical model and the training /
-serving loops: every step, each tensor group living in an unsafe memory
-domain is passed through the bitflip kernel segment-by-segment with its
-own pseudo-channel's calibrated thresholds.  ECC domains route through
-the fused ECC kernel instead (single-bit errors corrected, multi-bit
-errors kept and counted).
+serving loops.  The default path is the arena engine
+(:mod:`repro.core.engine`): every step, each tensor group living in an
+unsafe memory domain is packed into one block-indexed arena and injected
+with a *single* fused Pallas pass per domain -- thresholds arrive as
+runtime data derived from a (possibly traced) voltage, so voltage sweeps
+never recompile.  ECC domains route through the fused inject+correct
+kernel (single-bit errors corrected, multi-bit errors kept and counted).
 
-Everything here is trace-friendly: the segment structure is static, so
-the per-leaf Python loops unroll inside jit.
+The legacy per-segment path (one ``pallas_call`` per segment per leaf,
+static thresholds) is kept as ``engine='segments'`` / ``inject_leaf`` --
+it is the independent implementation the tests hold the arena engine
+bit-exact against.
 """
 from __future__ import annotations
 
@@ -17,6 +21,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine as arena_engine
 from repro.core.domains import GroupPlacement
 from repro.core.faultmap import FaultMap
 from repro.core.faultmodel import V_MIN
@@ -27,12 +32,14 @@ from repro.kernels.ecc import ops as ecc_ops
 def inject_leaf(x: jax.Array, placement, faultmap: FaultMap, voltage: float,
                 *, ecc: bool = False, method: str = "auto",
                 interpret=None, use_ref: bool = False):
-    """Apply the domain's stuck-at faults to one tensor.
+    """Legacy path: apply the domain's stuck-at faults to one tensor,
+    segment by segment (one kernel launch per segment, static
+    thresholds).
 
     Returns (faulted tensor, uncorrectable-fault count) -- the count is
     zero unless ``ecc`` is set (without ECC nothing is even detected).
     """
-    u32, meta = bitflip_ops._to_u32(x)
+    u32, meta = bitflip_ops.to_u32(x)
     pieces = []
     uncorrectable = jnp.zeros((), jnp.int32)
     for seg in placement.segments:
@@ -51,26 +58,17 @@ def inject_leaf(x: jax.Array, placement, faultmap: FaultMap, voltage: float,
                 interpret=interpret, use_ref=use_ref)
         pieces.append(out)
     faulted = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces)
-    return bitflip_ops._from_u32(faulted, meta), uncorrectable
+    return bitflip_ops.from_u32(faulted, meta), uncorrectable
 
 
-def inject_group(tree, placement: GroupPlacement, faultmap: FaultMap,
-                 *, method: str = "auto", interpret=None,
-                 use_ref: bool = False):
-    """Apply the domain's faults to a whole tensor group.
-
-    Returns (faulted tree, total uncorrectable count).  A no-op (identity,
-    zero count) when the domain sits in the guardband -- the paper finds
-    zero faults at or above V_min = 0.98 V, and we hard-gate that.
-    """
-    domain = placement.domain
-    if domain.voltage >= V_MIN - 1e-9:
-        return tree, jnp.zeros((), jnp.int32)
-
+def _inject_group_segments(tree, placement: GroupPlacement,
+                           faultmap: FaultMap, *, method: str = "auto",
+                           interpret=None, use_ref: bool = False):
     by_path: Dict[str, object] = {l.path: l for l in placement.leaves}
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out_leaves = []
     total_bad = jnp.zeros((), jnp.int32)
+    domain = placement.domain
     for path, leaf in flat:
         lp = by_path[jax.tree_util.keystr(path)]
         faulted, bad = inject_leaf(
@@ -80,6 +78,35 @@ def inject_group(tree, placement: GroupPlacement, faultmap: FaultMap,
         total_bad = total_bad + bad
     return (jax.tree_util.tree_unflatten(
         treedef, out_leaves), total_bad)
+
+
+def inject_group(tree, placement: GroupPlacement, faultmap: FaultMap,
+                 *, voltage=None, method: str = "auto", interpret=None,
+                 use_ref: bool = False, engine: str = "arena"):
+    """Apply the domain's faults to a whole tensor group.
+
+    ``engine='arena'`` (default): one fused pass for the whole domain,
+    ``voltage`` optionally overrides the domain voltage and may be a
+    traced scalar.  ``engine='segments'``: the legacy per-segment path
+    (no voltage override -- thresholds are static there by design).
+
+    Returns (faulted tree, total uncorrectable count).  A no-op
+    (identity, zero count) when the effective voltage sits in the
+    guardband -- the paper finds zero faults at or above
+    V_min = 0.98 V, and we hard-gate that for static voltages.
+    """
+    if engine == "arena":
+        return arena_engine.inject_placement(
+            tree, placement, faultmap, voltage=voltage, method=method,
+            interpret=interpret, use_ref=use_ref)
+    if engine != "segments":
+        raise ValueError(f"unknown engine {engine!r}")
+    if voltage is not None:
+        raise ValueError("the segments engine has no voltage override")
+    if placement.domain.voltage >= V_MIN - 1e-9:
+        return tree, jnp.zeros((), jnp.int32)
+    return _inject_group_segments(tree, placement, faultmap, method=method,
+                                  interpret=interpret, use_ref=use_ref)
 
 
 def clamp_nonfinite(tree, replacement: float = 0.0):

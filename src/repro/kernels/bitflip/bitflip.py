@@ -7,6 +7,18 @@ tile-parallel over (8, 512)-word VMEM blocks (16 KiB -- MXU/VPU aligned:
 8 sublanes x 512 = 4x128 lanes), computes a counter-based hash per word,
 and ORs/ANDNs the resulting stuck-at masks into the data.
 
+Two entry points:
+
+  * :func:`bitflip_pallas` -- the legacy single-segment kernel: one
+    contiguous physical run, thresholds folded in as static Python ints
+    (a recompile per distinct (voltage, PC) pair).
+  * :func:`arena_bitflip_pallas` -- the arena engine's kernel: a grid
+    over *all* blocks of a memory domain, with each block's physical
+    base word and threshold-table row delivered as scalar-prefetch
+    operands (SMEM).  One launch injects a whole multi-leaf, multi-PC
+    domain, and because thresholds are runtime data, a voltage sweep
+    never retraces or recompiles.
+
 The mask math is shared with :mod:`repro.kernels.bitflip.ref` (pure jnp
 integer ops), so kernel and oracle are bit-exact by construction; the
 tests assert exact equality over shape/dtype/method sweeps in interpret
@@ -20,7 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import faultmap as fm
 from repro.kernels.bitflip import ref as _ref
 
 BLOCK_SUBLANES = 8
@@ -61,3 +75,90 @@ def bitflip_pallas(data2d: jax.Array, *, thresholds, seed: int,
                                lambda i: (i, 0)),
         interpret=interpret,
     )(data2d)
+
+
+def block_word_ids(base, shape):
+    """Physical word index of every element of one (sublane, lane) block
+    whose first word sits at physical address ``base`` (traced uint32)."""
+    sub = jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+    lane = jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+    return base + sub * np.uint32(shape[1]) + lane
+
+
+def arena_masks(wid, thr_row, *, seed: int, method: str,
+                words_per_row_log2: int):
+    """Stuck-at masks from one traced threshold-table row.
+
+    ``thr_row`` indexes like a (NUM_THR_COLS,) uint32 vector -- inside
+    the kernel it is a row of the scalar-prefetch SMEM operand; in the
+    oracle it is a row of the gathered per-block table.  Shared by the
+    arena kernels and the arena oracle so both are bit-exact.
+    """
+    if method == "word":
+        return _ref.word_masks(
+            wid, seed,
+            q01_weak=thr_row[fm.COL_Q01_WEAK],
+            q01_strong=thr_row[fm.COL_Q01_STRONG],
+            q10_weak=thr_row[fm.COL_Q10_WEAK],
+            q10_strong=thr_row[fm.COL_Q10_STRONG],
+            weak_row_q=thr_row[fm.COL_WEAK_ROW_Q],
+            words_per_row_log2=words_per_row_log2)
+    if method == "bitwise":
+        return _ref.bitwise_masks(
+            wid, seed,
+            t01_weak=thr_row[fm.COL_T01_WEAK],
+            t01_strong=thr_row[fm.COL_T01_STRONG],
+            t10_weak=thr_row[fm.COL_T10_WEAK],
+            t10_strong=thr_row[fm.COL_T10_STRONG],
+            weak_row_q=thr_row[fm.COL_WEAK_ROW_Q],
+            words_per_row_log2=words_per_row_log2)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def _arena_kernel(base_ref, thr_ref, x_ref, o_ref, *, seed, method,
+                  words_per_row_log2):
+    i = pl.program_id(0)
+    x = x_ref[...]
+    wid = block_word_ids(base_ref[i], x.shape)
+    # Individual scalar SMEM reads (dynamic row, static column) -- the
+    # TPU-safe access pattern for prefetched scalars.
+    thr_row = tuple(thr_ref[i, c] for c in range(fm.NUM_THR_COLS))
+    mask01, mask10 = arena_masks(
+        wid, thr_row, seed=seed, method=method,
+        words_per_row_log2=words_per_row_log2)
+    mask10 = mask10 & ~mask01
+    o_ref[...] = (x | mask01) & ~mask10
+
+
+def arena_bitflip_pallas(arena2d: jax.Array, block_base: jax.Array,
+                         block_thr: jax.Array, *, seed: int, method: str,
+                         words_per_row_log2: int, interpret: bool):
+    """Inject a whole domain arena in one fused pass.
+
+    ``arena2d``: (num_blocks * 8, 512) uint32 -- every leaf of the domain
+    packed block-aligned.  ``block_base``: (num_blocks,) uint32 physical
+    base word per block.  ``block_thr``: (num_blocks, NUM_THR_COLS)
+    uint32 threshold-table rows (the per-block PC's row at the current,
+    possibly traced, voltage).  One ``pallas_call``, grid over blocks.
+    """
+    m, n = arena2d.shape
+    assert n == BLOCK_LANES and m % BLOCK_SUBLANES == 0, (m, n)
+    num_blocks = m // BLOCK_SUBLANES
+    assert block_base.shape == (num_blocks,), block_base.shape
+    assert block_thr.shape == (num_blocks, fm.NUM_THR_COLS), block_thr.shape
+    body = functools.partial(_arena_kernel, seed=seed, method=method,
+                             words_per_row_log2=words_per_row_log2)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(num_blocks,),
+        in_specs=[pl.BlockSpec((BLOCK_SUBLANES, BLOCK_LANES),
+                               lambda i, *_: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_SUBLANES, BLOCK_LANES),
+                               lambda i, *_: (i, 0)),
+    )
+    return pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint32),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(block_base, block_thr, arena2d)

@@ -22,8 +22,12 @@ from repro.kernels.bitflip.bitflip import BLOCK_LANES, BLOCK_WORDS, bitflip_pall
 WORD_PATH_MAX_RATE = 1e-3
 
 
-def _default_interpret() -> bool:
+def default_interpret() -> bool:
+    """Pallas interpret-mode default: interpret everywhere but TPU."""
     return jax.default_backend() != "tpu"
+
+
+_default_interpret = default_interpret  # backwards-compatible alias
 
 
 def pick_method(thresholds: KernelThresholds) -> str:
@@ -32,7 +36,7 @@ def pick_method(thresholds: KernelThresholds) -> str:
     return "word" if worst <= WORD_PATH_MAX_RATE else "bitwise"
 
 
-def _to_u32(x: jax.Array):
+def to_u32(x: jax.Array):
     """Flatten any-dtype array to a uint32 view + recovery metadata."""
     flat = x.reshape(-1)
     itemsize = x.dtype.itemsize
@@ -58,7 +62,8 @@ def _to_u32(x: jax.Array):
     raise NotImplementedError(f"itemsize {itemsize} for dtype {x.dtype}")
 
 
-def _from_u32(u32: jax.Array, meta):
+def from_u32(u32: jax.Array, meta):
+    """Inverse of :func:`to_u32`: uint32 view -> original shape/dtype."""
     shape, dtype, n, packing = meta
     if packing == 1:
         return jax.lax.bitcast_convert_type(u32, dtype).reshape(shape)
@@ -66,6 +71,11 @@ def _from_u32(u32: jax.Array, meta):
         u32, jnp.uint16 if packing == 2 else jnp.uint8)  # (m, packing)
     flat = jax.lax.bitcast_convert_type(lanes.reshape(-1), dtype)
     return flat[:n].reshape(shape)
+
+
+# Backwards-compatible aliases from when these were module-private.
+_to_u32 = to_u32
+_from_u32 = from_u32
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -106,8 +116,8 @@ def inject(x: jax.Array, *, thresholds: KernelThresholds, seed: int,
            use_ref: bool = False) -> jax.Array:
     """Apply stuck-at faults to an arbitrary-dtype tensor in place of its
     physical words.  Returns a tensor of the same shape/dtype."""
-    u32, meta = _to_u32(x)
+    u32, meta = to_u32(x)
     out = inject_u32(u32, thresholds=thresholds, seed=seed,
                      base_word=base_word, method=method,
                      interpret=interpret, use_ref=use_ref)
-    return _from_u32(out, meta)
+    return from_u32(out, meta)

@@ -14,6 +14,19 @@ Two methods, bit-exact with the Pallas kernel (integer math only):
 Both derive stuck bits from hash(seed, physical word index), so the fault
 set is persistent across steps and monotone in voltage within a method.
 
+The mask builders come in two flavors sharing one code path:
+
+  * value-based (:func:`word_masks` / :func:`bitwise_masks`): thresholds
+    are passed as uint32 scalars or per-word arrays, which may be static
+    numpy constants *or traced values* -- rows of the fault map's
+    voltage-indexed threshold table.  This is what the arena engine's
+    fused kernels consume (thresholds arrive through scalar prefetch) and
+    what makes a jitted voltage sweep recompile-free.
+  * :class:`~repro.core.faultmap.KernelThresholds`-based wrappers
+    (:func:`_word_masks` / :func:`_bitwise_masks`): the legacy static
+    path; it folds the same integers at trace time, so both flavors are
+    bit-exact with each other by construction.
+
 All helpers take ``seed`` as a Python int and use numpy scalar constants
 only, so they can be called from inside the Pallas kernel body without
 capturing array constants.
@@ -31,16 +44,28 @@ _U31 = np.uint32(31)
 _FULL = np.uint32(0xFFFFFFFF)
 
 # Bit-planes in the bitwise path: probability resolution 2**-PLANES.
-PLANES = 20
+# (Canonical definition lives in repro.core.hashing; re-exported here for
+# backwards compatibility.)
+PLANES = H.PLANES
 
 
-def _word_masks(wid, seed: int, thr):
-    """Stuck-at masks for the word-hit fast path."""
-    row = wid >> np.uint32(thr.words_per_row_log2)
-    weak = H.hash_stream(seed, H.STREAM_ROW, row) < np.uint32(thr.weak_row_q)
+def _weak_rows(wid, seed: int, weak_row_q, words_per_row_log2: int):
+    row = wid >> np.uint32(words_per_row_log2)
+    return H.hash_stream(seed, H.STREAM_ROW, row) < weak_row_q
 
-    q01 = jnp.where(weak, np.uint32(thr.q01_weak), np.uint32(thr.q01_strong))
-    q10 = jnp.where(weak, np.uint32(thr.q10_weak), np.uint32(thr.q10_strong))
+
+def word_masks(wid, seed: int, *, q01_weak, q01_strong, q10_weak,
+               q10_strong, weak_row_q, words_per_row_log2: int):
+    """Stuck-at masks for the word-hit fast path.
+
+    Threshold operands are uint32 scalars or arrays broadcastable against
+    ``wid`` -- static numpy values and traced table rows behave
+    identically.  ``words_per_row_log2`` is always static (geometry).
+    """
+    weak = _weak_rows(wid, seed, weak_row_q, words_per_row_log2)
+
+    q01 = jnp.where(weak, q01_weak, q01_strong)
+    q10 = jnp.where(weak, q10_weak, q10_strong)
 
     hit01 = H.hash_stream(seed, H.STREAM_WORD_01, wid) < q01
     hit10 = H.hash_stream(seed, H.STREAM_WORD_10, wid) < q10
@@ -50,6 +75,16 @@ def _word_masks(wid, seed: int, thr):
     mask01 = jnp.where(hit01, _U1 << pos01, _U0)
     mask10 = jnp.where(hit10, _U1 << pos10, _U0)
     return mask01, mask10
+
+
+def _word_masks(wid, seed: int, thr):
+    """KernelThresholds wrapper around :func:`word_masks`."""
+    return word_masks(
+        wid, seed,
+        q01_weak=np.uint32(thr.q01_weak), q01_strong=np.uint32(thr.q01_strong),
+        q10_weak=np.uint32(thr.q10_weak), q10_strong=np.uint32(thr.q10_strong),
+        weak_row_q=np.uint32(thr.weak_row_q),
+        words_per_row_log2=thr.words_per_row_log2)
 
 
 def _plane(seed: int, j: int, direction: int, wid):
@@ -74,24 +109,30 @@ def _bitwise_lt(planes, t):
     return lt
 
 
-def _tq(p: float) -> int:
-    return min(2**PLANES - 1, int(round(p * float(2**PLANES))))
+def bitwise_masks(wid, seed: int, *, t01_weak, t01_strong, t10_weak,
+                  t10_strong, weak_row_q, words_per_row_log2: int):
+    """Exact per-bit stuck-at masks (PLANES-bit probability resolution).
 
-
-def _bitwise_masks(wid, seed: int, thr):
-    """Exact per-bit stuck-at masks (16-bit probability resolution)."""
-    row = wid >> np.uint32(thr.words_per_row_log2)
-    weak = H.hash_stream(seed, H.STREAM_ROW, row) < np.uint32(thr.weak_row_q)
-
-    def thresh(p_weak, p_strong):
-        return jnp.where(weak, np.uint32(_tq(p_weak)),
-                         np.uint32(_tq(p_strong)))
+    ``t*`` are PLANES-bit thresholds as uint32 scalars or arrays; like
+    :func:`word_masks` they may be static or traced.
+    """
+    weak = _weak_rows(wid, seed, weak_row_q, words_per_row_log2)
 
     planes01 = [_plane(seed, j, 0, wid) for j in range(PLANES)]
     planes10 = [_plane(seed, j, 1, wid) for j in range(PLANES)]
-    mask01 = _bitwise_lt(planes01, thresh(thr.p01_weak, thr.p01_strong))
-    mask10 = _bitwise_lt(planes10, thresh(thr.p10_weak, thr.p10_strong))
+    mask01 = _bitwise_lt(planes01, jnp.where(weak, t01_weak, t01_strong))
+    mask10 = _bitwise_lt(planes10, jnp.where(weak, t10_weak, t10_strong))
     return mask01, mask10
+
+
+def _bitwise_masks(wid, seed: int, thr):
+    """KernelThresholds wrapper around :func:`bitwise_masks`."""
+    return bitwise_masks(
+        wid, seed,
+        t01_weak=np.uint32(thr.t01_weak), t01_strong=np.uint32(thr.t01_strong),
+        t10_weak=np.uint32(thr.t10_weak), t10_strong=np.uint32(thr.t10_strong),
+        weak_row_q=np.uint32(thr.weak_row_q),
+        words_per_row_log2=thr.words_per_row_log2)
 
 
 def inject_u32_ref(data_u32, *, thresholds, seed: int, base_word: int,

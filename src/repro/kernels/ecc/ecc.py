@@ -17,9 +17,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import faultmap as fm
 from repro.kernels.bitflip.bitflip import (BLOCK_LANES, BLOCK_SUBLANES,
-                                           BLOCK_WORDS)
+                                           BLOCK_WORDS, block_word_ids)
 from repro.kernels.ecc import ref as _ref
 
 
@@ -55,3 +57,67 @@ def ecc_pallas(data2d: jax.Array, *, thresholds, seed: int, base_word: int,
                    pl.BlockSpec((1, 1), lambda i: (i, 0))),
         interpret=interpret,
     )(data2d)
+
+
+def arena_ecc_codewords(x, wid, thr_row, *, seed: int,
+                        words_per_row_log2: int):
+    """Fused inject+correct for one block from a traced threshold row.
+
+    Shared by the arena ECC kernel and the arena oracle (same contract
+    as :func:`repro.kernels.bitflip.bitflip.arena_masks`).
+    """
+    return _ref.ecc_codewords_vals(
+        x, wid, seed,
+        q01_weak=thr_row[fm.COL_Q01_WEAK],
+        q01_strong=thr_row[fm.COL_Q01_STRONG],
+        q10_weak=thr_row[fm.COL_Q10_WEAK],
+        q10_strong=thr_row[fm.COL_Q10_STRONG],
+        weak_row_q=thr_row[fm.COL_WEAK_ROW_Q],
+        par_q_weak=thr_row[fm.COL_PAR_Q_WEAK],
+        par_q_strong=thr_row[fm.COL_PAR_Q_STRONG],
+        words_per_row_log2=words_per_row_log2)
+
+
+def _arena_kernel(base_ref, thr_ref, x_ref, o_ref, bad_ref, *, seed,
+                  words_per_row_log2):
+    i = pl.program_id(0)
+    x = x_ref[...]
+    wid = block_word_ids(base_ref[i], x.shape)
+    thr_row = tuple(thr_ref[i, c] for c in range(fm.NUM_THR_COLS))
+    out, bad = arena_ecc_codewords(x, wid, thr_row, seed=seed,
+                                   words_per_row_log2=words_per_row_log2)
+    o_ref[...] = out
+    bad_ref[0, 0] = jnp.sum(bad.astype(jnp.int32))
+
+
+def arena_ecc_pallas(arena2d: jax.Array, block_base: jax.Array,
+                     block_thr: jax.Array, *, seed: int,
+                     words_per_row_log2: int, interpret: bool):
+    """Fused inject+SECDED over a whole domain arena in one pass.
+
+    Same operand contract as ``arena_bitflip_pallas`` plus a per-block
+    uncorrectable-codeword count output.
+    """
+    m, n = arena2d.shape
+    assert n == BLOCK_LANES and m % BLOCK_SUBLANES == 0, (m, n)
+    num_blocks = m // BLOCK_SUBLANES
+    assert block_base.shape == (num_blocks,), block_base.shape
+    assert block_thr.shape == (num_blocks, fm.NUM_THR_COLS), block_thr.shape
+    body = functools.partial(_arena_kernel, seed=seed,
+                             words_per_row_log2=words_per_row_log2)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(num_blocks,),
+        in_specs=[pl.BlockSpec((BLOCK_SUBLANES, BLOCK_LANES),
+                               lambda i, *_: (i, 0))],
+        out_specs=(pl.BlockSpec((BLOCK_SUBLANES, BLOCK_LANES),
+                                lambda i, *_: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i, *_: (i, 0))),
+    )
+    return pl.pallas_call(
+        body,
+        out_shape=(jax.ShapeDtypeStruct((m, n), jnp.uint32),
+                   jax.ShapeDtypeStruct((num_blocks, 1), jnp.int32)),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(block_base, block_thr, arena2d)

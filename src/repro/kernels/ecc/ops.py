@@ -7,12 +7,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.bitflip.bitflip import BLOCK_LANES, BLOCK_WORDS
+from repro.kernels.bitflip.ops import default_interpret as _default_interpret
 from repro.kernels.ecc import ref as _ref
 from repro.kernels.ecc.ecc import ecc_pallas
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -13,6 +13,12 @@ data, so no syndrome algebra is needed):
 Word-path injection only: ECC is useful exactly in the low-rate regime
 (p <= ~1e-3); near array collapse every codeword is multi-fault and ECC
 buys nothing (the paper's all-faulty region).
+
+Like the bitflip oracle, the codeword emulation comes in a value-based
+flavor (:func:`ecc_codewords_vals`, thresholds as uint32 scalars/arrays,
+static or traced) used by the arena engine, and a
+KernelThresholds-based wrapper (:func:`ecc_codewords`) for the legacy
+per-segment path.  Both fold to the same integer math.
 """
 from __future__ import annotations
 
@@ -20,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing as H
-from repro.kernels.bitflip.ref import _word_masks
+from repro.kernels.bitflip.ref import _weak_rows, word_masks
 
 STREAM_PARITY = 0x94D049BB
 
@@ -36,20 +42,20 @@ def popcount32(v):
     return (v * np.uint32(0x01010101)) >> np.uint32(24)
 
 
-def parity_q(thr) -> tuple[int, int]:
-    """(weak, strong) word-hit thresholds for the 8 parity bits."""
-    qw = H.rate_to_u32_threshold(min(1.0, 8.0 * (thr.p01_weak + thr.p10_weak)))
-    qs = H.rate_to_u32_threshold(min(1.0, 8.0 * (thr.p01_strong + thr.p10_strong)))
-    return qw, qs
-
-
-def ecc_codewords(data_u32, wid, seed: int, thr):
+def ecc_codewords_vals(data_u32, wid, seed: int, *, q01_weak, q01_strong,
+                       q10_weak, q10_strong, weak_row_q,
+                       par_q_weak, par_q_strong, words_per_row_log2: int):
     """Returns (corrected_u32, uncorrectable_bool_per_codeword).
 
     ``data_u32``/``wid`` must have an even number of elements along the
-    last axis (codewords are adjacent word pairs).
+    last axis (codewords are adjacent word pairs).  Threshold operands
+    are uint32 scalars or per-word arrays, static or traced.
     """
-    mask01, mask10 = _word_masks(wid, seed, thr)
+    mask01, mask10 = word_masks(
+        wid, seed,
+        q01_weak=q01_weak, q01_strong=q01_strong,
+        q10_weak=q10_weak, q10_strong=q10_strong,
+        weak_row_q=weak_row_q, words_per_row_log2=words_per_row_log2)
     mask10 = mask10 & ~mask01
     faulted = (data_u32 | mask01) & ~mask10
     fault_bits = faulted ^ data_u32
@@ -60,11 +66,11 @@ def ecc_codewords(data_u32, wid, seed: int, thr):
     counts = popcount32(fb[..., 0]) + popcount32(fb[..., 1])
 
     # Parity-bit faults: one draw per codeword, weak-row aware.
-    cw_id = wid.reshape(pair)[..., 0] >> _U1
-    row = wid.reshape(pair)[..., 0] >> np.uint32(thr.words_per_row_log2)
-    weak = H.hash_stream(seed, H.STREAM_ROW, row) < np.uint32(thr.weak_row_q)
-    qw, qs = parity_q(thr)
-    q = jnp.where(weak, np.uint32(qw), np.uint32(qs))
+    cw_wid = wid.reshape(pair)[..., 0]
+    cw_id = cw_wid >> _U1
+    weak = _weak_rows(cw_wid, seed, _cw_vals(weak_row_q, pair),
+                      words_per_row_log2)
+    q = jnp.where(weak, _cw_vals(par_q_weak, pair), _cw_vals(par_q_strong, pair))
     par_hit = H.hash_stream(seed, STREAM_PARITY, cw_id) < q
     counts = counts + par_hit.astype(jnp.uint32)
 
@@ -72,6 +78,28 @@ def ecc_codewords(data_u32, wid, seed: int, thr):
     keep_faulty = jnp.repeat(uncorrectable[..., None], 2, axis=-1).reshape(shape)
     out = jnp.where(keep_faulty, faulted, data_u32)
     return out, uncorrectable
+
+
+def _cw_vals(v, pair_shape):
+    """Reduce a per-word threshold operand to per-codeword (scalars pass
+    through; arrays take the first word of each pair)."""
+    v = jnp.asarray(v)
+    if v.ndim == 0:
+        return v
+    return jnp.broadcast_to(v, pair_shape[:-2] + (pair_shape[-2] * 2,)) \
+        .reshape(pair_shape)[..., 0]
+
+
+def ecc_codewords(data_u32, wid, seed: int, thr):
+    """KernelThresholds wrapper around :func:`ecc_codewords_vals`."""
+    return ecc_codewords_vals(
+        data_u32, wid, seed,
+        q01_weak=np.uint32(thr.q01_weak), q01_strong=np.uint32(thr.q01_strong),
+        q10_weak=np.uint32(thr.q10_weak), q10_strong=np.uint32(thr.q10_strong),
+        weak_row_q=np.uint32(thr.weak_row_q),
+        par_q_weak=np.uint32(thr.par_q_weak),
+        par_q_strong=np.uint32(thr.par_q_strong),
+        words_per_row_log2=thr.words_per_row_log2)
 
 
 def inject_and_correct_u32_ref(data_u32, *, thresholds, seed: int,

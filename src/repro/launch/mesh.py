@@ -17,12 +17,21 @@ from typing import Tuple
 import jax
 
 
+def make_mesh_auto(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where supported
+    (``jax.sharding.AxisType`` only exists in jax >= 0.5; Auto is the
+    default behavior on older releases)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_auto(shape, axes)
 
 
 def batch_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
@@ -32,6 +41,4 @@ def batch_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
 
 def make_smoke_mesh() -> jax.sharding.Mesh:
     """1-device mesh with production axis names (CPU tests)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_auto((1, 1), ("data", "model"))

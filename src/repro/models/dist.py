@@ -70,9 +70,8 @@ def current() -> Optional["DistContext"]:
 @functools.lru_cache(maxsize=1)
 def local_dist() -> DistContext:
     """1-device mesh for smoke tests / CPU examples."""
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_auto  # lazy: no models->launch
+    mesh = make_mesh_auto((1, 1), ("data", "model"))
     return DistContext(mesh=mesh, batch_axes=("data",), model_axis="model")
 
 

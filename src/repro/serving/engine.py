@@ -21,6 +21,16 @@ class ServeConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0
     undervolt: Optional[UndervoltPlan] = None
+    # Optional per-request KV-domain voltage override (may be traced):
+    # the arena engine re-derives thresholds from it at run time, so a
+    # serving fleet can walk cache voltage up and down under load
+    # without ever recompiling the decode step.  Method dispatch is
+    # static: 'auto' resolves from a *concrete* kv_voltage correctly,
+    # but a traced kv_voltage falls back to the domain's configured
+    # voltage -- traced sweeps reaching the collapse regime (rates
+    # > ~1e-3) must set kv_method='bitwise'.
+    kv_voltage: Optional[float] = None
+    kv_method: str = "auto"
 
 
 def _kv_placement(bundle, cfg, batch_size, sc):
@@ -54,7 +64,9 @@ def generate(bundle: ArchBundle, cfg: ArchConfig, params, batch: Dict,
         if placement is None:
             return c
         from repro.core.injection import inject_group
-        faulted, _ = inject_group(c, placement["kv_cache"], fmap)
+        faulted, _ = inject_group(c, placement["kv_cache"], fmap,
+                                  voltage=sc.kv_voltage,
+                                  method=sc.kv_method)
         return faulted
 
     cache = inject_cache(cache)

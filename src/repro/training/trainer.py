@@ -28,6 +28,16 @@ class TrainConfig:
     adamw: adamw.AdamWConfig = adamw.AdamWConfig()
     undervolt: Optional[UndervoltPlan] = None
     grad_compression: str = "none"          # none | int8_ef
+    # When set, batches may carry a scalar under this key that overrides
+    # the undervolt plan's *unsafe* domain voltages for the step
+    # (guardband-safe domains keep their protection).  The arena engine
+    # treats it as traced data, so a dynamic voltage schedule (online
+    # V_min search, per-step DVFS) runs inside one compiled step.
+    # Schedules reaching the collapse regime (per-bit rates > ~1e-3)
+    # should set undervolt_method='bitwise': 'auto' cannot see a traced
+    # voltage and dispatches from the configured domain voltages.
+    undervolt_voltage_key: Optional[str] = None
+    undervolt_method: str = "auto"
 
 
 def init_state(bundle: ArchBundle, cfg: ArchConfig, key) -> Dict[str, Any]:
@@ -72,6 +82,11 @@ def make_train_step(bundle: ArchBundle, cfg: ArchConfig,
     def step(state, batch):
         params = state["params"]
 
+        uv_voltage = None
+        if tc.undervolt_voltage_key is not None:
+            batch = dict(batch)
+            uv_voltage = batch.pop(tc.undervolt_voltage_key, None)
+
         if tc.microbatches == 1:
             (loss, metrics), grads = grad_fn(params, batch)
             grads = jax.tree_util.tree_map(
@@ -111,7 +126,9 @@ def make_train_step(bundle: ArchBundle, cfg: ArchConfig,
         if placements is not None:
             groups = {"params": new_params, "mu": new_opt["mu"],
                       "nu": new_opt["nu"]}
-            faulted, uv_metrics = tc.undervolt.apply(groups, placements)
+            faulted, uv_metrics = tc.undervolt.apply(
+                groups, placements, voltage=uv_voltage,
+                method=tc.undervolt_method)
             new_params = faulted["params"]
             new_opt = {**new_opt, "mu": faulted["mu"], "nu": faulted["nu"]}
             metrics = {**metrics, **uv_metrics}

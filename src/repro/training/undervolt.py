@@ -15,6 +15,7 @@ straight through to training-step energy.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -24,8 +25,17 @@ from repro.core.domains import GroupPlacement, MemoryDomain, place_groups
 from repro.core.faultmap import PAPER_MAP_SEED, FaultMap
 from repro.core.faultmodel import V_MIN, V_NOM
 from repro.core.hbm import HBMGeometry, TPU_V5E
-from repro.core.injection import clamp_nonfinite, inject_group
+from repro.core.engine import inject_groups
+from repro.core.injection import clamp_nonfinite
 from repro.core.voltage import DEFAULT_POWER_MODEL
+
+
+@functools.lru_cache(maxsize=None)
+def _fault_map(geometry: HBMGeometry, map_seed: int) -> FaultMap:
+    """Synthesizing a FaultMap runs numpy RNG over every PC; plans are
+    frozen, so memoize on (geometry, seed) instead of rebuilding it on
+    every ``apply``/``fault_map`` call."""
+    return FaultMap.from_seed(geometry, map_seed)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,23 +48,46 @@ class UndervoltPlan:
     enabled: bool = True
 
     def fault_map(self) -> FaultMap:
-        return FaultMap.from_seed(self.geometry, self.map_seed)
+        return _fault_map(self.geometry, self.map_seed)
 
     def place(self, groups: Dict[str, Any]) -> Dict[str, GroupPlacement]:
         return place_groups(groups, self.policy, self.domains,
                             self.geometry)
 
     def apply(self, groups: Dict[str, Any],
-              placements: Dict[str, GroupPlacement]):
-        """Inject each group's domain faults; returns (groups, metrics)."""
-        fmap = self.fault_map()
-        out, total_bad = {}, jnp.zeros((), jnp.int32)
-        for name, tree in groups.items():
-            faulted, bad = inject_group(tree, placements[name], fmap)
-            if self.mitigation == "clamp":
-                faulted = clamp_nonfinite(faulted)
-            out[name] = faulted
-            total_bad = total_bad + bad
+              placements: Dict[str, GroupPlacement], *, voltage=None,
+              method: str = "auto"):
+        """Inject each group's domain faults; returns (groups, metrics).
+
+        ``voltage`` optionally overrides the *unsafe* domains' voltages
+        and may be a *traced* scalar (e.g. a per-step schedule or an
+        online V_min search): the arena engine folds it into the
+        threshold-table computation, so sweeping it re-executes one
+        compiled step instead of retracing.  Guardband-safe domains are
+        never affected by a scalar override; pass a
+        ``{domain name: voltage}`` dict to target domains explicitly.
+        Dict keys are validated against the *plan's* domains, so one
+        schedule dict can be shared across calls (train step, serve
+        step) that each cover only some domains.
+
+        ``method`` picks the injection math ('auto' | 'word' |
+        'bitwise'); traced sweeps into the collapse regime (per-bit
+        rates > ~1e-3) should pass 'bitwise', since 'auto' cannot see a
+        traced voltage and dispatches from the configured domain
+        voltages.
+        """
+        if isinstance(voltage, dict):
+            unknown = set(voltage) - set(self.domains)
+            if unknown:
+                raise ValueError(
+                    f"voltage override names unknown domains "
+                    f"{sorted(unknown)}; plan has {sorted(self.domains)}")
+            present = {placements[name].domain.name for name in groups}
+            voltage = {k: v for k, v in voltage.items() if k in present}
+        out, total_bad = inject_groups(groups, placements, self.fault_map(),
+                                       voltage=voltage, method=method)
+        if self.mitigation == "clamp":
+            out = {name: clamp_nonfinite(tree) for name, tree in out.items()}
         return out, {"uncorrectable_faults": total_bad}
 
     def power_report(self, utilization: float = 1.0) -> Dict[str, Any]:
@@ -99,7 +132,7 @@ def aggressive_plan(v_unsafe: float = 0.91, mitigation: str = "clamp",
     """Three-factor trade-off in action: optimizer moments + master params
     stay in a guardband-safe domain on the most reliable PCs; bulk
     read-mostly tensors ride the unsafe region for extra savings."""
-    fmap = FaultMap.from_seed(geometry, map_seed)
+    fmap = _fault_map(geometry, map_seed)
     order = list(fmap.usable_pcs(v_unsafe, 1.0))  # most reliable first
     order += [p for p in range(geometry.num_pcs) if p not in order]
     safe_pcs = tuple(int(p) for p in order[:16])

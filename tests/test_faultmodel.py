@@ -1,8 +1,9 @@
 """Unit tests: the calibrated fault model reproduces the paper's anchors."""
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core.faultmodel import (DEFAULT_FAULT_MODEL as M, V_ALL_FAULTY,
                                    V_CRITICAL, V_MIN, V_NOM, V_ONSET_01,

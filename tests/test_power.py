@@ -1,7 +1,8 @@
 """Unit tests: the power model reproduces the paper's headline numbers."""
-import hypothesis
-import hypothesis.strategies as st
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core.faultmodel import V_CRITICAL, V_MIN, V_NOM
 from repro.core.voltage import DEFAULT_POWER_MODEL as P, P_IDLE_FRAC

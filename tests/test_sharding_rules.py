@@ -1,10 +1,11 @@
 """Unit + property tests for the sharding-rule resolution logic (pure
 logic over ParamSpecs -- no devices needed beyond the default one)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ALL_ARCHS

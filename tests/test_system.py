@@ -105,6 +105,59 @@ def test_serving_guardband_matches_nominal():
     np.testing.assert_array_equal(np.asarray(base), np.asarray(safe))
 
 
+def test_dynamic_voltage_key_threads_into_step():
+    """TrainConfig.undervolt_voltage_key: the batch scalar must actually
+    steer injection (guardband override -> clean step, deep override ->
+    faulted params), within one compiled step."""
+    plan = aggressive_plan(v_unsafe=0.91, mitigation="none",
+                           geometry=VCU128)
+    tc = trainer.TrainConfig(adamw=ADAMW, undervolt=plan,
+                             undervolt_voltage_key="hbm_v")
+    dc = DataConfig(vocab=CFG.vocab, seq_len=48, global_batch=8, seed=3)
+    traces = []
+
+    def counted_step(state, batch):
+        traces.append(1)
+        return trainer.make_train_step(BUNDLE, CFG, tc)(state, batch)
+
+    step = jax.jit(counted_step)
+    state = trainer.init_state(BUNDLE, CFG, jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in make_batch(dc, 0).items()}
+
+    def at(v):
+        s, _ = step(state, {**batch, "hbm_v": jnp.float32(v)})
+        return jax.tree_util.tree_flatten(s["params"])[0]
+
+    safe_a, safe_b, deep = at(0.98), at(0.98), at(0.88)
+    assert len(traces) == 1  # the sweep shares one compiled step
+    safe_eq = all(bool(jnp.all(x == y)) for x, y in zip(safe_a, safe_b))
+    assert safe_eq  # guardband override: deterministic, no injection
+    assert any(bool(jnp.any(x != y)) for x, y in zip(safe_a, deep))
+
+
+def test_serving_kv_voltage_override():
+    """ServeConfig.kv_voltage: a guardband override on an unsafe KV
+    domain must make generation match the no-undervolt baseline."""
+    params = trainer.init_state(BUNDLE, CFG, jax.random.PRNGKey(0))["params"]
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(5), (2, 12),
+                                          0, CFG.vocab)}
+    base = generate(BUNDLE, CFG, params, batch,
+                    ServeConfig(max_len=40, max_new_tokens=6))
+    plan = UndervoltPlan(
+        domains={"kv": MemoryDomain("kv", 0.89, tuple(range(VCU128.num_pcs)))},
+        policy={"kv_cache": "kv"}, geometry=VCU128)
+    lifted = generate(BUNDLE, CFG, params, batch,
+                      ServeConfig(max_len=40, max_new_tokens=6,
+                                  undervolt=plan, kv_voltage=0.98))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(lifted))
+    # deep override through the bitwise path just has to run cleanly
+    deep = generate(BUNDLE, CFG, params, batch,
+                    ServeConfig(max_len=40, max_new_tokens=6,
+                                undervolt=plan, kv_voltage=0.86,
+                                kv_method="bitwise"))
+    assert deep.shape == base.shape
+
+
 def test_data_pipeline_deterministic_and_sharded():
     dc = DataConfig(vocab=101, seq_len=16, global_batch=8, seed=4)
     a = make_batch(dc, step=7)
