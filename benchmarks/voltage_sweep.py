@@ -24,8 +24,13 @@ except ImportError:  # ... or as a file (python benchmarks/voltage_sweep.py)
                               arena_tree)
 from repro.core import engine, injection
 from repro.core.domains import MemoryDomain, place_groups
+from repro.core.faultmap import PAPER_MAP_SEED, FaultMap
+from repro.core.hbm import VCU128
+from repro.core.tradeoff import TradeoffSolver, voltage_grid
+from repro.training.undervolt import UndervoltPlan
 
 VOLTAGES = (0.93, 0.92, 0.91, 0.90, 0.89)
+BUDGETS = (1.0, 0.7, 0.62, 0.58, 0.55)
 
 
 def run():
@@ -59,6 +64,73 @@ def run():
              "us_per_call": float(np.mean(times[1:])),
              "derived": (f"traces=1;launches_per_domain={launches};"
                          f"blocks={n_blocks};first_call_us={times[0]:.0f}")}]
+
+    # --- governor-in-the-loop: re-planning voltage every step ----------
+    # The governor maps a traced power budget to a frontier voltage
+    # inside the compiled step (searchsorted over precomputed arrays),
+    # so per-step re-planning must cost ~nothing vs the fixed-voltage
+    # step and, critically, must not retrace.
+    plan = UndervoltPlan(
+        domains={"cheap": MemoryDomain("cheap", 0.91, tuple(range(6)))},
+        policy={"g": "cheap"}, geometry=GEOM, map_seed=7)
+    gov = plan.make_governor("cheap", mode="power", tolerable_rate=1.0,
+                             v_lo=0.89)
+    gov_traces = []
+
+    @jax.jit
+    def governed_step(t, budget):
+        gov_traces.append(1)
+        v = gov.voltage_at(budget)
+        out, _ = injection.inject_group(t, placement, FMAP, voltage=v,
+                                        method="word")
+        return out
+
+    @jax.jit
+    def fixed_step(t):
+        out, _ = injection.inject_group(t, placement, FMAP,
+                                        voltage=jnp.float32(0.91),
+                                        method="word")
+        return out
+
+    jax.block_until_ready(fixed_step(tree))   # compile
+    t0 = time.perf_counter()
+    for _ in range(len(BUDGETS)):
+        jax.block_until_ready(fixed_step(tree))
+    fixed_us = (time.perf_counter() - t0) / len(BUDGETS) * 1e6
+
+    gov_times = []
+    for b in BUDGETS:
+        t0 = time.perf_counter()
+        jax.block_until_ready(governed_step(tree, jnp.float32(b)))
+        gov_times.append((time.perf_counter() - t0) * 1e6)
+    assert len(gov_traces) == 1, (
+        f"governed step retraced {len(gov_traces)} times")
+    gov_us = float(np.mean(gov_times[1:]))
+    rows.append({
+        "name": "governor_in_loop_5pt",
+        "us_per_call": gov_us,
+        "derived": (f"traces=1;fixed_voltage_us={fixed_us:.0f};"
+                    f"replan_overhead_pct="
+                    f"{100.0 * (gov_us - fixed_us) / max(fixed_us, 1e-9):.1f};"
+                    f"steps_per_sec={1e6 / max(gov_us, 1e-9):.1f};"
+                    f"fixed_steps_per_sec={1e6 / max(fixed_us, 1e-9):.1f}")})
+
+    # --- frontier-solve latency -----------------------------------------
+    # One vectorized solve over the paper's full 40-point grid x 32 PCs
+    # (what a plan/governor rebuild costs at runtime).
+    solver = TradeoffSolver(FaultMap.from_seed(VCU128,
+                                               seed=PAPER_MAP_SEED))
+    grid = np.sort(voltage_grid())
+    f = solver.frontier(grid, 1e-6)        # compile
+    jax.block_until_ready(f.num_usable)
+    reps = 20
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(solver.frontier(grid, 1e-6).num_usable)
+    rows.append({
+        "name": "frontier_solve_40v_32pc",
+        "us_per_call": (time.perf_counter() - t0) / reps * 1e6,
+        "derived": f"grid_points={len(grid)};pcs={VCU128.num_pcs}"})
     return rows
 
 

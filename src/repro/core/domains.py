@@ -8,10 +8,18 @@ This module operationalizes that:
   * A :class:`MemoryDomain` is a named (voltage, PC subset, ECC flag)
     region -- e.g. ``SAFE`` at 0.98 V holding optimizer state, ``CHEAP``
     at 0.91 V holding fault-tolerant KV cache.
-  * A :class:`DomainAllocator` bump-allocates tensor groups into the
-    domain's PCs at DRAM-row granularity, producing physical segments;
-    the fault-injection kernel consumes physical word addresses so stuck
-    bits are stable properties of locations, not tensors.
+  * A :class:`DomainAllocator` allocates tensor groups into the domain's
+    PCs at aligned-block granularity, producing physical segments; the
+    fault-injection kernel consumes physical word addresses so stuck
+    bits are stable properties of locations, not tensors.  Given a fault
+    map it hands out pseudo-channels most-reliable-first and can skip
+    blocks containing *weak rows* (the paper's C9 spatial clustering) --
+    spare-row avoidance at allocation time.
+  * A :class:`CriticalityTier` is a tensor group's declared fault
+    tolerance (e.g. optimizer state = ``safe``, KV cache = ``cheap``);
+    :func:`place_groups_tiered` routes each group into the most
+    power-saving domain whose predicted stuck-cell rate -- over the
+    exact PC/row extent the group would occupy -- meets the tier.
 
 Placement works on avals (ShapeDtypeStruct) as well as concrete arrays,
 so capacity planning for full-scale models never allocates memory.
@@ -20,10 +28,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 
+from repro.core.faultmap import FaultMap
 from repro.core.faultmodel import V_CRITICAL, V_NOM
 from repro.core.hbm import HBMGeometry
 
@@ -40,6 +49,75 @@ ALIGN_WORDS = 4096
 class DeviceCrashError(RuntimeError):
     """Raised when a domain is driven below V_critical: the paper observes
     the part stops responding and needs a power cycle (section III-B)."""
+
+
+class CapacityError(MemoryError):
+    """Typed allocation-overflow error: names the domain, the requested
+    bytes and the remaining extent (subclasses :class:`MemoryError` for
+    backwards compatibility with callers catching the old bare error)."""
+
+    def __init__(self, domain: str, requested_bytes: int, free_bytes: int,
+                 note: str = ""):
+        self.domain = domain
+        self.requested_bytes = int(requested_bytes)
+        self.free_bytes = int(free_bytes)
+        msg = (f"domain {domain!r} out of capacity: requested "
+               f"{self.requested_bytes} B, remaining extent "
+               f"{self.free_bytes} B")
+        if note:
+            msg += f" ({note})"
+        super().__init__(msg)
+
+
+@dataclasses.dataclass(frozen=True)
+class CriticalityTier:
+    """A tensor group's declared fault tolerance.
+
+    ``max_rate`` is the tolerable total stuck-cell rate of the extent the
+    group occupies; ``max_rate <= 0`` means "provably fault-free in
+    expectation" (< 1 expected faulty bit per PC, the same rule as the
+    trade-off solver).  ``avoid_weak_rows`` additionally skips allocation
+    blocks containing weak rows, so the extent sees only the strong-row
+    rate -- spare-row avoidance of the worst rows.
+    """
+
+    name: str
+    max_rate: float
+    avoid_weak_rows: bool = False
+
+    def admits(self, rate: float, bits_per_pc: int) -> bool:
+        if self.max_rate <= 0.0:
+            return rate * bits_per_pc < 1.0
+        return rate <= self.max_rate
+
+
+# The default tier ladder, strictest first.  ``critical`` additionally
+# dodges weak rows so it stays clean deeper than ``safe``; ``hedged``
+# tolerates ppm-level faults on weak-row-free extents; ``cheap`` is for
+# fault-tolerant bulk data (KV cache, activations); ``disposable``
+# matches the paper's "0% to 50% fault rate" deep-undervolt example.
+TIERS: Dict[str, CriticalityTier] = {
+    t.name: t for t in (
+        CriticalityTier("critical", 0.0, avoid_weak_rows=True),
+        CriticalityTier("safe", 0.0),
+        CriticalityTier("hedged", 1e-6, avoid_weak_rows=True),
+        CriticalityTier("cheap", 1e-3),
+        CriticalityTier("disposable", 0.5),
+    )
+}
+
+
+def resolve_tier(tier) -> CriticalityTier:
+    if isinstance(tier, CriticalityTier):
+        return tier
+    if isinstance(tier, str):
+        try:
+            return TIERS[tier]
+        except KeyError:
+            raise ValueError(
+                f"unknown criticality tier {tier!r}; known: "
+                f"{sorted(TIERS)}") from None
+    raise TypeError(f"tier must be a name or CriticalityTier, got {tier!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,45 +241,125 @@ def _leaf_words(leaf) -> int:
 
 
 class DomainAllocator:
-    """Bump allocator over the concatenated extents of a domain's PCs."""
+    """Block-granular bump allocator over a domain's pseudo-channels.
 
-    def __init__(self, geometry: HBMGeometry, domain: MemoryDomain):
+    Without a fault map this behaves exactly like the original bump
+    allocator: PCs in the domain's declared order, every block eligible.
+    With a fault map, PCs are handed out most-reliable-first (at the
+    domain's configured voltage), and allocations may request *weak-row
+    avoidance*: blocks containing weak rows are skipped and kept as
+    spares for later tolerance-insensitive allocations, so avoidance
+    costs no capacity overall.
+
+    After a :class:`CapacityError` the allocator state is undefined; the
+    placement that triggered it must be rebuilt from scratch.
+    """
+
+    def __init__(self, geometry: HBMGeometry, domain: MemoryDomain,
+                 faultmap: Optional[FaultMap] = None,
+                 order_by_reliability: Optional[bool] = None):
         domain.validate(geometry)
         self.geometry = geometry
         self.domain = domain
+        self.faultmap = faultmap
         self.words_per_pc = geometry.bytes_per_pc // 4
+        assert self.words_per_pc % ALIGN_WORDS == 0, "PC must be block-aligned"
+        self.blocks_per_pc = self.words_per_pc // ALIGN_WORDS
         self.capacity_words = len(domain.pc_ids) * self.words_per_pc
-        self.cursor = 0
+        if order_by_reliability is None:
+            order_by_reliability = faultmap is not None
+        if order_by_reliability:
+            if faultmap is None:
+                raise ValueError("reliability ordering needs a fault map")
+            rank = {int(pc): i for i, pc in
+                    enumerate(faultmap.reliability_order(domain.voltage))}
+            self.pc_order: Tuple[int, ...] = tuple(sorted(
+                domain.pc_ids, key=lambda pc: rank[int(pc)]))
+        else:
+            self.pc_order = tuple(domain.pc_ids)
+        self._total_blocks = len(self.pc_order) * self.blocks_per_pc
+        self._cursor = 0                 # blocks handed past, in pc_order
+        self._spares: List[Tuple[int, int]] = []   # skipped weak blocks
+        self._free_blocks = self._total_blocks
+        self._weak_cache: Dict[int, object] = {}
 
     @property
     def free_words(self) -> int:
-        return self.capacity_words - self.cursor
+        return self._free_blocks * ALIGN_WORDS
 
-    def alloc(self, n_words: int) -> Tuple[Segment, ...]:
-        aligned = -(-n_words // ALIGN_WORDS) * ALIGN_WORDS
-        if aligned > self.free_words:
-            raise MemoryError(
-                f"domain {self.domain.name!r} out of capacity: need "
-                f"{aligned * 4} B, free {self.free_words * 4} B "
-                f"({len(self.domain.pc_ids)} PCs x "
-                f"{self.geometry.bytes_per_pc} B)")
+    def _block_at(self, i: int) -> Tuple[int, int]:
+        return self.pc_order[i // self.blocks_per_pc], i % self.blocks_per_pc
+
+    def _is_weak(self, pc: int, block: int) -> bool:
+        if self.faultmap is None:
+            return False
+        mask = self._weak_cache.get(pc)
+        if mask is None:
+            mask = self.faultmap.weak_block_mask(pc, ALIGN_WORDS)
+            self._weak_cache[pc] = mask
+        return bool(mask[block])
+
+    def _take(self, n_blocks: int, avoid_weak_rows: bool):
+        """The next ``n_blocks`` (pc, block) pairs under the avoidance
+        policy, plus the post-take cursor/spares -- or None if the domain
+        cannot supply them."""
+        cursor, spares = self._cursor, list(self._spares)
+        taken: List[Tuple[int, int]] = []
+        if not avoid_weak_rows:
+            while spares and len(taken) < n_blocks:
+                taken.append(spares.pop(0))
+        while len(taken) < n_blocks and cursor < self._total_blocks:
+            pc, blk = self._block_at(cursor)
+            cursor += 1
+            if avoid_weak_rows and self._is_weak(pc, blk):
+                spares.append((pc, blk))
+                continue
+            taken.append((pc, blk))
+        if len(taken) < n_blocks:
+            return None
+        return taken, cursor, spares
+
+    def peek_pcs(self, n_words: int,
+                 avoid_weak_rows: bool = False) -> Optional[Tuple[int, ...]]:
+        """PCs the next ``n_words`` allocation would occupy (no commit),
+        or None if it cannot be satisfied."""
+        got = self._take(-(-n_words // ALIGN_WORDS), avoid_weak_rows)
+        if got is None:
+            return None
+        return tuple(sorted({pc for pc, _ in got[0]}))
+
+    def alloc(self, n_words: int,
+              avoid_weak_rows: bool = False) -> Tuple[Segment, ...]:
+        n_blocks = -(-n_words // ALIGN_WORDS)
+        got = self._take(n_blocks, avoid_weak_rows)
+        if got is None:
+            note = (f"{len(self.domain.pc_ids)} PCs x "
+                    f"{self.geometry.bytes_per_pc} B")
+            if avoid_weak_rows:
+                note += "; weak-row-avoiding allocation"
+            raise CapacityError(self.domain.name, n_blocks * ALIGN_WORDS * 4,
+                                self.free_words * 4, note)
+        taken, self._cursor, self._spares = got
+        self._free_blocks -= n_blocks
         segments: List[Segment] = []
-        leaf_off, remaining = 0, n_words
-        while remaining > 0:
-            pc_slot = self.cursor // self.words_per_pc
-            in_pc = self.cursor % self.words_per_pc
-            pc = self.domain.pc_ids[pc_slot]
-            take = min(remaining, self.words_per_pc - in_pc)
-            segments.append(Segment(
-                leaf_start_word=leaf_off, n_words=take, pc=pc,
-                phys_base_word=pc * self.words_per_pc + in_pc))
-            self.cursor += take
-            leaf_off += take
-            remaining -= take
-        # advance to the next aligned slot
-        self.cursor = min(self.capacity_words,
-                          -(-self.cursor // ALIGN_WORDS) * ALIGN_WORDS)
+        for i, (pc, blk) in enumerate(taken):
+            base = pc * self.words_per_pc + blk * ALIGN_WORDS
+            words = min(ALIGN_WORDS, n_words - i * ALIGN_WORDS)
+            prev = segments[-1] if segments else None
+            if (prev is not None and prev.pc == pc
+                    and prev.phys_base_word + prev.n_words == base):
+                segments[-1] = dataclasses.replace(
+                    prev, n_words=prev.n_words + words)
+            else:
+                segments.append(Segment(
+                    leaf_start_word=i * ALIGN_WORDS, n_words=words, pc=pc,
+                    phys_base_word=base))
         return tuple(segments)
+
+
+def _sorted_leaves(tree):
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return sorted(paths, key=lambda kv: jax.tree_util.keystr(kv[0]))
 
 
 def place_groups(
@@ -217,9 +375,8 @@ def place_groups(
     for group_name in sorted(groups):
         domain_name = policy[group_name]
         alloc = allocators[domain_name]
-        leaves, paths = [], jax.tree_util.tree_flatten_with_path(
-            groups[group_name])[0]
-        for path, leaf in sorted(paths, key=lambda kv: jax.tree_util.keystr(kv[0])):
+        leaves = []
+        for path, leaf in _sorted_leaves(groups[group_name]):
             n_words = _leaf_words(leaf)
             leaves.append(LeafPlacement(
                 path=jax.tree_util.keystr(path), n_words=n_words,
@@ -227,4 +384,71 @@ def place_groups(
         out[group_name] = GroupPlacement(
             group=group_name, domain=domains[domain_name],
             leaves=tuple(leaves))
+    return out
+
+
+def place_groups_tiered(
+    groups: Dict[str, object],           # group name -> pytree (arrays/avals)
+    tiers: Dict[str, object],            # group name -> tier name or object
+    domains: Dict[str, MemoryDomain],
+    geometry: HBMGeometry,
+    faultmap: FaultMap,
+) -> Dict[str, GroupPlacement]:
+    """Criticality-aware placement: route each group to the most
+    power-saving domain whose predicted rate meets the group's tier.
+
+    Domains are tried deepest-voltage-first (maximum savings); a domain
+    is admissible for a group iff (a) it has capacity for the group's
+    aligned footprint under the tier's weak-row policy and (b) the
+    predicted stuck-cell rate of the *exact PC extent* the group would
+    occupy -- strong-row rate when the tier avoids weak rows -- meets
+    ``tier.max_rate``.  Groups are placed strictest-tier-first so the
+    most reliable PCs (allocators hand PCs out most-reliable-first) go
+    to the least fault-tolerant data.
+
+    Raises :class:`CapacityError` when no domain admits a group.
+    """
+    resolved = {g: resolve_tier(tiers[g]) for g in groups}
+    allocators = {name: DomainAllocator(geometry, d, faultmap=faultmap)
+                  for name, d in domains.items()}
+    # deepest voltage first = most power-saving first; name tie-break
+    dom_order = sorted(domains.values(), key=lambda d: (d.voltage, d.name))
+    out: Dict[str, GroupPlacement] = {}
+    for group_name in sorted(groups,
+                             key=lambda g: (resolved[g].max_rate, g)):
+        tier = resolved[group_name]
+        leaf_list = _sorted_leaves(groups[group_name])
+        footprint = sum(-(-_leaf_words(leaf) // ALIGN_WORDS) * ALIGN_WORDS
+                        for _, leaf in leaf_list)
+        placed = None
+        for d in dom_order:
+            alloc = allocators[d.name]
+            pcs = alloc.peek_pcs(footprint, tier.avoid_weak_rows)
+            if pcs is None:
+                continue                     # no capacity in this domain
+            # one rate sweep per (domain, tier) probe, not one per PC
+            rates = faultmap.predicted_rates(d.voltage,
+                                             tier.avoid_weak_rows)
+            worst = float(max(rates[pc] for pc in pcs))
+            if not tier.admits(worst, geometry.bits_per_pc):
+                continue                     # too unreliable for the tier
+            leaves = []
+            for path, leaf in leaf_list:
+                n_words = _leaf_words(leaf)
+                leaves.append(LeafPlacement(
+                    path=jax.tree_util.keystr(path), n_words=n_words,
+                    segments=alloc.alloc(
+                        n_words, avoid_weak_rows=tier.avoid_weak_rows)))
+            placed = GroupPlacement(group=group_name, domain=d,
+                                    leaves=tuple(leaves))
+            break
+        if placed is None:
+            free = max((allocators[d.name].free_words * 4
+                        for d in dom_order), default=0)
+            raise CapacityError(
+                "|".join(d.name for d in dom_order), footprint * 4, free,
+                f"no domain admits group {group_name!r} at tier "
+                f"{tier.name!r} (max_rate={tier.max_rate:g}, "
+                f"avoid_weak_rows={tier.avoid_weak_rows})")
+        out[group_name] = placed
     return out

@@ -180,6 +180,74 @@ class FaultMap:
         strong = (1.0 - self.weak_row_share) / (1.0 - self.weak_row_frac)
         return weak, strong
 
+    # ---- reliability scores (placement planner inputs) -------------------
+    def row_rates(self, v: float) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-PC (weak-row, strong-row) total stuck-cell rates at ``v``.
+
+        The row-level analogue of :meth:`pc_total_rate`, mirroring the
+        threshold-table synthesis: clustering modulates the exponential
+        regime only, the saturation collapse is spatially uniform.  The
+        criticality-aware allocator uses the strong-row rate to predict
+        the reliability of an extent that *avoids* weak rows.
+        """
+        wm, sm = self.row_multipliers()
+        weak = np.empty(self.geometry.num_pcs)
+        strong = np.empty(self.geometry.num_pcs)
+        for pc, m in enumerate(self.pc_multiplier):
+            e01, e10, s01, s10 = self.model.components(v, m)
+            p01w = np.clip(e01 * wm + s01, 0.0, 1.0)
+            p10w = np.clip(e10 * wm + s10, 0.0, 1.0)
+            p01s = np.clip(e01 * sm + s01, 0.0, 1.0)
+            p10s = np.clip(e10 * sm + s10, 0.0, 1.0)
+            weak[pc] = min(float(p01w + p10w), 1.0)
+            strong[pc] = min(float(p01s + p10s), 1.0)
+        return weak, strong
+
+    def predicted_rates(self, v: float,
+                        avoid_weak_rows: bool = False) -> np.ndarray:
+        """Per-PC predicted total stuck-cell rate of an extent at ``v``.
+
+        With ``avoid_weak_rows`` the extent skips every weak row, so only
+        the strong-row rate applies; otherwise the blended per-PC rate
+        (:meth:`pc_total_rate`) is the right expectation.  The tiered
+        placement planner scores candidate extents with this.
+        """
+        if avoid_weak_rows:
+            return self.row_rates(v)[1]
+        return self.pc_total_rate(v)
+
+    def reliability_order(self, v: float) -> np.ndarray:
+        """PC indices most-reliable-first at ``v`` (stable tie-break by
+        index) -- the allocation order of the criticality-aware planner."""
+        return np.argsort(self.pc_total_rate(v), kind="stable")
+
+    @property
+    def rows_per_pc(self) -> int:
+        return self.geometry.bytes_per_pc // self.geometry.row_bytes
+
+    def weak_row_mask(self, pc: int) -> np.ndarray:
+        """(rows_per_pc,) bool: which DRAM rows of ``pc`` are weak.
+
+        Bit-consistent with the kernels: a row is weak iff
+        ``hash(seed, STREAM_ROW, global_row) < q(weak_row_frac)`` --
+        exactly the draw :func:`repro.kernels.bitflip.ref._weak_rows`
+        makes from physical word ids, so the planner's spare-row
+        avoidance provably dodges the rows the injection kernels hit
+        hardest.
+        """
+        return _weak_row_mask_np(self, pc)
+
+    def weak_block_mask(self, pc: int, block_words: int) -> np.ndarray:
+        """(blocks_per_pc,) bool: blocks of ``block_words`` words in ``pc``
+        that contain at least one weak row (allocation granularity of the
+        spare-row-avoiding planner)."""
+        words_per_row = self.geometry.row_bytes // 4
+        assert block_words % words_per_row == 0, (block_words, words_per_row)
+        rows_per_block = block_words // words_per_row
+        mask = self.weak_row_mask(pc)
+        assert mask.shape[0] % rows_per_block == 0
+        return mask.reshape(-1, rows_per_block).any(axis=1)
+
     # ---- kernel thresholds ----------------------------------------------
     @property
     def words_per_row_log2(self) -> int:
@@ -279,6 +347,21 @@ def _threshold_table_jit(fmap: FaultMap, v) -> jax.Array:
          hashing.rate_to_plane_threshold_jnp(p10s),
          par_q(p01w, p10w), par_q(p01s, p10s)],
         axis=1)
+
+
+@functools.lru_cache(maxsize=128)
+def _weak_row_mask_np(fmap: FaultMap, pc: int) -> np.ndarray:
+    """Numpy mirror of the kernels' weak-row draw for one PC, memoized on
+    the frozen map.  Rows are indexed by *global* physical word id >>
+    words_per_row_log2, so the mask matches injection bit-for-bit."""
+    rows_per_pc = fmap.rows_per_pc
+    row0 = pc * rows_per_pc
+    rows = (np.uint32(row0)
+            + np.arange(rows_per_pc, dtype=np.uint32))
+    q = np.uint32(hashing.rate_to_u32_threshold(fmap.weak_row_frac))
+    with np.errstate(over="ignore"):
+        u = hashing.hash_stream(fmap.seed, hashing.STREAM_ROW, rows)
+    return np.asarray(u < q)
 
 
 @functools.lru_cache(maxsize=512)

@@ -10,16 +10,28 @@ paper's worked examples (all re-asserted in benchmarks/fig6_tradeoff.py):
   * 1e-6 rate  + half capacity   -> ~1.8x at 0.90 V
   * "2.3x savings is possible by sacrificing some memory space while the
      remaining memory space can work with 0% to 50% fault rate" (0.85 V)
+
+The solver is *vectorized and jit-compatible*: :meth:`TradeoffSolver.
+frontier` evaluates the whole (voltage, PC) grid in one traced jnp
+computation -- per-voltage best PC subset, savings, capacity and rates as
+stacked arrays -- so the runtime voltage governor can precompute it once
+and walk it with traced setpoints.  The scalar :meth:`point` /
+:meth:`solve` API is kept as a thin wrapper over the frontier and is
+cross-checked against :func:`oracle_point`, the original float64 numpy
+implementation.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.faultmap import FaultMap
-from repro.core.faultmodel import V_CRITICAL, V_NOM
+from repro.core.faultmodel import ALPHA_DROP_MAX, V_CRITICAL, V_NOM
 from repro.core.voltage import DEFAULT_POWER_MODEL, PowerModel
 
 
@@ -40,6 +52,118 @@ class TradeoffPoint:
     mean_pc_rate: float
 
 
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("voltages", "savings", "power", "pc_rate",
+                                "pc_order", "usable", "num_usable",
+                                "worst_rate", "mean_rate"),
+                   meta_fields=("bytes_per_pc",))
+@dataclasses.dataclass(frozen=True)
+class Frontier:
+    """Stacked per-voltage solution of the three-factor trade-off.
+
+    All arrays share leading axis V = len(voltages); ``pc_rate``,
+    ``pc_order`` and ``usable`` have a trailing PC axis.  The "best PC
+    subset" at voltage i is ``pc_order[i, :num_usable[i]]`` -- the usable
+    PCs most-reliable-first; truncate it to meet a capacity requirement.
+    Registered as a pytree so it can cross jit boundaries and live inside
+    a compiled control loop (the runtime voltage governor).
+    """
+
+    voltages: jax.Array      # (V,) float32
+    savings: jax.Array       # (V,) power-saving factor vs nominal
+    power: jax.Array         # (V,) normalized power factor (util=1)
+    pc_rate: jax.Array       # (V, P) per-PC total stuck-cell rate
+    pc_order: jax.Array      # (V, P) int32, PCs by ascending rate (stable)
+    usable: jax.Array        # (V, P) bool, rate meets the tolerance
+    num_usable: jax.Array    # (V,) int32
+    worst_rate: jax.Array    # (V,) max rate among usable PCs (0 if none)
+    mean_rate: jax.Array     # (V,) mean rate among usable PCs (0 if none)
+    bytes_per_pc: int
+
+    @property
+    def capacity_bytes(self) -> jax.Array:
+        """(V,) usable capacity.  float32: PC sizes are powers of two, so
+        every reachable value is exactly representable."""
+        return self.num_usable.astype(jnp.float32) * float(self.bytes_per_pc)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _frontier_jit(fmap: FaultMap, pm: PowerModel, v_grid, tol) -> Frontier:
+    """Whole-grid frontier in one traced computation.
+
+    ``v_grid`` and ``tol`` are runtime data (may be traced); the fault
+    map and power model are static.  float32 throughout -- the same
+    precision as the kernel threshold synthesis -- and cross-checked
+    against the float64 numpy oracle by the property tests.
+    """
+    mult = jnp.asarray(fmap.pc_multiplier, jnp.float32)
+    bits = jnp.float32(fmap.geometry.bits_per_pc)
+
+    def rates_at(v):
+        e01, e10, s01, s10 = fmap.model.components_jnp(v, mult)
+        r01 = jnp.clip(e01 + s01, 0.0, 1.0)
+        r10 = jnp.clip(e10 + s10, 0.0, 1.0)
+        # joint clip: a cell cannot be stuck both ways (matches
+        # FaultModel.rates, which rescales so r01 + r10 <= 1)
+        return jnp.minimum(r01 + r10, 1.0)
+
+    v_grid = jnp.asarray(v_grid, jnp.float32)
+    pc_rate = jax.vmap(rates_at)(v_grid)                      # (V, P)
+    order = jnp.argsort(pc_rate, axis=1, stable=True)
+    tol = jnp.asarray(tol, jnp.float32)
+    # tol <= 0 means "provably fault-free in expectation": < 1 expected
+    # faulty bit per PC (same rule as FaultMap.usable_pcs).
+    usable = jnp.where(tol > 0.0, pc_rate <= tol, pc_rate * bits < 1.0)
+    num_usable = jnp.sum(usable, axis=1).astype(jnp.int32)
+    worst = jnp.max(jnp.where(usable, pc_rate, 0.0), axis=1)
+    mean = (jnp.sum(jnp.where(usable, pc_rate, 0.0), axis=1)
+            / jnp.maximum(num_usable, 1).astype(jnp.float32))
+
+    # Power model, jnp port of PowerModel.power at util=1 (the load term
+    # cancels in the savings ratio, so savings is utilization-independent).
+    def stuck_at(v):
+        e01, e10, s01, s10 = pm.fault_model.components_jnp(
+            v, jnp.ones((1,), jnp.float32))
+        r01 = jnp.clip(e01 + s01, 0.0, 1.0)[0]
+        r10 = jnp.clip(e10 + s10, 0.0, 1.0)[0]
+        return jnp.minimum(r01 + r10, 1.0)
+
+    alpha = 1.0 - jnp.float32(ALPHA_DROP_MAX) * jax.vmap(stuck_at)(v_grid)
+    power = (v_grid / jnp.float32(V_NOM)) ** 2 * alpha
+    return Frontier(
+        voltages=v_grid, savings=1.0 / power, power=power,
+        pc_rate=pc_rate, pc_order=order.astype(jnp.int32), usable=usable,
+        num_usable=num_usable, worst_rate=worst, mean_rate=mean,
+        bytes_per_pc=int(fmap.geometry.bytes_per_pc))
+
+
+def oracle_point(faultmap: FaultMap, v: float, tolerable_rate: float,
+                 required_bytes: int,
+                 power_model: PowerModel = DEFAULT_POWER_MODEL,
+                 ) -> Optional[TradeoffPoint]:
+    """Float64 numpy oracle: the original scalar best-subset search.
+
+    Kept as an independent implementation of :meth:`TradeoffSolver.point`
+    -- the property tests hold the vectorized float32 frontier to it on
+    random fault maps.
+    """
+    geometry = faultmap.geometry
+    usable = faultmap.usable_pcs(v, tolerable_rate)
+    need = -(-required_bytes // geometry.bytes_per_pc)
+    if len(usable) < max(need, 1):
+        return None
+    keep = usable[:max(need, 1)] if required_bytes > 0 else usable
+    rates = faultmap.pc_total_rate(v)[keep]
+    return TradeoffPoint(
+        voltage=float(v),
+        savings=float(power_model.savings(v)),
+        pc_ids=tuple(int(p) for p in keep),
+        capacity_bytes=int(len(keep) * geometry.bytes_per_pc),
+        worst_pc_rate=float(rates.max()),
+        mean_pc_rate=float(rates.mean()),
+    )
+
+
 class TradeoffSolver:
     """Searches the (voltage, PC-subset) space for maximum power savings
     subject to capacity and tolerable-fault-rate constraints."""
@@ -50,31 +174,62 @@ class TradeoffSolver:
         self.power = power_model
         self.geometry = faultmap.geometry
 
+    # ---- vectorized core -------------------------------------------------
+    def frontier(self, v_grid: Optional[Sequence[float]] = None,
+                 tolerable_rate: float = 0.0) -> Frontier:
+        """Solve every voltage of ``v_grid`` at once (jit-compatible).
+
+        ``v_grid`` defaults to the paper's 10 mV sweep; it and
+        ``tolerable_rate`` may be traced.  Returns stacked arrays -- see
+        :class:`Frontier`.
+        """
+        grid = np.asarray(voltage_grid()) if v_grid is None else v_grid
+        return _frontier_jit(self.faultmap, self.power,
+                             jnp.asarray(grid, jnp.float32),
+                             jnp.asarray(tolerable_rate, jnp.float32))
+
+    # ---- scalar wrappers -------------------------------------------------
     def point(self, v: float, tolerable_rate: float,
               required_bytes: int) -> Optional[TradeoffPoint]:
-        """Best PC subset at a fixed voltage, or None if infeasible."""
-        usable = self.faultmap.usable_pcs(v, tolerable_rate)
+        """Best PC subset at a fixed voltage, or None if infeasible.
+
+        Thin wrapper over a single-voltage :meth:`frontier` row.
+        """
+        f = self.frontier(np.asarray([v], np.float32), tolerable_rate)
+        return self._point_from_row(f, 0, float(v), required_bytes)
+
+    def _point_from_row(self, f: Frontier, i: int, v: float,
+                        required_bytes: int) -> Optional[TradeoffPoint]:
+        n_usable = int(f.num_usable[i])
         need = -(-required_bytes // self.geometry.bytes_per_pc)
-        if len(usable) < need or need == 0 and required_bytes > 0:
+        if n_usable < max(need, 1):
             return None
-        keep = usable[:max(need, 1)] if required_bytes > 0 else usable
-        rates = self.faultmap.pc_total_rate(v)[keep]
+        keep_count = max(need, 1) if required_bytes > 0 else n_usable
+        order = np.asarray(f.pc_order[i])
+        rates = np.asarray(f.pc_rate[i])
+        keep = order[:keep_count]
+        kept_rates = rates[keep]
         return TradeoffPoint(
             voltage=float(v),
-            savings=float(self.power.savings(v)),
+            savings=float(f.savings[i]),
             pc_ids=tuple(int(p) for p in keep),
-            capacity_bytes=int(len(keep) * self.geometry.bytes_per_pc),
-            worst_pc_rate=float(rates.max()),
-            mean_pc_rate=float(rates.mean()),
+            capacity_bytes=int(keep_count * self.geometry.bytes_per_pc),
+            worst_pc_rate=float(kept_rates.max()),
+            mean_pc_rate=float(kept_rates.mean()),
         )
 
     def solve(self, required_bytes: int, tolerable_rate: float,
               v_grid: Optional[Sequence[float]] = None) -> TradeoffPoint:
         """Deepest feasible voltage == maximum power savings (power is
-        monotone in V, so scan low-to-high and return the first fit)."""
-        grid = np.asarray(v_grid if v_grid is not None else voltage_grid())
-        for v in np.sort(grid):          # lowest voltage first
-            p = self.point(float(v), tolerable_rate, required_bytes)
+        monotone in V).  One vectorized frontier solve over the grid."""
+        grid = np.sort(np.asarray(
+            v_grid if v_grid is not None else voltage_grid()))
+        f = self.frontier(grid, tolerable_rate)
+        need = max(-(-required_bytes // self.geometry.bytes_per_pc), 1)
+        feasible = np.asarray(f.num_usable) >= need
+        for i in np.flatnonzero(feasible):   # lowest voltage first
+            p = self._point_from_row(f, int(i), float(grid[i]),
+                                     required_bytes)
             if p is not None:
                 return p
         raise ValueError(
@@ -85,10 +240,10 @@ class TradeoffSolver:
                     v_grid: Optional[Sequence[float]] = None,
                     ) -> Dict[float, List[int]]:
         """Fig. 6: usable PC count per (tolerable rate, voltage)."""
-        grid = list(v_grid if v_grid is not None else voltage_grid())
+        grid = np.asarray(v_grid if v_grid is not None else voltage_grid())
         return {
-            float(t): [self.faultmap.num_usable_pcs(float(v), float(t))
-                       for v in grid]
+            float(t): [int(n) for n in
+                       np.asarray(self.frontier(grid, float(t)).num_usable)]
             for t in tolerable_rates
         }
 
@@ -96,17 +251,15 @@ class TradeoffSolver:
                v_grid: Optional[Sequence[float]] = None,
                ) -> List[TradeoffPoint]:
         """Capacity-vs-power frontier at one tolerable rate."""
-        grid = np.asarray(v_grid if v_grid is not None else voltage_grid())
+        grid = np.sort(np.asarray(
+            v_grid if v_grid is not None else voltage_grid()))[::-1]
+        f = self.frontier(grid, tolerable_rate)
+        num = np.asarray(f.num_usable)
         pts = []
-        for v in np.sort(grid)[::-1]:    # nominal first
-            usable = self.faultmap.usable_pcs(float(v), tolerable_rate)
-            if len(usable) == 0:
+        for i in range(len(grid)):           # nominal first
+            if num[i] == 0:
                 continue
-            rates = self.faultmap.pc_total_rate(float(v))[usable]
-            pts.append(TradeoffPoint(
-                voltage=float(v), savings=float(self.power.savings(v)),
-                pc_ids=tuple(int(p) for p in usable),
-                capacity_bytes=int(len(usable) * self.geometry.bytes_per_pc),
-                worst_pc_rate=float(rates.max()),
-                mean_pc_rate=float(rates.mean())))
+            p = self._point_from_row(f, i, float(grid[i]), 0)
+            if p is not None:
+                pts.append(p)
         return pts

@@ -25,22 +25,34 @@ class ServeConfig:
     # the arena engine re-derives thresholds from it at run time, so a
     # serving fleet can walk cache voltage up and down under load
     # without ever recompiling the decode step.  Method dispatch is
-    # static: 'auto' resolves from a *concrete* kv_voltage correctly,
-    # but a traced kv_voltage falls back to the domain's configured
-    # voltage -- traced sweeps reaching the collapse regime (rates
-    # > ~1e-3) must set kv_method='bitwise'.
+    # static: 'auto' resolves from a *concrete* kv_voltage correctly; a
+    # *traced* kv_voltage with kv_method='auto' is rejected up front
+    # (generate raises ValueError) -- traced sweeps must pick the method
+    # explicitly ('bitwise' once rates cross ~1e-3).
     kv_voltage: Optional[float] = None
     kv_method: str = "auto"
+    # Frontier-walking admission governor (repro.training.governor),
+    # built from ``undervolt``: at admission time the engine re-plans
+    # the KV-cache voltage to the deepest point at which the governed
+    # domain keeps enough *usable* capacity for this request's cache.
+    # Mutually exclusive with kv_voltage.
+    governor: Optional[object] = None
 
 
 def _kv_placement(bundle, cfg, batch_size, sc):
     if sc.undervolt is None or not sc.undervolt.enabled:
         return None
-    if "kv_cache" not in sc.undervolt.policy:
+    if not sc.undervolt.covers("kv_cache"):
         return None
     cache_avals = spec_avals(
         bundle.module.cache_specs(cfg, batch_size, sc.max_len))
     return sc.undervolt.place({"kv_cache": cache_avals})
+
+
+def _static_kv_voltage(v):
+    """float(v) for concrete scalars, None for traced values."""
+    from repro.core.engine import _static_value
+    return _static_value(v)
 
 
 def generate(bundle: ArchBundle, cfg: ArchConfig, params, batch: Dict,
@@ -51,6 +63,40 @@ def generate(bundle: ArchBundle, cfg: ArchConfig, params, batch: Dict,
     b, s = tokens.shape
     placement = _kv_placement(bundle, cfg, b, sc)
     fmap = sc.undervolt.fault_map() if placement is not None else None
+
+    kv_voltage = sc.kv_voltage
+    if sc.governor is not None:
+        if sc.kv_voltage is not None:
+            raise ValueError(
+                "ServeConfig.governor and kv_voltage are mutually "
+                "exclusive voltage controls")
+        if sc.undervolt is None or sc.governor.plan is not sc.undervolt:
+            raise ValueError(
+                "sc.governor must be built from sc.undervolt (its "
+                "frontier/capacity tables belong to that plan's fault "
+                "map and domains)")
+        if placement is None:
+            raise ValueError(
+                "ServeConfig.governor is set but the undervolt plan "
+                "does not place 'kv_cache' (or is disabled): admission "
+                "governance would silently be a no-op")
+        kv_domain = placement["kv_cache"].domain.name
+        if sc.governor.config.domain != kv_domain:
+            raise ValueError(
+                f"sc.governor governs domain "
+                f"{sc.governor.config.domain!r} but the KV cache is "
+                f"placed in domain {kv_domain!r}")
+        # Admission-time re-plan: deepest voltage at which the governed
+        # domain keeps this request's cache bytes usable.
+        kv_bytes = placement["kv_cache"].total_words * 4
+        kv_voltage = sc.governor.admit(kv_bytes)
+    if (kv_voltage is not None and sc.kv_method == "auto"
+            and _static_kv_voltage(kv_voltage) is None):
+        raise ValueError(
+            "ServeConfig.kv_method='auto' cannot dispatch from a traced "
+            "kv_voltage (method selection is static); pass "
+            "kv_method='word' or 'bitwise' explicitly for traced "
+            "voltage schedules")
 
     prefill = jax.jit(lambda p, bt: bundle.module.prefill(
         p, bt, cfg, sc.max_len, dist))
@@ -65,7 +111,7 @@ def generate(bundle: ArchBundle, cfg: ArchConfig, params, batch: Dict,
             return c
         from repro.core.injection import inject_group
         faulted, _ = inject_group(c, placement["kv_cache"], fmap,
-                                  voltage=sc.kv_voltage,
+                                  voltage=kv_voltage,
                                   method=sc.kv_method)
         return faulted
 

@@ -1,0 +1,168 @@
+"""Runtime voltage governor: the paper's Fig. 6 trade-off as a control
+loop.
+
+The offline story (Section III-C) is a table: at each voltage, some
+pseudo-channels are reliable enough and the power model prices the rail.
+Voltron's observation is that reduced-voltage operation pays off when the
+system picks operating points *dynamically* from a characterized profile;
+this module is that profile, precomputed once as the vectorized
+:meth:`~repro.core.tradeoff.TradeoffSolver.frontier` and then walked
+every step with *traced* setpoints:
+
+  * ``mode='power'``: given a power budget (normalized power factor, as
+    from a datacenter power cap), run the governed domain at the highest
+    voltage -- i.e. the most reliable point -- whose power fits the
+    budget.
+  * ``mode='rate'``: given a tolerable worst-PC stuck-cell rate, run at
+    the deepest voltage -- maximum savings -- that still meets it.
+
+Both walks are a ``searchsorted`` over precomputed monotone arrays, so a
+jitted train step re-plans voltage *every step* and still compiles
+exactly once: the chosen voltage flows into the arena injection engine
+through the PR-1 traced-voltage override path.
+
+Serving admission is the third entry point: :meth:`VoltageGovernor.admit`
+picks the deepest voltage at which the governed domain retains enough
+*usable* capacity (tolerable-rate-clean PCs) for a request's KV cache --
+the paper's capacity/rate/power triangle applied per admission.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.domains import CapacityError
+from repro.core.faultmodel import V_MIN
+from repro.core.tradeoff import TradeoffSolver, voltage_grid
+from repro.core.voltage import DEFAULT_POWER_MODEL, PowerModel
+
+
+@dataclasses.dataclass(frozen=True)
+class GovernorConfig:
+    """Static policy of a :class:`VoltageGovernor`.
+
+    ``tolerable_rate`` defines which PCs count as *usable* for the
+    capacity constraint (same semantics as the trade-off solver);
+    ``required_bytes`` is the capacity the governed domain must keep
+    usable at any chosen voltage.  ``setpoint`` is the default walk
+    target when a step supplies none: a normalized power factor in
+    ``mode='power'`` (1.0 = nominal power), a worst-PC stuck-cell rate
+    in ``mode='rate'``.
+    """
+
+    domain: str
+    mode: str = "power"              # 'power' | 'rate'
+    tolerable_rate: float = 1e-6
+    required_bytes: int = 0
+    setpoint: float = 1.0
+    v_hi: float = V_MIN
+    v_lo: float = 0.86
+    step: float = 0.01
+
+
+class VoltageGovernor:
+    """Walks one domain's voltage along the precomputed frontier.
+
+    Built once per plan (host-side numpy + one vectorized frontier
+    solve); :meth:`voltage_at` is pure jnp on captured constants, so it
+    can be called with traced setpoints inside a compiled step.
+    """
+
+    def __init__(self, plan, config: GovernorConfig,
+                 power_model: PowerModel = DEFAULT_POWER_MODEL):
+        if config.mode not in ("power", "rate"):
+            raise ValueError(f"unknown governor mode {config.mode!r}")
+        if config.domain not in plan.domains:
+            raise ValueError(
+                f"governor domain {config.domain!r} not in plan domains "
+                f"{sorted(plan.domains)}")
+        self.config = config
+        self.plan = plan
+        domain = plan.domains[config.domain]
+        fmap = plan.fault_map()
+        geometry = fmap.geometry
+        solver = TradeoffSolver(fmap, power_model)
+        grid = np.sort(voltage_grid(config.v_hi, config.v_lo, config.step))
+        f = solver.frontier(grid, config.tolerable_rate)
+
+        dom_pcs = np.asarray(domain.pc_ids, np.int64)
+        usable = np.asarray(f.usable)[:, dom_pcs]           # (V, |dom|)
+        cap = usable.sum(axis=1) * geometry.bytes_per_pc    # (V,)
+        worst = np.asarray(f.pc_rate)[:, dom_pcs].max(axis=1)
+        power = np.asarray(f.power)
+
+        self._v_np = np.asarray(grid, np.float32)
+        self._cap_np = cap
+        self._power_np = power
+        self._rate_np = worst
+        feasible = cap >= config.required_bytes
+        if not feasible.any():
+            raise CapacityError(
+                config.domain, config.required_bytes, int(cap.max()),
+                f"no voltage in [{config.v_lo}, {config.v_hi}] keeps "
+                f"enough usable capacity at tolerable rate "
+                f"{config.tolerable_rate:g}")
+        # Feasible sub-frontier, ascending voltage.  Power is monotone
+        # increasing and worst-rate monotone non-increasing in voltage,
+        # so both walks are a single searchsorted.
+        self._v = jnp.asarray(self._v_np[feasible])
+        self._power = jnp.asarray(power[feasible], jnp.float32)
+        self._rate_rev = jnp.asarray(worst[feasible][::-1], jnp.float32)
+        self._n = int(feasible.sum())
+
+    # ---- per-step walk (traced-setpoint capable) ------------------------
+    def voltage_at(self, setpoint=None):
+        """Frontier voltage for ``setpoint`` (may be a traced scalar).
+
+        ``mode='power'``: highest feasible voltage with power factor <=
+        setpoint (clamped to the deepest feasible voltage when even that
+        exceeds the budget).  ``mode='rate'``: deepest feasible voltage
+        with worst-PC rate <= setpoint (clamped to the highest feasible
+        voltage when even it is too faulty).
+        """
+        if setpoint is None:
+            setpoint = self.config.setpoint
+        s = jnp.asarray(setpoint, jnp.float32)
+        if self.config.mode == "power":
+            idx = jnp.searchsorted(self._power, s, side="right") - 1
+        else:
+            idx = self._n - jnp.searchsorted(self._rate_rev, s,
+                                             side="right")
+        return self._v[jnp.clip(idx, 0, self._n - 1)]
+
+    def override(self, setpoint=None) -> Dict[str, object]:
+        """Voltage-override dict for ``UndervoltPlan.apply`` /
+        ``inject_groups`` targeting the governed domain."""
+        return {self.config.domain: self.voltage_at(setpoint)}
+
+    # ---- admission-time re-plan (host-side, concrete) -------------------
+    def admit(self, required_bytes: int,
+              setpoint: Optional[float] = None) -> float:
+        """Deepest voltage keeping ``required_bytes`` of usable capacity.
+
+        Host-side (concrete float out): serving calls this once per
+        admitted request, then threads the voltage into the decode loop
+        through the traced override path.  In ``mode='rate'`` a
+        ``setpoint`` additionally caps the worst-PC rate; in
+        ``mode='power'`` it caps the power factor (a *floor* on voltage
+        never helps admission, so the budget only rules out voltages
+        above it).
+        """
+        ok = self._cap_np >= max(int(required_bytes), 0)
+        if setpoint is not None:
+            if self.config.mode == "rate":
+                ok &= self._rate_np <= float(setpoint)
+            else:
+                ok &= self._power_np <= float(setpoint)
+        hits = np.flatnonzero(ok)
+        if hits.size == 0:
+            raise CapacityError(
+                self.config.domain, int(required_bytes),
+                int(self._cap_np.max()),
+                f"admission infeasible on [{self.config.v_lo}, "
+                f"{self.config.v_hi}] at tolerable rate "
+                f"{self.config.tolerable_rate:g}")
+        return float(self._v_np[hits[0]])       # ascending grid: deepest

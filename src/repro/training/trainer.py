@@ -38,6 +38,17 @@ class TrainConfig:
     # voltage and dispatches from the configured domain voltages.
     undervolt_voltage_key: Optional[str] = None
     undervolt_method: str = "auto"
+    # Frontier-walking runtime governor (repro.training.governor): each
+    # step re-plans the governed domain's voltage from a setpoint -- a
+    # power budget or rate target carried in the batch under
+    # ``governor_key`` (falling back to the governor's configured
+    # setpoint) -- through the same traced override path, so re-planning
+    # every step still compiles exactly once.  Mutually exclusive with
+    # undervolt_voltage_key, and requires an explicit undervolt_method
+    # ('word' | 'bitwise'): the governed voltage is traced, so 'auto'
+    # dispatch cannot see it.
+    governor: Optional[Any] = None
+    governor_key: Optional[str] = None
 
 
 def init_state(bundle: ArchBundle, cfg: ArchConfig, key) -> Dict[str, Any]:
@@ -72,6 +83,19 @@ def make_train_step(bundle: ArchBundle, cfg: ArchConfig,
     """Build the jit-able train step."""
     module = bundle.module
     placements = _placements(bundle, cfg, tc)
+    if tc.governor is not None:
+        if tc.undervolt_voltage_key is not None:
+            raise ValueError(
+                "TrainConfig.governor and undervolt_voltage_key are "
+                "mutually exclusive voltage controls")
+        if tc.undervolt is None or tc.governor.plan is not tc.undervolt:
+            raise ValueError("tc.governor must be built from tc.undervolt")
+        if tc.undervolt_method == "auto":
+            raise ValueError(
+                "TrainConfig.governor drives a traced voltage, which "
+                "'auto' method dispatch cannot see (it would silently "
+                "dispatch from the configured domain voltages); set "
+                "undervolt_method='word' or 'bitwise' explicitly")
 
     def loss_fn(params, mb):
         loss, metrics = module.forward_train(params, mb, cfg, dist)
@@ -83,7 +107,15 @@ def make_train_step(bundle: ArchBundle, cfg: ArchConfig,
         params = state["params"]
 
         uv_voltage = None
-        if tc.undervolt_voltage_key is not None:
+        governed_v = None
+        if tc.governor is not None:
+            setpoint = None
+            if tc.governor_key is not None:
+                batch = dict(batch)
+                setpoint = batch.pop(tc.governor_key, None)
+            governed_v = tc.governor.voltage_at(setpoint)
+            uv_voltage = {tc.governor.config.domain: governed_v}
+        elif tc.undervolt_voltage_key is not None:
             batch = dict(batch)
             uv_voltage = batch.pop(tc.undervolt_voltage_key, None)
 
@@ -132,6 +164,8 @@ def make_train_step(bundle: ArchBundle, cfg: ArchConfig,
             new_params = faulted["params"]
             new_opt = {**new_opt, "mu": faulted["mu"], "nu": faulted["nu"]}
             metrics = {**metrics, **uv_metrics}
+            if governed_v is not None:
+                metrics["governor_voltage"] = governed_v
 
         new_state["params"] = new_params
         new_state["opt"] = new_opt

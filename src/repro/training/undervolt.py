@@ -21,7 +21,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.domains import GroupPlacement, MemoryDomain, place_groups
+from repro.core.domains import (GroupPlacement, MemoryDomain, place_groups,
+                                place_groups_tiered)
 from repro.core.faultmap import PAPER_MAP_SEED, FaultMap
 from repro.core.faultmodel import V_MIN, V_NOM
 from repro.core.hbm import HBMGeometry, TPU_V5E
@@ -41,18 +42,42 @@ def _fault_map(geometry: HBMGeometry, map_seed: int) -> FaultMap:
 @dataclasses.dataclass(frozen=True)
 class UndervoltPlan:
     domains: Dict[str, MemoryDomain]
-    policy: Dict[str, str]                  # tensor group -> domain name
+    policy: Optional[Dict[str, str]] = None  # tensor group -> domain name
     geometry: HBMGeometry = TPU_V5E
     map_seed: int = PAPER_MAP_SEED
     mitigation: str = "none"                # none | clamp
     enabled: bool = True
+    # Criticality-aware alternative to ``policy``: tensor group -> tier
+    # (name in repro.core.domains.TIERS or a CriticalityTier).  The
+    # placement planner then routes each group to the most power-saving
+    # domain whose predicted fault rate meets the tier, most-reliable
+    # PCs first, with optional weak-row avoidance.
+    tiers: Optional[Dict[str, Any]] = None
 
     def fault_map(self) -> FaultMap:
         return _fault_map(self.geometry, self.map_seed)
 
     def place(self, groups: Dict[str, Any]) -> Dict[str, GroupPlacement]:
+        if self.tiers is not None:
+            tiers = {g: self.tiers[g] for g in groups}
+            return place_groups_tiered(groups, tiers, self.domains,
+                                       self.geometry, self.fault_map())
+        if self.policy is None:
+            raise ValueError("UndervoltPlan needs a policy or tiers")
         return place_groups(groups, self.policy, self.domains,
                             self.geometry)
+
+    def covers(self, group: str) -> bool:
+        """Whether this plan places ``group`` (policy- or tier-driven)."""
+        mapping = self.tiers if self.tiers is not None else self.policy
+        return mapping is not None and group in mapping
+
+    def make_governor(self, domain: str, **config_kw):
+        """Frontier-walking runtime governor for one of this plan's
+        domains (see :mod:`repro.training.governor`)."""
+        from repro.training.governor import GovernorConfig, VoltageGovernor
+        return VoltageGovernor(self, GovernorConfig(domain=domain,
+                                                    **config_kw))
 
     def apply(self, groups: Dict[str, Any],
               placements: Dict[str, GroupPlacement], *, voltage=None,
@@ -144,4 +169,30 @@ def aggressive_plan(v_unsafe: float = 0.91, mitigation: str = "clamp",
         },
         policy={"params": "cheap", "mu": "safe", "nu": "safe",
                 "kv_cache": "cheap"},
+        geometry=geometry, map_seed=map_seed, mitigation=mitigation)
+
+
+def tiered_plan(v_unsafe: float = 0.91, mitigation: str = "clamp",
+                ecc: bool = False,
+                geometry: HBMGeometry = TPU_V5E,
+                map_seed: int = PAPER_MAP_SEED,
+                tiers: Optional[Dict[str, Any]] = None) -> UndervoltPlan:
+    """Criticality-tiered variant of :func:`aggressive_plan`: the same
+    safe/cheap domain split, but groups declare *tiers* and the planner
+    routes them -- optimizer state must stay provably clean, bulk
+    read-mostly tensors ride the deepest domain their tolerance admits,
+    each on the most reliable PCs still free."""
+    fmap = _fault_map(geometry, map_seed)
+    order = list(fmap.reliability_order(v_unsafe))
+    safe_pcs = tuple(int(p) for p in order[:16])
+    cheap_pcs = tuple(int(p) for p in order[16:])
+    if tiers is None:
+        tiers = {"params": "cheap", "mu": "safe", "nu": "safe",
+                 "kv_cache": "cheap"}
+    return UndervoltPlan(
+        domains={
+            "safe": MemoryDomain("safe", V_MIN, safe_pcs),
+            "cheap": MemoryDomain("cheap", v_unsafe, cheap_pcs, ecc=ecc),
+        },
+        tiers=dict(tiers),
         geometry=geometry, map_seed=map_seed, mitigation=mitigation)

@@ -1,16 +1,24 @@
-"""Unit tests: memory domains, physical placement, pytree injection."""
+"""Unit tests: memory domains, physical placement, pytree injection,
+criticality-tiered placement and spare-row avoidance."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import injection
-from repro.core.domains import (ALIGN_WORDS, DeviceCrashError,
-                                DomainAllocator, MemoryDomain, place_groups)
+from repro.core.domains import (ALIGN_WORDS, CapacityError, CriticalityTier,
+                                DeviceCrashError, DomainAllocator,
+                                MemoryDomain, place_groups,
+                                place_groups_tiered, resolve_tier)
 from repro.core.faultmap import PAPER_MAP_SEED, FaultMap
-from repro.core.hbm import VCU128
+from repro.core.hbm import VCU128, HBMGeometry
 
 FMAP = FaultMap.from_seed(VCU128, seed=PAPER_MAP_SEED)
+
+# Small PCs so modest allocations straddle PCs and hit weak blocks.
+TINY = HBMGeometry(name="tiny", num_stacks=2, channels_per_stack=2,
+                   pcs_per_channel=2, bytes_per_pc=64 * 1024)
+TINY_FMAP = FaultMap.from_seed(TINY, seed=7)
 
 
 def test_domain_validation():
@@ -43,6 +51,125 @@ def test_allocator_capacity_error():
     a = DomainAllocator(VCU128, d)
     with pytest.raises(MemoryError):
         a.alloc(VCU128.bytes_per_pc // 4 + 1)
+
+
+def test_capacity_error_is_typed():
+    d = MemoryDomain("tiny", 0.95, (0,))
+    a = DomainAllocator(VCU128, d)
+    with pytest.raises(CapacityError) as ei:
+        a.alloc(VCU128.bytes_per_pc // 4 + 1)
+    e = ei.value
+    assert isinstance(e, MemoryError)
+    assert e.domain == "tiny"
+    assert e.requested_bytes == VCU128.bytes_per_pc + ALIGN_WORDS * 4
+    assert e.free_bytes == VCU128.bytes_per_pc
+    assert "tiny" in str(e) and str(e.requested_bytes) in str(e)
+
+
+def test_allocator_reliability_ordering():
+    """With a fault map, PCs are handed out most-reliable-first."""
+    dom = MemoryDomain("d", 0.91, tuple(range(TINY.num_pcs)))
+    a = DomainAllocator(TINY, dom, faultmap=TINY_FMAP)
+    best = int(TINY_FMAP.reliability_order(0.91)[0])
+    segs = a.alloc(ALIGN_WORDS)
+    assert segs[0].pc == best
+    # without a fault map the declared order is preserved
+    b = DomainAllocator(TINY, MemoryDomain("d", 0.91, (5, 2)))
+    assert b.alloc(ALIGN_WORDS)[0].pc == 5
+
+
+def test_allocator_weak_row_avoidance():
+    """avoid_weak_rows=True never lands on a block containing a weak
+    row, and the skipped weak blocks are recycled for tolerant allocs."""
+    dom = MemoryDomain("d", 0.90, tuple(range(TINY.num_pcs)))
+    a = DomainAllocator(TINY, dom, faultmap=TINY_FMAP)
+    total_blocks = TINY.num_pcs * (TINY.bytes_per_pc // 4 // ALIGN_WORDS)
+    n_weak = sum(int(TINY_FMAP.weak_block_mask(pc, ALIGN_WORDS).sum())
+                 for pc in range(TINY.num_pcs))
+    assert 0 < n_weak < total_blocks
+    clean_words = (total_blocks - n_weak) * ALIGN_WORDS
+    segs = a.alloc(clean_words, avoid_weak_rows=True)
+    wpp = TINY.bytes_per_pc // 4
+    for s in segs:
+        for blk in range(-(-s.n_words // ALIGN_WORDS)):
+            pc = s.phys_base_word // wpp
+            block = (s.phys_base_word % wpp) // ALIGN_WORDS + blk
+            assert not TINY_FMAP.weak_block_mask(pc, ALIGN_WORDS)[block]
+    # one more clean block does not exist
+    with pytest.raises(CapacityError):
+        a.alloc(ALIGN_WORDS, avoid_weak_rows=True)
+    # ...but the weak spares remain allocatable for tolerant groups
+    spare_segs = a.alloc(n_weak * ALIGN_WORDS)
+    assert sum(s.n_words for s in spare_segs) == n_weak * ALIGN_WORDS
+    assert a.free_words == 0
+
+
+def test_resolve_tier():
+    assert resolve_tier("cheap").max_rate == pytest.approx(1e-3)
+    t = CriticalityTier("custom", 1e-5, avoid_weak_rows=True)
+    assert resolve_tier(t) is t
+    with pytest.raises(ValueError):
+        resolve_tier("nope")
+    assert resolve_tier("safe").admits(0.0, VCU128.bits_per_pc)
+    assert not resolve_tier("safe").admits(1e-6, VCU128.bits_per_pc)
+
+
+def test_tiered_placement_routes_by_criticality():
+    """Acceptance: a cheap-tier group lands on lower-voltage PCs than a
+    safe-tier group on the same fault map."""
+    domains = {
+        "hi": MemoryDomain("hi", 0.98, tuple(range(16))),
+        "lo": MemoryDomain("lo", 0.91, tuple(range(16, 32))),
+    }
+    groups = {
+        "mu": {"m": jax.ShapeDtypeStruct((1024, 1024), jnp.float32)},
+        "kv": {"k": jax.ShapeDtypeStruct((1024, 1024), jnp.bfloat16)},
+    }
+    placed = place_groups_tiered(groups, {"mu": "safe", "kv": "cheap"},
+                                 domains, VCU128, FMAP)
+    assert placed["mu"].domain.voltage > placed["kv"].domain.voltage
+    assert placed["kv"].domain.name == "lo"
+    # the cheap group's PCs are the *most reliable free* PCs of its domain
+    kv_pcs = {s.pc for l in placed["kv"].leaves for s in l.segments}
+    best_lo = int(min(domains["lo"].pc_ids,
+                      key=lambda pc: FMAP.pc_total_rate(0.91)[pc]))
+    assert best_lo in kv_pcs
+
+
+def test_weak_row_avoidance_reduces_injected_faults():
+    """End-to-end: an extent placed with weak-row avoidance takes far
+    fewer stuck bits through the real injection path than the same data
+    placed without it.  Single-PC domain so PC reliability ordering is
+    out of the picture, and a high process-variation multiplier so the
+    (clustered) exponential regime dominates the (spatially uniform)
+    saturation regime."""
+    from repro.core.faultmodel import DEFAULT_FAULT_MODEL
+    fmap = FaultMap(geometry=TINY, seed=7, model=DEFAULT_FAULT_MODEL,
+                    pc_multiplier=tuple([200.0] * TINY.num_pcs))
+    tree = {"a": jnp.zeros((2 * ALIGN_WORDS,), jnp.float32)}
+    # PC 5's first blocks contain weak rows, so the plain bump placement
+    # lands on them while the avoiding one takes the clean blocks.
+    dom = {"d": MemoryDomain("d", 0.88, (5,))}
+    assert bool(fmap.weak_block_mask(5, ALIGN_WORDS)[0])
+
+    def flips(avoid):
+        tier = CriticalityTier("t", 1.0, avoid_weak_rows=avoid)
+        placed = place_groups_tiered({"g": tree}, {"g": tier}, dom, TINY,
+                                     fmap)["g"]
+        out, _ = injection.inject_group(tree, placed, fmap)
+        return int(jnp.sum(out["a"] != 0))
+
+    n_avoid, n_plain = flips(True), flips(False)
+    assert n_plain > 0
+    assert n_avoid < n_plain * 0.5
+
+
+def test_tiered_placement_rejects_impossible_tier():
+    domains = {"lo": MemoryDomain("lo", 0.88, tuple(range(32)))}
+    groups = {"mu": {"m": jax.ShapeDtypeStruct((64, 64), jnp.float32)}}
+    with pytest.raises(CapacityError) as ei:
+        place_groups_tiered(groups, {"mu": "safe"}, domains, VCU128, FMAP)
+    assert "mu" in str(ei.value) and "safe" in str(ei.value)
 
 
 def test_place_groups_on_avals():

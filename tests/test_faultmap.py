@@ -81,3 +81,47 @@ def test_v5e_geometry_scales():
     m = FaultMap.from_seed(TPU_V5E, seed=0)
     assert m.geometry.total_bytes == 16 * 2**30
     assert m.geometry.num_pcs == 32
+
+
+def test_row_level_reliability_exports(fmap):
+    # weak rows carry the clustered exponential mass: weak > blended >
+    # strong, and the blended per-PC rate is their mass-weighted mix
+    v = 0.90
+    weak, strong = fmap.row_rates(v)
+    blended = fmap.pc_total_rate(v)
+    f = fmap.weak_row_frac
+    assert (weak >= blended - 1e-18).all()
+    assert (strong <= blended + 1e-18).all()
+    np.testing.assert_allclose(f * weak + (1 - f) * strong, blended,
+                               rtol=1e-6)
+    # predicted_rates: avoidance sees only the strong-row rate
+    np.testing.assert_array_equal(fmap.predicted_rates(v, True), strong)
+    np.testing.assert_array_equal(fmap.predicted_rates(v, False), blended)
+    # reliability order sorts by blended rate, most reliable first
+    order = fmap.reliability_order(v)
+    assert (np.diff(blended[order]) >= 0).all()
+
+
+def test_weak_row_mask_matches_kernel_draw(fmap):
+    from repro.core import hashing
+    from repro.kernels.bitflip.ref import _weak_rows
+    import jax.numpy as jnp
+    pc = 4
+    mask = fmap.weak_row_mask(pc)
+    assert mask.shape == (fmap.rows_per_pc,)
+    assert 0.0 < mask.mean() < 0.15           # ~WEAK_ROW_FRAC of rows
+    # same draw the injection kernels make from physical word ids
+    wprl2 = fmap.words_per_row_log2
+    words_per_pc = fmap.geometry.bytes_per_pc // 4
+    wid = jnp.asarray(
+        pc * words_per_pc
+        + np.arange(0, words_per_pc, 1 << wprl2, dtype=np.int64),
+        jnp.uint32)
+    q = np.uint32(hashing.rate_to_u32_threshold(fmap.weak_row_frac))
+    kernel_mask = np.asarray(_weak_rows(wid, fmap.seed, q, wprl2))
+    np.testing.assert_array_equal(mask, kernel_mask)
+    # block mask flags exactly the blocks containing a weak row
+    block = fmap.weak_block_mask(pc, 4096)
+    rows_per_block = 4096 // (fmap.geometry.row_bytes // 4)
+    np.testing.assert_array_equal(
+        block, mask.reshape(-1, rows_per_block).any(axis=1))

@@ -135,6 +135,136 @@ def test_dynamic_voltage_key_threads_into_step():
     assert any(bool(jnp.any(x != y)) for x, y in zip(safe_a, deep))
 
 
+def test_governor_step_replans_every_step_traces_once():
+    """Acceptance: a jitted train step with the governor enabled re-plans
+    voltage every step from a traced power budget and compiles exactly
+    once; the guardband re-plan is deterministic and the deep re-plan
+    actually faults the cheap-domain tensors."""
+    plan = aggressive_plan(v_unsafe=0.91, mitigation="none",
+                           geometry=VCU128)
+    gov = plan.make_governor("cheap", mode="power", tolerable_rate=1e-3)
+    tc = trainer.TrainConfig(adamw=ADAMW, undervolt=plan, governor=gov,
+                             governor_key="power_budget",
+                             undervolt_method="word")
+    dc = DataConfig(vocab=CFG.vocab, seq_len=48, global_batch=8, seed=3)
+    traces = []
+
+    def counted_step(state, batch):
+        traces.append(1)
+        return trainer.make_train_step(BUNDLE, CFG, tc)(state, batch)
+
+    step = jax.jit(counted_step)
+    state = trainer.init_state(BUNDLE, CFG, jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in make_batch(dc, 0).items()}
+
+    def at(budget):
+        s, m = step(state, {**batch, "power_budget": jnp.float32(budget)})
+        return (jax.tree_util.tree_flatten(s["params"])[0],
+                float(m["governor_voltage"]))
+
+    lax_a, v_a = at(1.0)      # loose budget -> guardband voltage
+    lax_b, v_b = at(1.0)
+    deep, v_d = at(0.55)      # tight budget -> deep voltage, faults
+    assert len(traces) == 1   # re-planning every step, one compile
+    assert v_a == pytest.approx(0.98, abs=1e-6)
+    assert v_d < 0.90
+    assert all(bool(jnp.all(x == y)) for x, y in zip(lax_a, lax_b))
+    assert any(bool(jnp.any(x != y)) for x, y in zip(lax_a, deep))
+
+
+def test_governor_requires_matching_plan():
+    plan = aggressive_plan(v_unsafe=0.91, geometry=VCU128)
+    other = aggressive_plan(v_unsafe=0.90, geometry=VCU128)
+    gov = plan.make_governor("cheap", tolerable_rate=1e-3)
+    with pytest.raises(ValueError):
+        trainer.make_train_step(BUNDLE, CFG, trainer.TrainConfig(
+            adamw=ADAMW, undervolt=other, governor=gov,
+            undervolt_method="word"))
+    with pytest.raises(ValueError):
+        trainer.make_train_step(BUNDLE, CFG, trainer.TrainConfig(
+            adamw=ADAMW, undervolt=plan, governor=gov,
+            undervolt_voltage_key="hbm_v", undervolt_method="word"))
+    with pytest.raises(ValueError, match="undervolt_method"):
+        trainer.make_train_step(BUNDLE, CFG, trainer.TrainConfig(
+            adamw=ADAMW, undervolt=plan, governor=gov))
+
+
+def test_serving_governor_admission_replans_kv_voltage():
+    """ServeConfig.governor: admission picks the deepest voltage whose
+    usable capacity covers the request's KV cache; a zero-tolerance
+    governor capped at the guardband reproduces the baseline exactly."""
+    params = trainer.init_state(BUNDLE, CFG, jax.random.PRNGKey(0))["params"]
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(5), (2, 12),
+                                          0, CFG.vocab)}
+    base = generate(BUNDLE, CFG, params, batch,
+                    ServeConfig(max_len=40, max_new_tokens=6))
+    plan = UndervoltPlan(
+        domains={"kv": MemoryDomain("kv", 0.89,
+                                    tuple(range(VCU128.num_pcs)))},
+        policy={"kv_cache": "kv"}, geometry=VCU128)
+    safe_gov = plan.make_governor("kv", mode="rate", tolerable_rate=0.0,
+                                  v_lo=0.98)   # guardband-only frontier
+    lifted = generate(BUNDLE, CFG, params, batch,
+                      ServeConfig(max_len=40, max_new_tokens=6,
+                                  undervolt=plan, governor=safe_gov))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(lifted))
+    # an unconstrained governor admits at the deepest grid voltage
+    deep_gov = plan.make_governor("kv", mode="rate", tolerable_rate=0.5,
+                                  v_lo=0.88)
+    cache_bytes = 1   # trivially satisfiable capacity requirement
+    assert deep_gov.admit(cache_bytes) == pytest.approx(0.88, abs=1e-6)
+    deep = generate(BUNDLE, CFG, params, batch,
+                    ServeConfig(max_len=40, max_new_tokens=6,
+                                undervolt=plan, governor=deep_gov,
+                                kv_method="bitwise"))
+    assert deep.shape == base.shape
+    # misconfigurations fail loudly rather than silently no-op
+    uncovered = UndervoltPlan(
+        domains=plan.domains, policy={"params": "kv"}, geometry=VCU128)
+    with pytest.raises(ValueError, match="kv_cache"):
+        generate(BUNDLE, CFG, params, batch,
+                 ServeConfig(max_len=40, max_new_tokens=6,
+                             undervolt=uncovered,
+                             governor=uncovered.make_governor(
+                                 "kv", mode="rate", tolerable_rate=0.5,
+                                 v_lo=0.88)))
+    two_dom = UndervoltPlan(
+        domains={"kv": MemoryDomain("kv", 0.89, tuple(range(16))),
+                 "spare": MemoryDomain("spare", 0.98,
+                                       tuple(range(16, 32)))},
+        policy={"kv_cache": "kv"}, geometry=VCU128)
+    with pytest.raises(ValueError, match="spare"):
+        generate(BUNDLE, CFG, params, batch,
+                 ServeConfig(max_len=40, max_new_tokens=6,
+                             undervolt=two_dom,
+                             governor=two_dom.make_governor(
+                                 "spare", mode="rate",
+                                 tolerable_rate=0.5)))
+
+
+def test_serving_auto_method_with_traced_kv_voltage_raises():
+    """Satellite: kv_method='auto' cannot dispatch from a traced
+    kv_voltage -- generate must raise a clear ValueError instead of
+    silently falling back to the domain's configured voltage."""
+    params = trainer.init_state(BUNDLE, CFG, jax.random.PRNGKey(0))["params"]
+    plan = UndervoltPlan(
+        domains={"kv": MemoryDomain("kv", 0.89,
+                                    tuple(range(VCU128.num_pcs)))},
+        policy={"kv_cache": "kv"}, geometry=VCU128)
+
+    def gen(v):
+        batch = {"tokens": jnp.zeros((1, 4), jnp.int32)}
+        sc = ServeConfig(max_len=16, max_new_tokens=1, undervolt=plan,
+                         kv_voltage=v)
+        return generate(BUNDLE, CFG, params, batch, sc)
+
+    with pytest.raises(ValueError, match="kv_method='auto'"):
+        jax.jit(gen)(jnp.float32(0.98))
+    # concrete voltages keep working through 'auto'
+    out = gen(jnp.float32(0.98))
+    assert out.shape == (1, 1)
+
+
 def test_serving_kv_voltage_override():
     """ServeConfig.kv_voltage: a guardband override on an unsafe KV
     domain must make generation match the no-undervolt baseline."""
