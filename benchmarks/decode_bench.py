@@ -1,0 +1,240 @@
+"""Decode throughput: read-path fused injection vs the legacy
+full-cache re-inject path, short vs long context.
+
+The acceptance contract of the read-path refactor, asserted here and
+recorded in results/benchmarks.json: injected decode must sit within
+1.3x of the uninjected decode step at max_len=512, against the PR2
+full-cache re-inject path shown >= 3x slower in the same bench.
+
+"Uninjected decode step" means the same scanned engine driven at a
+traced guardband voltage -- the zero-recompile serving contract is that
+one compiled step serves every voltage, so injection on/off is purely a
+runtime schedule.  Both fast modes are asserted:
+
+  * write mode (incremental write path): injecting the O(new-token)
+    slice adds < 1.3x over its guardband no-op -- injection work no
+    longer scales with total cache size;
+  * read mode (fused read path): the step is voltage-insensitive within
+    1.3x -- corruption mask math is part of the attention tile pass, so
+    turning faults on costs ~nothing *marginal*.  (In interpret mode
+    that mask math runs as real CPU compute; the plain-XLA-attention
+    row is reported for context, and the gap to it is CPU-emulation
+    overhead of the Pallas kernel, not an HBM cost -- on TPU the masks
+    ride the VPU while the tile loads.)
+  * the legacy PR2-style path (python loop, full-cache re-injection
+    every token) is >= 3x slower than read-path decode on the same
+    workload -- injection work that scales with cache size, not tokens;
+  * the jitted decode's pallas-launch count is flat in sequence length
+    (read-path corruption rides the attention launch);
+  * a 5-point traced KV-voltage sweep over the scanned decode compiles
+    exactly once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as arena
+from repro.core.domains import MemoryDomain
+from repro.core.hbm import VCU128
+from repro.models.base import get_arch
+from repro.models.cache import init_cache
+from repro.serving.engine import ServeConfig, build_decode_engine
+from repro.training import trainer
+from repro.training.undervolt import UndervoltPlan
+
+BATCH = 2
+PROMPT = 8
+NEW_TOKENS = 17            # 16 scanned steps after the prefill token
+V_DEEP = 0.88              # ~1e-4 per-bit rates: the word path's regime
+V_GUARD = 0.98
+SHORT, LONG = 128, 512
+REPS = 5
+
+
+def _plan():
+    return UndervoltPlan(
+        domains={"kv": MemoryDomain("kv", V_DEEP,
+                                    tuple(range(VCU128.num_pcs)))},
+        policy={"kv_cache": "kv"}, geometry=VCU128)
+
+
+def _setup():
+    bundle = get_arch("llama3.2-3b")
+    # The tier-1 reduced config is sized for test latency; the bench
+    # model keeps its tiny KV geometry but restores a realistic compute
+    # mix (MLP + vocab dominate a decode step, as at production scale).
+    cfg = dataclasses.replace(bundle.reduced, d_model=96, d_ff=384,
+                              vocab=4096)
+    bundle = dataclasses.replace(bundle, reduced=cfg)
+    params = trainer.init_state(bundle, cfg,
+                                jax.random.PRNGKey(0))["params"]
+    return bundle, cfg, params
+
+
+def _engine(bundle, cfg, max_len, mode):
+    """clean: no undervolt (plain XLA attention).  Other modes: the
+    undervolted engine built for a *traced* voltage, so one engine
+    serves any runtime voltage (including the guardband no-op used as
+    the uninjected baseline)."""
+    if mode == "clean":
+        sc = ServeConfig(max_len=max_len, max_new_tokens=NEW_TOKENS)
+        return build_decode_engine(bundle, cfg, sc, BATCH, PROMPT,
+                                   static_voltage=None)
+    sc = ServeConfig(max_len=max_len, max_new_tokens=NEW_TOKENS,
+                     undervolt=_plan(), kv_injection=mode,
+                     kv_method="word")
+    return build_decode_engine(bundle, cfg, sc, BATCH, PROMPT,
+                               static_voltage=None)
+
+
+def _time_scan_cases(bundle, cfg, params, cases):
+    """Seconds per decoded token for a list of (name, eng, max_len, v)
+    scanned-driver cases, measured *interleaved*: one rep of every case
+    per pass, min over passes.  Interleaving makes the ratio asserts
+    robust to machine-load drift (a slow phase hits all variants), and
+    min-of-reps is the noise-robust estimator.  The cache is donated,
+    so every rep gets a fresh one -- built off the clock."""
+    tok0 = jnp.zeros((BATCH, 1), jnp.int32)
+    key = jax.random.PRNGKey(0)
+
+    def fresh(max_len):
+        return init_cache(bundle.module.cache_specs(cfg, BATCH, max_len))
+
+    for name, eng, max_len, v in cases:       # compile off the clock
+        jax.block_until_ready(eng.decode_all(
+            params, fresh(max_len), tok0, key, jnp.float32(v)))
+    best = {name: np.inf for name, *_ in cases}
+    for _ in range(REPS):
+        for name, eng, max_len, v in cases:
+            c = fresh(max_len)
+            t0 = time.perf_counter()
+            jax.block_until_ready(eng.decode_all(params, c, tok0, key,
+                                                 jnp.float32(v)))
+            best[name] = min(best[name],
+                             (time.perf_counter() - t0) / eng.n_more)
+    return best
+
+
+def _time_loop(bundle, cfg, params, eng, max_len, v=V_DEEP):
+    """Seconds per decoded token for the PR2-style python loop with
+    full-cache re-injection inside each jitted step."""
+    tok0 = jnp.zeros((BATCH, 1), jnp.int32)
+    varr = jnp.float32(v)
+    step = jax.jit(eng.step_core, donate_argnums=(1,))
+
+    def run_once():
+        c = init_cache(bundle.module.cache_specs(cfg, BATCH, max_len))
+        c = eng.init_inject(c, varr)
+        tok = tok0
+        for i in range(eng.n_more):
+            logits, c = step(params, c, tok, jnp.int32(PROMPT + i), varr)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return tok
+
+    jax.block_until_ready(run_once())
+    times = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run_once())
+        times.append(time.perf_counter() - t0)
+    return float(np.min(times)) / eng.n_more
+
+
+def run():
+    bundle, cfg, params = _setup()
+    rows = []
+    per_tok = {}
+    engines = {}
+    for max_len, tag in ((SHORT, "short"), (LONG, "long")):
+        spec = [("clean", "clean", V_DEEP),
+                ("write_guardband", "write", V_GUARD),
+                ("write", "write", V_DEEP),
+                ("read_guardband", "read", V_GUARD),
+                ("read", "read", V_DEEP)]
+        cases = []
+        for name, mode, v in spec:
+            eng = engines.setdefault((mode, max_len),
+                                     _engine(bundle, cfg, max_len, mode))
+            cases.append((name, eng, max_len, v))
+        best = _time_scan_cases(bundle, cfg, params, cases)
+        for name, eng, max_len_, v in cases:
+            s = best[name]
+            per_tok[(name, tag)] = s
+            rows.append({
+                "name": f"decode_tokens_per_sec_{name}_{tag}",
+                "us_per_call": s * 1e6,
+                "derived": (f"tokens_per_sec={1.0 / s:.1f};batch={BATCH};"
+                            f"max_len={max_len_};voltage={v};"
+                            f"fused={eng.use_fused}")})
+    # the PR2 path: python loop + full-cache re-inject per token
+    eng_rw = _engine(bundle, cfg, LONG, "rewrite")
+    s = _time_loop(bundle, cfg, params, eng_rw, LONG)
+    per_tok[("rewrite_loop", "long")] = s
+    rows.append({
+        "name": "decode_tokens_per_sec_rewrite_loop_long",
+        "us_per_call": s * 1e6,
+        "derived": (f"tokens_per_sec={1.0 / s:.1f};batch={BATCH};"
+                    f"max_len={LONG};voltage={V_DEEP};driver=loop")})
+
+    # ---- acceptance asserts ----------------------------------------
+    slow = per_tok[("rewrite_loop", "long")] / per_tok[("read", "long")]
+    r_write = (per_tok[("write", "long")]
+               / per_tok[("write_guardband", "long")])
+    r_read = (per_tok[("read", "long")]
+              / per_tok[("read_guardband", "long")])
+    assert slow >= 3.0, (
+        f"full-cache re-inject loop only {slow:.2f}x slower than "
+        f"read-path decode (expected >= 3x)")
+    assert r_write <= 1.3, (
+        f"incremental write-path injection {r_write:.2f}x its "
+        f"uninjected (guardband) step (budget 1.3x)")
+    assert r_read <= 1.3, (
+        f"read-path injected decode {r_read:.2f}x its uninjected "
+        f"(guardband) step (budget 1.3x)")
+
+    # pallas-launch budget: flat in sequence length
+    launches = {}
+    for max_len in (SHORT, LONG):
+        eng = _engine(bundle, cfg, max_len, "read")
+        cache = init_cache(bundle.module.cache_specs(cfg, BATCH, max_len))
+        jaxpr = jax.make_jaxpr(lambda *a: eng.decode_all(*a))(
+            params, cache, jnp.zeros((BATCH, 1), jnp.int32),
+            jax.random.PRNGKey(0), jnp.float32(V_DEEP))
+        launches[max_len] = arena.count_pallas_calls(jaxpr.jaxpr)
+    assert launches[SHORT] == launches[LONG] == 1, launches
+
+    # 5-point traced sweep over the scanned decode compiles once
+    eng = _engine(bundle, cfg, SHORT, "read")
+    traces = []
+
+    @jax.jit
+    def sweep_point(c, v):
+        traces.append(1)
+        return eng.decode_all(params, c,
+                              jnp.zeros((BATCH, 1), jnp.int32),
+                              jax.random.PRNGKey(0), v)
+
+    for v in (0.92, 0.91, 0.90, 0.89, 0.88):
+        c = init_cache(bundle.module.cache_specs(cfg, BATCH, SHORT))
+        jax.block_until_ready(sweep_point(c, jnp.float32(v)))
+    assert len(traces) == 1, f"sweep retraced {len(traces)} times"
+
+    rows.append({
+        "name": "decode_readpath_vs_rewrite",
+        "us_per_call": per_tok[("read", "long")] * 1e6,
+        "derived": (f"rewrite_loop_slowdown_x={slow:.2f};"
+                    f"write_injected_over_uninjected_x={r_write:.2f};"
+                    f"read_injected_over_uninjected_x={r_read:.2f};"
+                    f"clean_xla_us={per_tok[('clean', 'long')] * 1e6:.0f};"
+                    f"pallas_launches={launches[LONG]};sweep_traces=1")})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")

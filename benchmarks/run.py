@@ -13,8 +13,8 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (kernel_bench, paper_figs, roofline_table,
-                            voltage_sweep)
+    from benchmarks import (decode_bench, kernel_bench, paper_figs,
+                            roofline_table, voltage_sweep)
 
     all_rows = {}
     print("name,us_per_call,derived")
@@ -32,6 +32,11 @@ def main() -> None:
 
     rows = voltage_sweep.run()
     all_rows["voltage_sweep"] = rows
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
+
+    rows = decode_bench.run()
+    all_rows["decode_bench"] = rows
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
 

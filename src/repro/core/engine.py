@@ -40,6 +40,7 @@ from repro.core.faultmap import NUM_THR_COLS, FaultMap
 from repro.core.faultmodel import V_MIN
 from repro.kernels.bitflip import ops as bitflip_ops
 from repro.kernels.bitflip.bitflip import (BLOCK_LANES, BLOCK_WORDS,
+                                           BLOCK_WORDS_LOG2, apply_masks,
                                            arena_bitflip_pallas, arena_masks)
 from repro.kernels.ecc.ecc import arena_ecc_codewords, arena_ecc_pallas
 
@@ -210,6 +211,163 @@ def inject_placement(tree, placement: GroupPlacement, faultmap: FaultMap,
             interpret=bool(interpret))
         bad = jnp.zeros((), jnp.int32)
     return unpack_arena(out2d, pack_meta), bad
+
+
+@functools.lru_cache(maxsize=256)
+def leaf_block_tables(placement: GroupPlacement):
+    """Per-leaf ``(block_base, block_pc)`` numpy arrays, in placement
+    (keystr-sorted) order -- the arena engine's block tables sliced to
+    one leaf, so the read path and the incremental write path can
+    address a single cache buffer without packing the whole domain."""
+    table = placement.block_table()
+    bb = np.asarray(table.block_base, np.uint32)
+    bp = np.asarray(table.block_pc, np.int32)
+    return tuple((bb[s:s + n], bp[s:s + n])
+                 for s, n, _ in table.leaf_blocks)
+
+
+def corrupt_words(u32, off, block_base, block_thr, *, seed: int,
+                  method: str, words_per_row_log2: int, ecc: bool):
+    """Corrupt arbitrary leaf words through their arena block tables.
+
+    The pure-jnp twin of the kernels' candidate-select addressing:
+    ``off`` holds leaf word offsets (any shape matching ``u32``), the
+    per-word physical id and threshold row are gathered with
+    ``jnp.take`` from the leaf's ``block_base`` / per-block threshold
+    rows (``block_thr``, possibly derived from a traced voltage), and
+    the shared tile-level mask math is applied.  For ECC the last axis
+    must hold leaf-adjacent words in even count (codeword pairs).
+
+    Returns (corrupted u32, uncorrectable count).
+    """
+    off = off.astype(jnp.uint32)
+    jvec = (off >> np.uint32(BLOCK_WORDS_LOG2)).astype(jnp.int32)
+    wid = (jnp.take(jnp.asarray(block_base), jvec)
+           + (off & np.uint32(BLOCK_WORDS - 1)))
+    rows = jnp.take(jnp.asarray(block_thr), jvec, axis=0)
+    thr = tuple(rows[..., c] for c in range(NUM_THR_COLS))
+    if ecc:
+        out, bad = arena_ecc_codewords(
+            u32, wid, thr, seed=seed,
+            words_per_row_log2=words_per_row_log2)
+        return out, jnp.sum(bad.astype(jnp.int32))
+    out = apply_masks(u32, wid, thr, seed=seed, method=method,
+                      words_per_row_log2=words_per_row_log2)
+    return out, jnp.zeros((), jnp.int32)
+
+
+def _corrupt_full_leaf(leaf, block_base, block_thr, *, seed, method,
+                       wprl2, ecc):
+    u32, meta = bitflip_ops.to_u32(leaf)
+    n = u32.shape[0]
+    pad = (-n) % 2 if ecc else 0
+    if pad:
+        u32 = jnp.concatenate([u32, jnp.zeros((pad,), jnp.uint32)])
+    off = jnp.arange(n + pad, dtype=jnp.uint32)
+    out, bad = corrupt_words(u32, off, block_base, block_thr, seed=seed,
+                             method=method, words_per_row_log2=wprl2,
+                             ecc=ecc)
+    return bitflip_ops.from_u32(out[:n], meta), bad
+
+
+def _corrupt_leaf_slice(leaf, slot_axis, pos, block_base, block_thr, *,
+                        seed, method, wprl2, ecc):
+    """Corrupt only the slot written at absolute position ``pos``."""
+    shape = leaf.shape
+    ln = shape[slot_axis]
+    outer = int(np.prod(shape[:slot_axis], dtype=np.int64))
+    inner = int(np.prod(shape[slot_axis + 1:], dtype=np.int64))
+    wpi = inner * jnp.dtype(leaf.dtype).itemsize // 4
+    slot = (pos % ln).astype(jnp.int32)
+    sl = jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=slot_axis)
+    u32, meta = bitflip_ops.to_u32(sl.reshape(outer, inner))
+    u32 = u32.reshape(outer, wpi)
+    off = (jnp.arange(outer, dtype=jnp.uint32)[:, None] * np.uint32(ln * wpi)
+           + slot.astype(jnp.uint32) * np.uint32(wpi)
+           + jnp.arange(wpi, dtype=jnp.uint32)[None, :])
+    out, bad = corrupt_words(u32, off, block_base, block_thr, seed=seed,
+                             method=method, words_per_row_log2=wprl2,
+                             ecc=ecc)
+    out = bitflip_ops.from_u32(out.reshape(-1), meta).reshape(sl.shape)
+    return (jax.lax.dynamic_update_slice_in_dim(leaf, out, slot,
+                                                axis=slot_axis), bad)
+
+
+def _sliceable(leaf, slot_axis, ecc) -> bool:
+    if slot_axis is None or slot_axis < 0:
+        return False
+    inner_bytes = (int(np.prod(leaf.shape[slot_axis + 1:], dtype=np.int64))
+                   * jnp.dtype(leaf.dtype).itemsize)
+    if inner_bytes % 4:
+        return False                   # slot not word-aligned
+    if ecc and (inner_bytes // 4) % 2:
+        return False                   # slot splits an ECC codeword
+    return True
+
+
+def inject_placement_slice(tree, placement: GroupPlacement,
+                           faultmap: FaultMap, *, slot_axes=None, pos=None,
+                           voltage=None, method: str = "auto",
+                           skip_paths=()):
+    """Incremental write-path injection: O(touched-words), pure jnp.
+
+    With ``pos`` a (traced) absolute position, only the ring slot
+    ``pos % L`` of each leaf is corrupted -- the slice a decode step just
+    wrote -- which is bit-identical to re-injecting the whole cache
+    (stuck-at masks are deterministic per physical word and idempotent)
+    at O(new-token) cost instead of O(cache).  Leaves without a slot
+    axis (``slot_axes`` leaf < 0), with non-word-aligned slots, or whose
+    slots split ECC codewords are corrupted whole (they are the small
+    recurrent/bookkeeping states).  With ``pos=None`` every included
+    leaf is corrupted whole (the post-prefill initialization).
+
+    ``skip_paths``: keystr paths handled elsewhere (e.g. K/V leaves
+    corrupted on the read path by the fused attention kernel).
+
+    Returns (tree, uncorrectable count).
+    """
+    domain = placement.domain
+    if not placement.leaves:
+        return tree, jnp.zeros((), jnp.int32)
+    if voltage is None:
+        voltage = domain.voltage
+    sv = _static_value(voltage)
+    if sv is not None and sv >= V_MIN - 1e-9:
+        return tree, jnp.zeros((), jnp.int32)
+    if method == "auto":
+        method = "word" if domain.ecc else resolve_method(
+            faultmap, placement, voltage)
+    wprl2 = faultmap.words_per_row_log2
+    table = faultmap.threshold_table(voltage)
+    tables = {lp.path: (bb, table[jnp.asarray(bp)])
+              for lp, (bb, bp) in zip(placement.leaves,
+                                      leaf_block_tables(placement))}
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    if slot_axes is None:
+        ax_leaves = [-1] * len(flat)
+    else:
+        ax_leaves = jax.tree_util.tree_leaves(slot_axes)
+        assert len(ax_leaves) == len(flat), "slot_axes must match the tree"
+    out_leaves = []
+    total_bad = jnp.zeros((), jnp.int32)
+    skip = set(skip_paths)
+    for (path, leaf), axis in zip(flat, ax_leaves):
+        key = jax.tree_util.keystr(path)
+        if key in skip:
+            out_leaves.append(leaf)
+            continue
+        bb, bt = tables[key]
+        kw = dict(seed=faultmap.seed, method=method, wprl2=wprl2,
+                  ecc=domain.ecc)
+        if pos is not None and _sliceable(leaf, axis, domain.ecc):
+            faulted, bad = _corrupt_leaf_slice(leaf, axis, pos, bb, bt,
+                                               **kw)
+        else:
+            faulted, bad = _corrupt_full_leaf(leaf, bb, bt, **kw)
+        out_leaves.append(faulted)
+        total_bad = total_bad + bad
+    return jax.tree_util.tree_unflatten(treedef, out_leaves), total_bad
 
 
 def _subjaxprs(params):

@@ -40,6 +40,8 @@ from repro.kernels.bitflip import ref as _ref
 BLOCK_SUBLANES = 8
 BLOCK_LANES = 512
 BLOCK_WORDS = BLOCK_SUBLANES * BLOCK_LANES  # 4096 words = 16 KiB
+BLOCK_WORDS_LOG2 = BLOCK_WORDS.bit_length() - 1
+assert 1 << BLOCK_WORDS_LOG2 == BLOCK_WORDS
 
 
 def _kernel(x_ref, o_ref, *, thresholds, seed, base_word, method):
@@ -115,6 +117,54 @@ def arena_masks(wid, thr_row, *, seed: int, method: str,
     raise ValueError(f"unknown method {method!r}")
 
 
+def apply_masks(x_u32, wid, thr_row, *, seed: int, method: str,
+                words_per_row_log2: int):
+    """Corrupt one uint32 tile in place of its physical words.
+
+    The read-modify-write at the heart of every injection path, exposed
+    as a tile-level function so other Pallas kernels (the fused
+    flash-attention read path) can corrupt data already resident in
+    VMEM.  ``thr_row`` entries may be scalars (one block) or per-word
+    arrays (a tile straddling blocks).
+    """
+    mask01, mask10 = arena_masks(wid, thr_row, seed=seed, method=method,
+                                 words_per_row_log2=words_per_row_log2)
+    mask10 = mask10 & ~mask01
+    return (x_u32 | mask01) & ~mask10
+
+
+def select_block_tables(off, base_ref, thr_ref, *, j0, n_cand: int,
+                        num_blocks: int):
+    """Physical word ids + per-word threshold columns for a tile of leaf
+    word offsets ``off`` that may straddle several arena blocks.
+
+    TPUs cannot gather SMEM with a vector index, so the per-word lookup
+    ``block_base[off >> 12]`` is rewritten as ``n_cand`` dynamic-scalar
+    reads (the same access pattern the arena kernels use) followed by
+    vector selects: ``j0`` (traced scalar) is the first arena block the
+    tile can touch and ``n_cand`` (static) bounds how many consecutive
+    blocks it can span.  Works identically on SMEM refs inside a Pallas
+    kernel and on plain jnp arrays (the oracle / incremental paths).
+
+    Returns ``(wid, thr_cols)`` with ``wid`` the per-word physical ids
+    and ``thr_cols`` a NUM_THR_COLS tuple of per-word uint32 arrays.
+    """
+    off = off.astype(jnp.uint32)
+    jvec = off >> np.uint32(BLOCK_WORDS_LOG2)
+    rem = off & np.uint32(BLOCK_WORDS - 1)
+    base = jnp.zeros_like(off)
+    thr = [jnp.zeros_like(off) for _ in range(fm.NUM_THR_COLS)]
+    j0 = j0.astype(jnp.int32) if hasattr(j0, "astype") else jnp.int32(j0)
+    for jj in range(n_cand):
+        cand = j0 + jj                       # traced scalar block index
+        idx = jnp.minimum(cand, num_blocks - 1)   # clamp the SMEM read
+        hit = jvec == cand.astype(jnp.uint32)     # never true if cand OOB
+        base = base + jnp.where(hit, base_ref[idx], np.uint32(0))
+        for c in range(fm.NUM_THR_COLS):
+            thr[c] = thr[c] + jnp.where(hit, thr_ref[idx, c], np.uint32(0))
+    return base + rem, tuple(thr)
+
+
 def _arena_kernel(base_ref, thr_ref, x_ref, o_ref, *, seed, method,
                   words_per_row_log2):
     i = pl.program_id(0)
@@ -123,11 +173,8 @@ def _arena_kernel(base_ref, thr_ref, x_ref, o_ref, *, seed, method,
     # Individual scalar SMEM reads (dynamic row, static column) -- the
     # TPU-safe access pattern for prefetched scalars.
     thr_row = tuple(thr_ref[i, c] for c in range(fm.NUM_THR_COLS))
-    mask01, mask10 = arena_masks(
-        wid, thr_row, seed=seed, method=method,
-        words_per_row_log2=words_per_row_log2)
-    mask10 = mask10 & ~mask01
-    o_ref[...] = (x | mask01) & ~mask10
+    o_ref[...] = apply_masks(x, wid, thr_row, seed=seed, method=method,
+                             words_per_row_log2=words_per_row_log2)
 
 
 def arena_bitflip_pallas(arena2d: jax.Array, block_base: jax.Array,

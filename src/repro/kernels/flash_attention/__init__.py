@@ -1,1 +1,3 @@
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
+from repro.kernels.flash_attention.faulty import (  # noqa: F401
+    faulty_decode_attention)

@@ -1,0 +1,294 @@
+"""Pallas TPU kernel: decode attention with read-path fault injection.
+
+The paper's reduced-voltage faults manifest when undervolted HBM is
+*read*.  The write-path model (corrupt the stored cache, then attend)
+pays an extra O(cache) HBM read-modify-write per decoded token; this
+kernel moves injection onto the read path: K/V tiles are corrupted *in
+VMEM, as they are loaded* by the decode attention kernel, so injection
+costs zero extra HBM passes and rides the bandwidth the attention read
+already spends.
+
+Mechanics:
+
+  * the serving placement exports, per cache leaf, the arena engine's
+    ``block -> (physical base word, threshold row)`` tables; they arrive
+    as scalar-prefetch operands (SMEM), with threshold rows derived from
+    a possibly *traced* voltage -- traced KV-voltage sweeps compile once;
+  * each K/V tile is a contiguous run of leaf words (the tile spans all
+    KV heads of ``bkv`` cache slots), so its per-word physical ids and
+    threshold rows come from :func:`select_block_tables` -- a handful of
+    dynamic-scalar SMEM reads plus vector selects, never a gather;
+  * the mask math is the exact tile-level functions the arena engine
+    runs (:func:`apply_masks` / :func:`arena_ecc_codewords`), so
+    read-path corruption is bit-identical to corrupt-then-attend on the
+    same operands (asserted in tests/test_readpath.py);
+  * the slot written *this* step is exempt (``clean_slot``): the freshly
+    computed K/V is still in the store buffer, not yet a round-trip
+    through undervolted HBM -- which also makes the scanned decode
+    token-for-token identical to the legacy corrupt-after-step loop.
+
+With ``inject=False`` the kernel is plain decode flash attention over
+the stored cache -- the write-path modes use the same kernel so every
+injection mode shares one set of attention numerics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import faultmap as fm
+from repro.kernels.bitflip.bitflip import (BLOCK_WORDS, BLOCK_WORDS_LOG2,
+                                           apply_masks, select_block_tables)
+from repro.kernels.ecc.ecc import arena_ecc_codewords
+
+NEG_INF = -1e30
+
+# Per-tile word cap: bounds the candidate-block selects (SMEM reads) a
+# tile needs to resolve its physical addresses.
+TILE_WORD_CAP = 16 * BLOCK_WORDS
+
+
+def packing(dtype) -> int:
+    """Elements per uint32 word for a cache dtype."""
+    itemsize = jnp.dtype(dtype).itemsize
+    if itemsize > 4:
+        raise NotImplementedError(f"itemsize {itemsize} for {dtype}")
+    return 4 // itemsize
+
+
+def kv_words_per_slot(kh: int, d: int, dtype) -> int:
+    """uint32 words one cache slot (all KV heads) occupies; the unit of
+    the cache-position -> arena-word mapping."""
+    p = packing(dtype)
+    if (kh * d) % p:
+        raise ValueError(
+            f"KV slot of {kh}x{d} {jnp.dtype(dtype).name} elements is not "
+            "word-aligned; the read path needs whole uint32 words per slot")
+    return kh * d // p
+
+
+def pick_bkv(length: int, words_per_slot: int,
+             cap: int = TILE_WORD_CAP) -> int:
+    """Largest divisor of the cache length whose tile fits the word cap."""
+    best = 1
+    for c in range(1, length + 1):
+        if length % c == 0 and c * words_per_slot <= cap:
+            best = c
+    return best
+
+
+def _tile_to_u32(x):
+    """(rows, elems) any-dtype tile -> (rows, words) uint32 view, word
+    pairing identical to ``bitflip.ops.to_u32`` on the flattened leaf."""
+    p = packing(x.dtype)
+    if p == 1:
+        return jax.lax.bitcast_convert_type(x, jnp.uint32)
+    lane = jax.lax.bitcast_convert_type(
+        x, jnp.uint16 if p == 2 else jnp.uint8)
+    return jax.lax.bitcast_convert_type(
+        lane.reshape(x.shape[0], -1, p), jnp.uint32)
+
+
+def _tile_from_u32(u32, dtype, shape):
+    p = packing(dtype)
+    if p == 1:
+        return jax.lax.bitcast_convert_type(u32, dtype).reshape(shape)
+    lane = jax.lax.bitcast_convert_type(
+        u32, jnp.uint16 if p == 2 else jnp.uint8)
+    return jax.lax.bitcast_convert_type(
+        lane.reshape(shape[0], -1), dtype).reshape(shape)
+
+
+def corrupt_kv_tile(x, word0, base_ref, thr_ref, *, num_blocks: int,
+                    n_cand: int, seed: int, method: str,
+                    words_per_row_log2: int, ecc: bool, slot_ids=None,
+                    clean_slot=None):
+    """Read-path corruption of one (rows, elems) K/V tile.
+
+    ``word0`` (traced scalar): leaf word offset of the tile's first
+    element; rows are leaf-contiguous.  ``base_ref``/``thr_ref``: the
+    leaf's arena block tables (SMEM refs inside a kernel, arrays in the
+    oracle).  ``clean_slot``: optional traced slot index whose row keeps
+    its stored (store-buffer) value.
+    """
+    u = _tile_to_u32(x)
+    word0 = word0.astype(jnp.uint32)
+    off = (word0
+           + jax.lax.broadcasted_iota(jnp.uint32, u.shape, 0)
+           * np.uint32(u.shape[1])
+           + jax.lax.broadcasted_iota(jnp.uint32, u.shape, 1))
+    j0 = (word0 >> np.uint32(BLOCK_WORDS_LOG2)).astype(jnp.int32)
+    wid, thr = select_block_tables(off, base_ref, thr_ref, j0=j0,
+                                   n_cand=n_cand, num_blocks=num_blocks)
+    if ecc:
+        assert u.shape[1] % 2 == 0, "ECC tiles need an even word count"
+        out, _ = arena_ecc_codewords(u, wid, thr, seed=seed,
+                                     words_per_row_log2=words_per_row_log2)
+    else:
+        out = apply_masks(u, wid, thr, seed=seed, method=method,
+                          words_per_row_log2=words_per_row_log2)
+    if clean_slot is not None:
+        keep = (slot_ids == clean_slot)[:, None]
+        out = jnp.where(keep, u, out)
+    return _tile_from_u32(out, x.dtype, x.shape)
+
+
+def _decode_kernel(kbase_ref, kthr_ref, vbase_ref, vthr_ref, offs_ref,
+                   misc_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, scale, causal, window, bkv,
+                   kh, g, d, seed, method, words_per_row_log2, ecc,
+                   inject, k_wps, v_wps, k_cand, v_cand, k_blocks,
+                   v_blocks, length):
+    b = pl.program_id(0)
+    ki = pl.program_id(1)
+    nkv = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k_t = k_ref[0]                       # (bkv, KH, D)
+    v_t = v_ref[0]
+    pos_t = pos_ref[0]                   # (bkv,) int32, may carry faults
+    slot_ids = (ki * bkv
+                + jax.lax.broadcasted_iota(jnp.int32, (bkv,), 0))
+
+    if inject:
+        # Leaf word offset of this tile: the layer's slice offset
+        # (prefetched: period-stacked leaves shift per scan index) plus
+        # (b * L + ki * bkv) slots into the (B, L, KH, D) buffer.
+        slot0 = (b * length + ki * bkv).astype(jnp.uint32)
+        clean = misc_ref[0]
+        k_t = corrupt_kv_tile(
+            k_t.reshape(bkv, kh * d), offs_ref[0] + slot0 * np.uint32(k_wps),
+            kbase_ref, kthr_ref, num_blocks=k_blocks, n_cand=k_cand,
+            seed=seed, method=method, words_per_row_log2=words_per_row_log2,
+            ecc=ecc, slot_ids=slot_ids, clean_slot=clean,
+        ).reshape(bkv, kh, d)
+        v_t = corrupt_kv_tile(
+            v_t.reshape(bkv, kh * d), offs_ref[1] + slot0 * np.uint32(v_wps),
+            vbase_ref, vthr_ref, num_blocks=v_blocks, n_cand=v_cand,
+            seed=seed, method=method, words_per_row_log2=words_per_row_log2,
+            ecc=ecc, slot_ids=slot_ids, clean_slot=clean,
+        ).reshape(bkv, kh, d)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # (H, D)
+    qr = q.reshape(kh, g, d)
+    kf = k_t.astype(jnp.float32)
+    vf = v_t.astype(jnp.float32)
+    # (KH, G, D) x (bkv, KH, D) -> (KH, G, bkv), KH batched
+    s = jax.lax.dot_general(qr, kf, (((2,), (2,)), ((0,), (1,))))
+
+    q_pos = misc_ref[1]
+    delta = q_pos - pos_t
+    mask = jnp.zeros((bkv,), jnp.float32)
+    if causal:
+        mask = jnp.where(delta < 0, NEG_INF, mask)
+    if window > 0:
+        mask = jnp.where(delta >= window, NEG_INF, mask)
+    mask = jnp.where(pos_t < 0, NEG_INF, mask)       # empty ring slots
+    s = s + mask[None, None, :]
+
+    m_prev = m_ref[...].reshape(kh, g)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    acc = acc_ref[...].reshape(kh, g, d) * corr[..., None]
+    # (KH, G, bkv) x (bkv, KH, D) -> (KH, G, D), KH batched
+    acc = acc + jax.lax.dot_general(p, vf, (((2,), (0,)), ((0,), (1,))))
+    l_new = l_ref[...].reshape(kh, g) * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc.reshape(acc_ref.shape)
+    m_ref[...] = m_new.reshape(m_ref.shape)
+    l_ref[...] = l_new.reshape(l_ref.shape)
+
+    @pl.when(ki == nkv - 1)
+    def _finish():
+        out = acc / jnp.maximum(l_new[..., None], 1e-30)
+        o_ref[0, 0] = out.reshape(kh * g, d).astype(o_ref.dtype)
+
+
+def faulty_decode_attention(q, k, v, pos, *, q_pos, k_tables, v_tables,
+                            k_word0, v_word0, causal: bool = True,
+                            window: int = 0, scale=None, seed: int,
+                            method: str, words_per_row_log2: int,
+                            ecc: bool, inject: bool, clean_slot=None,
+                            bkv=None, interpret=None):
+    """Decode attention over a ring cache with read-path injection.
+
+    q: (B, 1, H, D) -- the decode token's query in model layout.
+    k, v: (B, L, KH, D) -- the cache buffers in their *stored* layout.
+    pos: (B, L) int32 -- absolute position per slot (-1 = empty).
+    q_pos: traced scalar, the decode token's absolute position.
+    k_tables / v_tables: (block_base, block_thr) arena tables for the
+    cache leaf (thresholds already gathered at the current, possibly
+    traced, voltage).  k_word0 / v_word0: traced word offset of this
+    (B, L, KH, D) slice within its leaf (stacked-layer leaves).
+    clean_slot: traced slot index exempt from corruption (the slot the
+    current token was just written to), or None.
+
+    Returns (B, 1, H, D) in v.dtype.
+    """
+    b, sq, h, d = q.shape
+    _, length, kh, _ = k.shape
+    assert sq == 1, "read-path kernel is decode-specialized (S == 1)"
+    g = h // kh
+    scale = float(d ** -0.5 if scale is None else scale)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    k_wps = kv_words_per_slot(kh, d, k.dtype)
+    v_wps = kv_words_per_slot(kh, d, v.dtype)
+    if bkv is None:
+        bkv = pick_bkv(length, max(k_wps, v_wps))
+    assert length % bkv == 0, (length, bkv)
+    nkv = length // bkv
+
+    k_base, k_thr = k_tables
+    v_base, v_thr = v_tables
+    k_cand = -(-bkv * k_wps // BLOCK_WORDS) + 1
+    v_cand = -(-bkv * v_wps // BLOCK_WORDS) + 1
+    offs = jnp.stack([jnp.asarray(k_word0), jnp.asarray(v_word0)]
+                     ).astype(jnp.uint32)
+    clean = jnp.int32(-1) if clean_slot is None else clean_slot
+    misc = jnp.stack([jnp.asarray(clean, jnp.int32),
+                      jnp.asarray(q_pos, jnp.int32)])
+
+    body = functools.partial(
+        _decode_kernel, scale=scale, causal=causal, window=window, bkv=bkv,
+        kh=kh, g=g, d=d, seed=seed, method=method,
+        words_per_row_log2=words_per_row_log2, ecc=ecc, inject=inject,
+        k_wps=k_wps, v_wps=v_wps, k_cand=k_cand, v_cand=v_cand,
+        k_blocks=int(k_base.shape[0]), v_blocks=int(v_base.shape[0]),
+        length=length)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(b, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, h, d), lambda b_, k_, *_: (b_, 0, 0, 0)),
+            pl.BlockSpec((1, bkv, kh, d),
+                         lambda b_, k_, *_: (b_, k_, 0, 0)),
+            pl.BlockSpec((1, bkv, kh, d),
+                         lambda b_, k_, *_: (b_, k_, 0, 0)),
+            pl.BlockSpec((1, bkv), lambda b_, k_, *_: (b_, k_)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, h, d),
+                               lambda b_, k_, *_: (b_, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, d), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct((b, 1, h, d), v.dtype),
+        grid_spec=grid_spec,
+        interpret=bool(interpret),
+    )(k_base, k_thr, v_base, v_thr, offs, misc, q, k, v, pos)

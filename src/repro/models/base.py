@@ -51,6 +51,25 @@ def spec_avals(specs) -> Any:
         is_leaf=lambda x: isinstance(x, ParamSpec))
 
 
+# The logical axis naming the ring-buffer slot dimension of decode-state
+# leaves.  Injection uses it to map a cache position to the arena words
+# a decode step actually wrote (incremental write-path injection) and to
+# the K/V rows the fused read-path attention kernel corrupts on load.
+CACHE_SLOT_AXIS = "cache_seq"
+
+
+def cache_slot_axes(specs) -> Any:
+    """Per-leaf index of the ring-buffer slot axis, -1 for slotless
+    decode state (recurrent/conv states, bookkeeping scalars).  Stacked
+    period leaves (leading 'layers' axis) shift automatically because
+    the axis is located by name."""
+    def ax(s: ParamSpec) -> int:
+        return (s.axes.index(CACHE_SLOT_AXIS)
+                if CACHE_SLOT_AXIS in s.axes else -1)
+    return jax.tree_util.tree_map(
+        ax, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
 def init_params(specs, key) -> Any:
     """Materialize parameters (smoke tests / examples only)."""
     flat, treedef = jax.tree_util.tree_flatten(

@@ -87,9 +87,16 @@ def _qkv(cfg, p, h, positions):
 
 
 def attn_mlp_apply(cfg: ArchConfig, kind: str, p, x, cache,
-                   positions, mode: str, pos=None):
+                   positions, mode: str, pos=None, fault_ctx=None,
+                   slot_ref=None):
     """One transformer block.  mode: train | prefill | decode.
-    kind: global | local (sliding window) | enc (bidirectional)."""
+    kind: global | local (sliding window) | enc (bidirectional).
+
+    ``fault_ctx`` (decode only): a read-path injection context
+    (:mod:`repro.serving.readpath`); when it covers this slot, decode
+    attention runs through the fused kernel that corrupts K/V tiles as
+    they are loaded from the undervolted cache domain.  ``slot_ref`` is
+    the ``(slot key, period index)`` pair from the stack."""
     window = cfg.window if kind == "local" else 0
     causal = kind != "enc"
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
@@ -107,11 +114,16 @@ def attn_mlp_apply(cfg: ArchConfig, kind: str, p, x, cache,
                           window=window)
     else:  # decode: S == 1
         new_cache = C.ring_update(cache, {"k": k, "v": v}, pos)
-        valid = new_cache["pos"] >= 0
-        out = L.attention(q, new_cache["k"], new_cache["v"],
-                          q_positions=positions,
-                          k_positions=new_cache["pos"], causal=causal,
-                          window=window, kv_valid=valid)
+        if (fault_ctx is not None and slot_ref is not None
+                and fault_ctx.covers(slot_ref[0])):
+            out = fault_ctx.attend(slot_ref[0], slot_ref[1], q, new_cache,
+                                   q_pos=pos, causal=causal, window=window)
+        else:
+            valid = new_cache["pos"] >= 0
+            out = L.attention(q, new_cache["k"], new_cache["v"],
+                              q_positions=positions,
+                              k_positions=new_cache["pos"], causal=causal,
+                              window=window, kv_valid=valid)
 
     b, s, _, _ = out.shape
     x = x + jnp.einsum("bsq,qd->bsd", out.reshape(b, s, -1), p["wo"])
@@ -151,11 +163,20 @@ def cache_specs(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
         lambda kind: attn_cache_specs(cfg, kind, batch, max_len))
 
 
-def _run_stack(cfg, params, x, positions, cache, mode, pos=None):
-    apply_slot = lambda kind, p, xx, c: attn_mlp_apply(
-        cfg, kind, p, xx, c, positions, mode, pos)
+def _run_stack(cfg, params, x, positions, cache, mode, pos=None,
+               fault_ctx=None):
+    if fault_ctx is None:
+        apply_slot = lambda kind, p, xx, c: attn_mlp_apply(
+            cfg, kind, p, xx, c, positions, mode, pos)
+        with_ref = False
+    else:
+        apply_slot = lambda kind, p, xx, c, ref: attn_mlp_apply(
+            cfg, kind, p, xx, c, positions, mode, pos,
+            fault_ctx=fault_ctx, slot_ref=ref)
+        with_ref = True
     x, new_cache = S.apply_stack(params["stack"], x, layout(cfg), apply_slot,
-                                 cache=cache, remat=(cfg.remat == "block"))
+                                 cache=cache, remat=(cfg.remat == "block"),
+                                 with_slot_ref=with_ref)
     return L.rms_norm(x, params["ln_f"], cfg.norm_eps), new_cache
 
 
@@ -181,13 +202,23 @@ def prefill(params, batch, cfg: ArchConfig, max_len: int, dist=None):
     return logits[:, 0], cache
 
 
-def decode_step(params, cache, batch, pos, cfg: ArchConfig, dist=None):
-    """batch["tokens"]: (B, 1); pos: scalar int32 absolute position."""
+def decode_step(params, cache, batch, pos, cfg: ArchConfig, dist=None,
+                fault_ctx=None):
+    """batch["tokens"]: (B, 1); pos: scalar int32 absolute position.
+
+    ``fault_ctx``: optional read-path injection context -- attention
+    layers it covers corrupt their K/V tiles at load time instead of
+    requiring the cache to be re-injected between steps."""
     tokens = batch["tokens"]
     b = tokens.shape[0]
     positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
     x = L.embed(tokens, params["embed"])
     x, cache = _run_stack(cfg, params, x, positions, cache, "decode",
-                          pos=pos)
+                          pos=pos, fault_ctx=fault_ctx)
     logits = L.unembed(x, params["unembed"])
     return logits[:, 0], cache
+
+
+# The serving engine's fused read-path injection understands this
+# family's cache layout (ring k/v/pos leaves, slot axis "cache_seq").
+SUPPORTS_READ_PATH = True

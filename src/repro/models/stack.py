@@ -94,20 +94,39 @@ def apply_stack(
     apply_slot: Callable[..., Any],   # (kind, params, x, cache) -> (x, cache)
     cache: Optional[Dict[str, Any]] = None,
     remat: bool = True,
+    with_slot_ref: bool = False,
 ):
     """Run the full layer stack; threads per-layer caches if given.
 
     apply_slot(kind, slot_params, x, slot_cache) must return
     (new_x, new_slot_cache); slot_cache is None when cache is None.
+
+    ``with_slot_ref``: apply_slot additionally receives ``(key, idx)``
+    -- its slot key (e.g. ``"s0_global"``) and, for periodic slots, the
+    traced period index of the layer being applied (None for
+    prefix/remainder layers).  Consumers that address per-layer slices
+    of the period-stacked cache leaves (the read-path injection context)
+    need both to locate a layer inside its stacked leaf.
+
+    ``remat`` only applies where gradients can flow: threading a cache
+    means prefill/decode, where checkpointing would just insert
+    materialization barriers into the inference path -- it is ignored
+    there for every family.
     """
+    remat = remat and cache is None
     slots = layout.slots
 
-    def period_body(x, period_params, period_cache):
+    def _call(kind, key, idx, p, x, c):
+        if with_slot_ref:
+            return apply_slot(kind, p, x, c, (key, idx))
+        return apply_slot(kind, p, x, c)
+
+    def period_body(x, period_params, period_cache, pidx=None):
         new_cache = {}
         for i, kind in enumerate(slots):
             key = f"s{i}_{kind}"
             c = period_cache[key] if period_cache is not None else None
-            x, c_new = apply_slot(kind, period_params[key], x, c)
+            x, c_new = _call(kind, key, pidx, period_params[key], x, c)
             new_cache[key] = c_new
         return x, (new_cache if period_cache is not None else None)
 
@@ -117,10 +136,10 @@ def apply_stack(
 
     def apply_single(x, key, kind, params_d, cache_d):
         c = cache_d[key] if cache_d is not None else None
-        body = (jax.checkpoint(
-            functools.partial(apply_slot, kind),
-            policy=jax.checkpoint_policies.nothing_saveable)
-            if remat else functools.partial(apply_slot, kind))
+        body = functools.partial(_call, kind, key, None)
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
         return body(params_d[key], x, c)
 
     new_prefix = {}
@@ -132,17 +151,18 @@ def apply_stack(
         new_prefix[key] = c_new
 
     if layout.n_periods > 0:
+        pidx = jnp.arange(layout.n_periods, dtype=jnp.int32)
         if cache is None:
             x, _ = jax.lax.scan(
-                lambda x, p: (period_body(x, p, None)[0], None),
-                x, params["periods"])
+                lambda x, xs: (period_body(x, xs[0], None, xs[1])[0], None),
+                x, (params["periods"], pidx))
             new_period_cache = None
         else:
             def scan_fn(x, xs):
-                p, c = xs
-                return period_body(x, p, c)
+                p, c, i = xs
+                return period_body(x, p, c, i)
             x, new_period_cache = jax.lax.scan(
-                scan_fn, x, (params["periods"], cache["periods"]))
+                scan_fn, x, (params["periods"], cache["periods"], pidx))
     else:
         new_period_cache = {} if cache is not None else None
 

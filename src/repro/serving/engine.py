@@ -1,17 +1,55 @@
-"""Batched serving engine: prefill + greedy/temperature decode, with
-optional undervolted KV-cache domains (the EDEN-style application-level
+"""Batched serving engine: prefill + one scanned, donated decode.
+
+Undervolted KV-cache domains (the EDEN-style application-level
 trade-off: KV bits ride cheap memory; the model's robustness to rare
-flips buys the paper's deep power savings)."""
+flips buys the paper's deep power savings) are modeled on the *read
+path*: the paper's faults manifest when undervolted HBM is read, so the
+fused decode-attention kernel corrupts K/V tiles as they are loaded --
+zero extra HBM passes -- while the write path shrinks to the
+O(new-token) slice each decode step actually writes.  The whole decode
+phase is a single jitted ``lax.scan`` with the cache donated, so
+per-token Python dispatch and cache-sized buffer copies are gone.
+
+Injection modes (``ServeConfig.kv_injection``):
+
+  * ``'read'``   -- fused read-path corruption (K/V tiles corrupted in
+    VMEM at load); the write path covers only non-K/V bookkeeping
+    (``pos``) incrementally.  Decode-step injection work no longer
+    scales with cache size.
+  * ``'write'``  -- incremental write-path: the slice written this step
+    is corrupted in O(new-token) work; attention reads the stored
+    (already-corrupt) cache.  Bit-identical tokens to ``'read'``
+    (stuck-at masks are deterministic per physical word and
+    idempotent); also the fallback for families without read-path
+    support.
+  * ``'rewrite'`` -- the legacy full-cache re-injection every token
+    (one arena pass per step, O(cache) HBM traffic); kept as the slow
+    cross-validation oracle, like ``engine='segments'`` in core.
+  * ``'auto'``   -- ``'read'`` when the family/cache supports it, else
+    ``'write'``.
+
+All modes share one set of attention numerics: whenever injection is
+active and the family supports it, attention routes through the fused
+kernel (with corruption disabled in the write modes), so
+``decode='scan'`` and the legacy ``decode='loop'`` emit token-for-token
+identical output across modes -- asserted in tests/test_serving_scan.py.
+"""
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.base import ArchBundle, ArchConfig, spec_avals
+from repro.core import engine as arena
+from repro.core.engine import _static_value, resolve_method
+from repro.core.faultmodel import V_MIN
+from repro.models.base import (ArchBundle, ArchConfig, cache_slot_axes,
+                               spec_avals)
 from repro.models.dist import DistContext
+from repro.serving import readpath
 from repro.training.undervolt import UndervoltPlan
 
 
@@ -22,12 +60,12 @@ class ServeConfig:
     temperature: float = 0.0
     undervolt: Optional[UndervoltPlan] = None
     # Optional per-request KV-domain voltage override (may be traced):
-    # the arena engine re-derives thresholds from it at run time, so a
-    # serving fleet can walk cache voltage up and down under load
-    # without ever recompiling the decode step.  Method dispatch is
-    # static: 'auto' resolves from a *concrete* kv_voltage correctly; a
-    # *traced* kv_voltage with kv_method='auto' is rejected up front
-    # (generate raises ValueError) -- traced sweeps must pick the method
+    # thresholds are re-derived from it at run time, so a serving fleet
+    # can walk cache voltage up and down under load without ever
+    # recompiling the decode step.  Method dispatch is static: 'auto'
+    # resolves from a *concrete* kv_voltage correctly; a *traced*
+    # kv_voltage with kv_method='auto' is rejected up front (generate
+    # raises ValueError) -- traced sweeps must pick the method
     # explicitly ('bitwise' once rates cross ~1e-3).
     kv_voltage: Optional[float] = None
     kv_method: str = "auto"
@@ -37,22 +75,177 @@ class ServeConfig:
     # domain keeps enough *usable* capacity for this request's cache.
     # Mutually exclusive with kv_voltage.
     governor: Optional[object] = None
+    # Decode driver: 'scan' (single jitted lax.scan, cache donated) or
+    # 'loop' (per-token Python dispatch -- the legacy driver, kept for
+    # cross-validation).
+    decode: str = "scan"
+    # Where faults are applied: see the module docstring.
+    kv_injection: str = "auto"
 
 
 def _kv_placement(bundle, cfg, batch_size, sc):
     if sc.undervolt is None or not sc.undervolt.enabled:
-        return None
+        return None, None
     if not sc.undervolt.covers("kv_cache"):
-        return None
+        return None, None
     cache_avals = spec_avals(
         bundle.module.cache_specs(cfg, batch_size, sc.max_len))
-    return sc.undervolt.place({"kv_cache": cache_avals})
+    placement = sc.undervolt.place({"kv_cache": cache_avals})["kv_cache"]
+    return placement, cache_avals
 
 
 def _static_kv_voltage(v):
     """float(v) for concrete scalars, None for traced values."""
-    from repro.core.engine import _static_value
     return _static_value(v)
+
+
+@dataclasses.dataclass
+class DecodeEngine:
+    """Everything static about one request shape's decode phase, plus
+    the jitted scanned driver.  ``decode_all(params, cache, tok0, key,
+    kv_voltage) -> (n_more, B, 1) tokens`` donates the cache buffer --
+    XLA updates it in place instead of copying it every token."""
+
+    mode: str                    # read | write | rewrite
+    method: str
+    active: bool                 # may this request inject at all
+    use_fused: bool              # attention routed through faulty kernel
+    n_more: int
+    decode_all: Any              # jitted scanned decode
+    step_core: Any               # (p, c, tok, pos, v) -> (logits, c)
+    init_inject: Any             # (c, v) -> c
+    sample: Any                  # (logits, key) -> tokens
+
+
+def build_decode_engine(bundle: ArchBundle, cfg: ArchConfig,
+                        sc: ServeConfig, batch_size: int, prompt_len: int,
+                        dist: Optional[DistContext] = None,
+                        static_voltage=None) -> DecodeEngine:
+    """Construct the decode-phase closures for one request shape.
+
+    ``static_voltage``: the concrete effective KV voltage if known
+    (None when the request will pass a traced voltage at run time --
+    injection is then assumed live and method must already be
+    concrete).  Used by :func:`generate` and directly by benchmarks /
+    structural tests that lower ``decode_all`` without running prefill.
+    """
+    module = bundle.module
+    kvp, cache_avals = _kv_placement(bundle, cfg, batch_size, sc)
+    fmap = sc.undervolt.fault_map() if kvp is not None else None
+
+    if sc.kv_injection not in ("auto", "read", "write", "rewrite"):
+        raise ValueError(f"unknown kv_injection {sc.kv_injection!r}")
+    sv = static_voltage
+    active = kvp is not None and not (sv is not None
+                                      and sv >= V_MIN - 1e-9)
+    supports_read = (active and readpath.supports(module)
+                     and readpath.cache_supported(kvp, cache_avals))
+    mode = sc.kv_injection
+    if mode == "auto":
+        mode = "read" if supports_read else "write"
+    if mode == "read" and active and not supports_read:
+        raise ValueError(
+            "kv_injection='read' needs a family with read-path support "
+            "and word-aligned K/V slots; use 'write' (scanned "
+            "incremental write-path) or 'rewrite' (full re-injection)")
+    method = sc.kv_method
+    if active and method == "auto":
+        if sv is None:
+            raise ValueError(
+                "kv_method='auto' cannot dispatch from a traced "
+                "kv_voltage (method selection is static); pass "
+                "kv_method='word' or 'bitwise' explicitly for traced "
+                "voltage schedules")
+        method = "word" if kvp.domain.ecc else resolve_method(
+            fmap, kvp, sv)
+    # Fused attention whenever faults may flow, in *every* mode, so all
+    # injection modes share bit-identical attention numerics.
+    use_fused = active and supports_read
+    slot_axes = (cache_slot_axes(
+        module.cache_specs(cfg, batch_size, sc.max_len))
+        if active else None)
+    pos0 = prompt_len + (cfg.enc_len if cfg.family == "vlm" else 0)
+    n_more = sc.max_new_tokens - 1
+
+    def make_ctx(v):
+        if not use_fused:
+            return None
+        return readpath.build_ctx(
+            kvp, fmap, cache_avals, voltage=v, method=method,
+            inject=(mode == "read"))
+
+    def init_inject(c, v):
+        """Post-prefill injection (the cache's first trip to HBM)."""
+        if not active:
+            return c
+        if mode == "read":
+            # K/V leaves stay clean in the buffer (the read path
+            # corrupts them at load); bookkeeping leaves take their
+            # write-path faults now.
+            c, _ = arena.inject_placement_slice(
+                c, kvp, fmap, voltage=v, method=method,
+                skip_paths=readpath.kv_paths(kvp))
+            return c
+        from repro.core.injection import inject_group
+        c, _ = inject_group(c, kvp, fmap, voltage=v, method=method)
+        return c
+
+    def post_inject(c, pos, v):
+        """Write-path injection after a decode step wrote slot pos%L."""
+        if not active:
+            return c
+        if mode == "rewrite":
+            from repro.core.injection import inject_group
+            c, _ = inject_group(c, kvp, fmap, voltage=v, method=method)
+            return c
+        skip = readpath.kv_paths(kvp) if mode == "read" else ()
+        c, _ = arena.inject_placement_slice(
+            c, kvp, fmap, slot_axes=slot_axes, pos=pos, voltage=v,
+            method=method, skip_paths=skip)
+        return c
+
+    def step_with_ctx(p, c, tok, pos, v, ctx):
+        if ctx is not None:
+            logits, c = module.decode_step(p, c, {"tokens": tok}, pos,
+                                           cfg, dist, fault_ctx=ctx)
+        else:
+            logits, c = module.decode_step(p, c, {"tokens": tok}, pos,
+                                           cfg, dist)
+        return logits, post_inject(c, pos, v)
+
+    def step_core(p, c, tok, pos, v):
+        return step_with_ctx(p, c, tok, pos, v, make_ctx(v))
+
+    def sample(lg, k):
+        if sc.temperature <= 0.0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, lg / sc.temperature).astype(
+            jnp.int32)
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def decode_all(p, c, tok, k, v):
+        c = init_inject(c, v)
+        ctx = make_ctx(v)      # hoisted: scan-invariant threshold tables
+
+        def body(carry, _):
+            c, tok, pos, k = carry
+            logits, c = step_with_ctx(p, c, tok, pos, v, ctx)
+            k, ki = jax.random.split(k)
+            nt = sample(logits, ki)[:, None]
+            return (c, nt, pos + 1, k), nt
+
+        (c, _, _, _), toks = jax.lax.scan(
+            body, (c, tok, jnp.int32(pos0), k), None, length=n_more)
+        # The final cache is returned so the donated input aliases an
+        # output of the same shape: XLA updates the cache in place
+        # through the scan instead of copying it (asserted on the HLO
+        # in tests); callers that are done with the request drop it.
+        return toks, c                  # toks: (n_more, B, 1)
+
+    return DecodeEngine(mode=mode, method=method, active=active,
+                        use_fused=use_fused, n_more=n_more,
+                        decode_all=decode_all, step_core=step_core,
+                        init_inject=init_inject, sample=sample)
 
 
 def generate(bundle: ArchBundle, cfg: ArchConfig, params, batch: Dict,
@@ -61,8 +254,10 @@ def generate(bundle: ArchBundle, cfg: ArchConfig, params, batch: Dict,
     """Prefill on batch['tokens'] then decode max_new_tokens greedily."""
     tokens = batch["tokens"]
     b, s = tokens.shape
-    placement = _kv_placement(bundle, cfg, b, sc)
-    fmap = sc.undervolt.fault_map() if placement is not None else None
+    placement, _ = _kv_placement(bundle, cfg, b, sc)
+    module = bundle.module
+    if sc.decode not in ("scan", "loop"):
+        raise ValueError(f"unknown decode driver {sc.decode!r}")
 
     kv_voltage = sc.kv_voltage
     if sc.governor is not None:
@@ -80,7 +275,7 @@ def generate(bundle: ArchBundle, cfg: ArchConfig, params, batch: Dict,
                 "ServeConfig.governor is set but the undervolt plan "
                 "does not place 'kv_cache' (or is disabled): admission "
                 "governance would silently be a no-op")
-        kv_domain = placement["kv_cache"].domain.name
+        kv_domain = placement.domain.name
         if sc.governor.config.domain != kv_domain:
             raise ValueError(
                 f"sc.governor governs domain "
@@ -88,7 +283,7 @@ def generate(bundle: ArchBundle, cfg: ArchConfig, params, batch: Dict,
                 f"placed in domain {kv_domain!r}")
         # Admission-time re-plan: deepest voltage at which the governed
         # domain keeps this request's cache bytes usable.
-        kv_bytes = placement["kv_cache"].total_words * 4
+        kv_bytes = placement.total_words * 4
         kv_voltage = sc.governor.admit(kv_bytes)
     if (kv_voltage is not None and sc.kv_method == "auto"
             and _static_kv_voltage(kv_voltage) is None):
@@ -98,42 +293,45 @@ def generate(bundle: ArchBundle, cfg: ArchConfig, params, batch: Dict,
             "kv_method='word' or 'bitwise' explicitly for traced "
             "voltage schedules")
 
-    prefill = jax.jit(lambda p, bt: bundle.module.prefill(
-        p, bt, cfg, sc.max_len, dist))
-    step = jax.jit(lambda p, c, t, pos: bundle.module.decode_step(
-        p, c, t, pos, cfg, dist))
+    eff_v = kv_voltage if kv_voltage is not None else (
+        placement.domain.voltage if placement is not None else None)
+    sv = _static_kv_voltage(eff_v) if eff_v is not None else None
+    # sv None here means a traced voltage: injection must be assumed
+    # live (build_decode_engine treats static_voltage=None that way).
+    eng = build_decode_engine(
+        bundle, cfg, dataclasses.replace(sc, kv_voltage=None,
+                                         governor=None),
+        b, s, dist,
+        static_voltage=(sv if eff_v is not None else V_MIN))
+    varr = (jnp.asarray(eff_v, jnp.float32) if eng.active
+            else jnp.float32(0.0))
 
+    prefill = jax.jit(lambda p, bt: module.prefill(
+        p, bt, cfg, sc.max_len, dist))
     logits, cache = prefill(params, batch)
     pos0 = s + (cfg.enc_len if cfg.family == "vlm" else 0)
 
-    def inject_cache(c):
-        if placement is None:
-            return c
-        from repro.core.injection import inject_group
-        faulted, _ = inject_group(c, placement["kv_cache"], fmap,
-                                  voltage=kv_voltage,
-                                  method=sc.kv_method)
-        return faulted
-
-    cache = inject_cache(cache)
-    out = []
     if key is None:
         key = jax.random.PRNGKey(0)
-
-    def sample(lg, k):
-        if sc.temperature <= 0.0:
-            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(k, lg / sc.temperature).astype(
-            jnp.int32)
-
     key, k0 = jax.random.split(key)
-    tok = sample(logits, k0)[:, None]
-    out.append(tok)
-    for i in range(sc.max_new_tokens - 1):
-        logits, cache = step(params, cache, {"tokens": tok},
-                             jnp.int32(pos0 + i))
-        cache = inject_cache(cache)
-        key, ki = jax.random.split(key)
-        tok = sample(logits, ki)[:, None]
-        out.append(tok)
-    return jnp.concatenate(out, axis=1)
+    tok0 = eng.sample(logits, k0)[:, None]
+
+    if sc.decode == "loop":
+        # Legacy per-token Python dispatch (cross-validation oracle).
+        cache = jax.jit(eng.init_inject)(cache, varr)
+        step = jax.jit(eng.step_core, donate_argnums=(1,))
+        out = [tok0]
+        tok = tok0
+        for i in range(eng.n_more):
+            logits, cache = step(params, cache, tok,
+                                 jnp.int32(pos0 + i), varr)
+            key, ki = jax.random.split(key)
+            tok = eng.sample(logits, ki)[:, None]
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)
+
+    if eng.n_more == 0:
+        return tok0
+    toks, _ = eng.decode_all(params, cache, tok0, key, varr)
+    return jnp.concatenate(
+        [tok0, jnp.moveaxis(toks, 0, 1)[:, :, 0]], axis=1)

@@ -1,0 +1,275 @@
+"""Read-path injection primitives: the fused decode-attention kernel is
+bit-identical to corrupt-then-attend on the same operands, and the
+incremental (slice) write path is bit-identical to full re-injection.
+
+These are the two contracts that let the serving engine drop the
+per-token O(cache) injection pass: faults are deterministic properties
+of physical words, so corrupting data as it is *read* (in VMEM, inside
+the attention kernel) or corrupting only the words a step *wrote*
+reproduces the legacy corrupt-everything-every-step semantics exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, injection
+from repro.core.domains import MemoryDomain, place_groups
+from repro.core.faultmap import FaultMap
+from repro.core.hbm import HBMGeometry
+from repro.kernels.flash_attention import faulty
+from repro.models.base import ParamSpec, cache_slot_axes
+
+TINY = HBMGeometry(name="tiny", num_stacks=2, channels_per_stack=2,
+                   pcs_per_channel=2, bytes_per_pc=64 * 1024)
+FMAP = FaultMap.from_seed(TINY, seed=7)
+
+B, L, KH, G, D, P = 2, 32, 2, 3, 8, 2
+H = KH * G
+
+
+def _bits(x):
+    return np.asarray(jax.lax.bitcast_convert_type(
+        x.reshape(-1),
+        {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}[x.dtype.itemsize]))
+
+
+def _cache_tree(rng, dtype=jnp.bfloat16):
+    if jnp.issubdtype(dtype, jnp.floating):
+        mk = lambda: jnp.asarray(rng.randn(P, B, L, KH, D), dtype)
+    else:
+        mk = lambda: jnp.asarray(rng.randint(-100, 100, (P, B, L, KH, D)),
+                                 dtype)
+    return {
+        "k": mk(),
+        "v": mk(),
+        "pos": jnp.asarray(rng.randint(-1, 60, (P, B, L)), jnp.int32),
+    }
+
+
+def _specs(dtype=jnp.bfloat16):
+    kv_axes = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+    return {
+        "k": ParamSpec((P, B, L, KH, D), kv_axes, dtype, "zeros"),
+        "v": ParamSpec((P, B, L, KH, D), kv_axes, dtype, "zeros"),
+        "pos": ParamSpec((P, B, L), ("layers", "batch", "cache_seq"),
+                         jnp.int32, "zeros"),
+    }
+
+
+def _place(tree, *, v, ecc):
+    domains = {"d": MemoryDomain("d", v, tuple(range(6)), ecc=ecc)}
+    return place_groups({"g": tree}, {"g": "d"}, domains, TINY)["g"]
+
+
+def _leaf_tables(placement, v):
+    table = FMAP.threshold_table(v)
+    tabs = engine.leaf_block_tables(placement)
+    paths = [lp.path for lp in placement.leaves]
+    out = {}
+    for name in ("k", "v"):
+        bb, bp = tabs[paths.index(f"['{name}']")]
+        out[name] = (jnp.asarray(bb), table[jnp.asarray(bp)])
+    return out
+
+
+CASES = [("word", 0.88, False), ("bitwise", 0.86, False),
+         ("word", 0.86, True)]
+
+
+@pytest.mark.parametrize("method,v,ecc", CASES)
+def test_fused_attention_equals_corrupt_then_attend(method, v, ecc):
+    """The acceptance contract: read-path corruption inside the kernel
+    is bit-identical to write-path corrupt-then-attend on the same
+    operands -- including the clean-slot (store-buffer) exemption."""
+    rng = np.random.RandomState(1)
+    tree = _cache_tree(rng)
+    placement = _place(tree, v=v, ecc=ecc)
+    tabs = _leaf_tables(placement, v)
+    corr, _ = engine.inject_placement_slice(tree, placement, FMAP,
+                                            voltage=v, method=method)
+    assert any(int((_bits(corr[n]) != _bits(tree[n])).sum()) > 0
+               for n in ("k", "v"))  # the sweep point really injects
+
+    layer = 1
+    layer_words = B * L * KH * D // 2      # bf16: 2 elements per word
+    q = jnp.asarray(rng.randn(B, 1, H, D), jnp.bfloat16)
+    pos_vals = np.arange(L)[None, :].repeat(B, 0).astype(np.int32)
+    pos_vals[:, -3:] = -1                  # empty ring slots stay masked
+    pos = jnp.asarray(pos_vals)
+    clean_slot = jnp.int32(5)
+    kw = dict(q_pos=jnp.int32(L + 4), k_tables=tabs["k"],
+              v_tables=tabs["v"], k_word0=jnp.uint32(layer * layer_words),
+              v_word0=jnp.uint32(layer * layer_words), causal=True,
+              window=0, seed=FMAP.seed, method=method,
+              words_per_row_log2=FMAP.words_per_row_log2, ecc=ecc)
+
+    out_read = faulty.faulty_decode_attention(
+        q, tree["k"][layer], tree["v"][layer], pos, inject=True,
+        clean_slot=clean_slot, **kw)
+    # corrupt-then-attend: stored-corrupt cache, current slot's write
+    # still in the store buffer (clean)
+    kc = corr["k"][layer].at[:, 5].set(tree["k"][layer][:, 5])
+    vc = corr["v"][layer].at[:, 5].set(tree["v"][layer][:, 5])
+    out_write = faulty.faulty_decode_attention(q, kc, vc, pos,
+                                               inject=False, **kw)
+    np.testing.assert_array_equal(_bits(out_read), _bits(out_write))
+
+    # without the exemption the current slot's faults do land
+    out_all = faulty.faulty_decode_attention(
+        q, tree["k"][layer], tree["v"][layer], pos, inject=True, **kw)
+    out_all_ref = faulty.faulty_decode_attention(
+        q, corr["k"][layer], corr["v"][layer], pos, inject=False, **kw)
+    np.testing.assert_array_equal(_bits(out_all), _bits(out_all_ref))
+
+
+def test_fused_attention_traced_voltage_traces_once():
+    rng = np.random.RandomState(2)
+    tree = _cache_tree(rng)
+    placement = _place(tree, v=0.90, ecc=False)
+    q = jnp.asarray(rng.randn(B, 1, H, D), jnp.bfloat16)
+    pos = jnp.asarray(np.arange(L)[None, :].repeat(B, 0).astype(np.int32))
+    tabs0 = engine.leaf_block_tables(placement)
+    paths = [lp.path for lp in placement.leaves]
+    traces = []
+
+    @jax.jit
+    def run(vv):
+        traces.append(1)
+        table = FMAP.threshold_table(vv)
+        t = {}
+        for name in ("k", "v"):
+            bb, bp = tabs0[paths.index(f"['{name}']")]
+            t[name] = (jnp.asarray(bb), table[jnp.asarray(bp)])
+        return faulty.faulty_decode_attention(
+            q, tree["k"][0], tree["v"][0], pos, q_pos=jnp.int32(L),
+            k_tables=t["k"], v_tables=t["v"], k_word0=jnp.uint32(0),
+            v_word0=jnp.uint32(0), seed=FMAP.seed, method="word",
+            words_per_row_log2=FMAP.words_per_row_log2, ecc=False,
+            inject=True)
+
+    outs = [run(jnp.float32(v)) for v in (0.90, 0.89, 0.88, 0.87, 0.86)]
+    assert len(traces) == 1, f"voltage sweep retraced {len(traces)} times"
+    # deep into the collapse regime the same compiled function injects
+    # visibly different faults
+    assert bool(jnp.any(outs[0] != outs[-1]))
+
+
+# Bit-level cross-pipeline equality is asserted on int8 caches: XLA-CPU
+# canonicalizes NaN payloads whenever a float op moves bf16/f32 data
+# (slice, concat, dynamic-update), so two *different* but individually
+# deterministic pipelines can legitimately disagree on the payload bits
+# of corrupted float NaNs.  The engine's serving pipelines are
+# self-consistent (canonicalization is idempotent), which the bf16
+# token-level equality tests in test_serving_scan.py cover.
+SLICE_CASES = [("word", 0.87, False, jnp.int8),
+               ("bitwise", 0.86, False, jnp.int8),
+               ("word", 0.86, True, jnp.int8)]
+
+
+@pytest.mark.parametrize("method,v,ecc,dtype", SLICE_CASES)
+def test_incremental_slice_bit_identical_to_full_reinject(method, v, ecc,
+                                                          dtype):
+    """The write-path acceptance contract: after one decode step writes
+    slot s, injecting only that slice yields the exact cache full
+    re-injection would (determinism + idempotence of stuck-at masks)."""
+    rng = np.random.RandomState(3)
+    tree = _cache_tree(rng, dtype)
+    axes = cache_slot_axes(_specs(dtype))
+    placement = _place(tree, v=v, ecc=ecc)
+
+    # state after a step: everything previously corrupted, the freshly
+    # written slot clean
+    pos = jnp.int32(37)
+    slot = int(pos) % L
+    corr, _ = injection.inject_group(tree, placement, FMAP, voltage=v,
+                                     method=method)
+    c1 = {n: corr[n].at[:, :, slot].set(tree[n][:, :, slot])
+          for n in tree}
+
+    inc, bad_i = engine.inject_placement_slice(
+        c1, placement, FMAP, slot_axes=axes, pos=pos, voltage=v,
+        method=method)
+    ref, bad_f = injection.inject_group(c1, placement, FMAP, voltage=v,
+                                        method=method)
+    changed = 0
+    for n in tree:
+        np.testing.assert_array_equal(_bits(inc[n]), _bits(ref[n]),
+                                      err_msg=n)
+        changed += int((_bits(inc[n]) != _bits(c1[n])).sum())
+    assert changed > 0  # the touched slice really takes faults
+
+
+def test_incremental_slice_traced_pos_and_voltage():
+    """slot index and voltage may both be traced: a scanned decode
+    re-executes one compiled step across positions and voltages."""
+    rng = np.random.RandomState(4)
+    tree = _cache_tree(rng)
+    axes = cache_slot_axes(_specs())
+    placement = _place(tree, v=0.88, ecc=False)
+    traces = []
+
+    @jax.jit
+    def step(c, pos, v):
+        traces.append(1)
+        out, _ = engine.inject_placement_slice(
+            c, placement, FMAP, slot_axes=axes, pos=pos, voltage=v,
+            method="word")
+        return out
+
+    for i, v in enumerate((0.90, 0.89, 0.88)):
+        out = step(tree, jnp.int32(10 + i), jnp.float32(v))
+        eager, _ = engine.inject_placement_slice(
+            tree, placement, FMAP, slot_axes=axes, pos=jnp.int32(10 + i),
+            voltage=v, method="word")
+        for n in tree:
+            np.testing.assert_array_equal(_bits(out[n]), _bits(eager[n]))
+    assert len(traces) == 1
+
+
+def test_slotless_and_unaligned_leaves_fall_back_to_full():
+    """Leaves without a slot axis (recurrent states) or whose slots are
+    not word-aligned are corrupted whole -- still bit-identical to the
+    arena engine."""
+    rng = np.random.RandomState(5)
+    tree = {"state": jnp.asarray(rng.randn(B, 40), jnp.float32),
+            "odd": jnp.asarray(rng.randn(B, 7, 3), jnp.bfloat16)}
+    axes = {"state": -1, "odd": 1}      # odd: 3 bf16 inner = 6 bytes
+    placement = _place(tree, v=0.87, ecc=False)
+    inc, _ = engine.inject_placement_slice(
+        tree, placement, FMAP, slot_axes=axes, pos=jnp.int32(3),
+        voltage=0.87, method="word")
+    ref, _ = injection.inject_group(tree, placement, FMAP, voltage=0.87,
+                                    method="word")
+    for n in tree:
+        np.testing.assert_array_equal(_bits(inc[n]), _bits(ref[n]))
+
+
+def test_select_block_tables_matches_gather():
+    """The kernel-side candidate-select addressing equals the oracle's
+    jnp.take gather for tiles at arbitrary (unaligned) word offsets."""
+    rng = np.random.RandomState(6)
+    # 40000 f32 words = 10 arena blocks straddling 3 tiny PCs, so the
+    # gathered threshold rows actually vary across the tile.
+    tree = {"k": jnp.asarray(rng.randn(40000), jnp.float32)}
+    placement = _place(tree, v=0.90, ecc=False)
+    (bb, bp), = engine.leaf_block_tables(placement)
+    assert len(set(np.asarray(bp))) >= 2
+    table = FMAP.threshold_table(0.90)
+    thr = table[jnp.asarray(bp)]
+    nb = bb.shape[0]
+    words = 3 * 4096 + 123
+    for start in (0, 1, 4095, 4096 + 17):
+        off = np.uint32(start) + jnp.arange(words, dtype=jnp.uint32)
+        j0 = jnp.int32(start // 4096)
+        n_cand = -(-words // 4096) + 1
+        wid_s, thr_s = faulty.select_block_tables(
+            off, jnp.asarray(bb), thr, j0=j0, n_cand=n_cand,
+            num_blocks=nb)
+        jvec = np.asarray(off) >> 12
+        wid_g = jnp.asarray(bb)[jvec] + (np.asarray(off) & 4095)
+        np.testing.assert_array_equal(np.asarray(wid_s),
+                                      np.asarray(wid_g))
+        for c in range(thr.shape[1]):
+            np.testing.assert_array_equal(np.asarray(thr_s[c]),
+                                          np.asarray(thr[jvec, c]))

@@ -1,0 +1,193 @@
+"""Scanned serving decode: token-for-token equality across injection
+modes and drivers, zero-recompile voltage sweeps, the fused-launch
+budget, and cache-buffer donation.
+
+The equality matrix is the acceptance contract of the read-path
+refactor: the scanned decode (read-path fused kernel + incremental
+write-path) must reproduce the legacy per-token full-cache re-inject
+loop exactly -- greedy and sampled, with and without ECC, at any
+constant voltage -- because stuck-at faults are deterministic,
+idempotent properties of physical words.
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as arena
+from repro.core.domains import MemoryDomain
+from repro.core.hbm import VCU128
+from repro.models.base import get_arch
+from repro.models.cache import init_cache
+from repro.serving.engine import ServeConfig, build_decode_engine, generate
+from repro.training import trainer
+from repro.training.undervolt import UndervoltPlan
+
+BUNDLE = get_arch("llama3.2-3b")
+CFG = BUNDLE.reduced
+PARAMS = trainer.init_state(BUNDLE, CFG, jax.random.PRNGKey(0))["params"]
+BATCH = {"tokens": jax.random.randint(jax.random.PRNGKey(5), (2, 12),
+                                      0, CFG.vocab)}
+ALL_PCS = tuple(range(VCU128.num_pcs))
+
+
+def _plan(v, ecc=False):
+    return UndervoltPlan(
+        domains={"kv": MemoryDomain("kv", v, ALL_PCS, ecc=ecc)},
+        policy={"kv_cache": "kv"}, geometry=VCU128)
+
+
+def _gen(sc, key=3):
+    return np.asarray(generate(BUNDLE, CFG, PARAMS, BATCH, sc,
+                               key=jax.random.PRNGKey(key)))
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_scan_matches_loop_clean(temperature):
+    a = _gen(ServeConfig(max_len=40, max_new_tokens=8,
+                         temperature=temperature))
+    b = _gen(ServeConfig(max_len=40, max_new_tokens=8,
+                         temperature=temperature, decode="loop"))
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("ecc", [False, True])
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_injection_modes_token_identical(ecc, temperature):
+    """read-path fused == incremental write-path == full re-inject,
+    scanned and python-loop, deep in the collapse regime."""
+    plan = _plan(0.86, ecc)
+    outs = {}
+    for mode, dec in (("read", "scan"), ("write", "scan"),
+                      ("rewrite", "scan"), ("rewrite", "loop")):
+        outs[(mode, dec)] = _gen(ServeConfig(
+            max_len=40, max_new_tokens=8, temperature=temperature,
+            undervolt=plan, decode=dec, kv_injection=mode,
+            kv_method="bitwise"))
+    ref = outs[("rewrite", "loop")]
+    for k, v in outs.items():
+        np.testing.assert_array_equal(ref, v, err_msg=str(k))
+    clean = _gen(ServeConfig(max_len=40, max_new_tokens=8,
+                             temperature=temperature))
+    assert (ref != clean).any()   # the undervolted cache really faults
+
+
+def test_traced_kv_voltage_sweep_compiles_once():
+    """A jitted 5-point KV-voltage sweep over the scanned decode traces
+    exactly once, and each traced point matches the eager run at the
+    same concrete voltage."""
+    plan = _plan(0.86)
+    traces = []
+
+    def gen(v):
+        traces.append(1)
+        sc = ServeConfig(max_len=40, max_new_tokens=6, undervolt=plan,
+                         kv_voltage=v, kv_method="bitwise")
+        return generate(BUNDLE, CFG, PARAMS, BATCH, sc,
+                        key=jax.random.PRNGKey(3))
+
+    jg = jax.jit(gen)
+    sweep = (0.93, 0.91, 0.89, 0.87, 0.86)
+    outs = {v: np.asarray(jg(jnp.float32(v))) for v in sweep}
+    assert len(traces) == 1, f"sweep retraced {len(traces)} times"
+    assert (outs[0.93] != outs[0.86]).any()
+    for v in (0.93, 0.86):
+        eager = _gen(ServeConfig(max_len=40, max_new_tokens=6,
+                                 undervolt=plan, kv_voltage=v,
+                                 kv_method="bitwise"))
+        np.testing.assert_array_equal(outs[v], eager)
+
+
+def test_auto_method_with_traced_kv_voltage_raises():
+    plan = _plan(0.89)
+
+    def gen(v):
+        sc = ServeConfig(max_len=16, max_new_tokens=1, undervolt=plan,
+                         kv_voltage=v)
+        return generate(BUNDLE, CFG, PARAMS,
+                        {"tokens": jnp.zeros((1, 4), jnp.int32)}, sc)
+
+    with pytest.raises(ValueError, match="kv_method='auto'"):
+        jax.jit(gen)(jnp.float32(0.98))
+    # concrete voltages keep working through 'auto'
+    assert gen(jnp.float32(0.98)).shape == (1, 1)
+
+
+def test_read_mode_requires_family_support(monkeypatch):
+    from repro.models import dense
+    monkeypatch.setattr(dense, "SUPPORTS_READ_PATH", False)
+    sc = ServeConfig(max_len=32, max_new_tokens=2, undervolt=_plan(0.88),
+                     kv_injection="read")
+    with pytest.raises(ValueError, match="read-path"):
+        build_decode_engine(BUNDLE, CFG, sc, 1, 4, static_voltage=0.88)
+    # 'auto' falls back to the incremental write path
+    eng = build_decode_engine(
+        BUNDLE, CFG, ServeConfig(max_len=32, max_new_tokens=2,
+                                 undervolt=_plan(0.88)),
+        1, 4, static_voltage=0.88)
+    assert eng.mode == "write" and not eng.use_fused
+
+
+def _engine_and_args(max_len, mode="auto", v=0.88):
+    sc = ServeConfig(max_len=max_len, max_new_tokens=6,
+                     undervolt=_plan(v), kv_injection=mode)
+    b, s = 2, 8
+    eng = build_decode_engine(BUNDLE, CFG, sc, b, s, static_voltage=v)
+    cache = init_cache(BUNDLE.module.cache_specs(CFG, b, max_len))
+    args = (PARAMS, cache, jnp.zeros((b, 1), jnp.int32),
+            jax.random.PRNGKey(0), jnp.float32(v))
+    return eng, args
+
+
+def test_pallas_launch_budget_flat_in_sequence_length():
+    """The decode step's kernel-launch count must not grow with the
+    cache length: read-path fusion folds injection into the attention
+    launch (1 fused launch inside the layer scan), and the write modes
+    pay only the one-time post-prefill arena pass."""
+    counts = {}
+    for max_len in (256, 512):
+        for mode in ("read", "write"):
+            eng, args = _engine_and_args(max_len, mode)
+            jaxpr = jax.make_jaxpr(lambda *a: eng.decode_all(*a))(*args)
+            counts[(mode, max_len)] = arena.count_pallas_calls(jaxpr.jaxpr)
+    # fused attention inside the (length-independent) layer scan
+    assert counts[("read", 256)] == counts[("read", 512)] == 1
+    # + the single post-prefill arena pass
+    assert counts[("write", 256)] == counts[("write", 512)] == 2
+
+
+def test_decode_donates_and_reuses_cache_buffers():
+    """donate_argnums satellite: the cache crosses the decode jit
+    boundary aliased, not copied -- the compiled module aliases every
+    cache leaf input to an output, the entry computation contains no
+    copy of a cache-shaped parameter, and the donated input buffers are
+    actually consumed at run time."""
+    eng, args = _engine_and_args(64, "read")
+    params, cache, tok0, key, v = args
+    compiled = eng.decode_all.lower(*args).compile()
+    text = compiled.as_text()
+    assert "input_output_alias" in text
+
+    leaf_shapes = set()
+    dt_names = {np.dtype(jnp.bfloat16): "bf16", np.dtype(jnp.int32): "s32",
+                np.dtype(jnp.float32): "f32"}
+    for leaf in jax.tree_util.tree_leaves(cache):
+        leaf_shapes.add(
+            f"{dt_names[np.dtype(leaf.dtype)]}"
+            f"[{','.join(map(str, leaf.shape))}]")
+    entry = next(c for c in text.split("\n\n") if "ENTRY" in c)
+    for line in entry.splitlines():
+        if not re.search(r"= \S+ copy\(", line):
+            continue
+        if any(s in line for s in leaf_shapes):
+            # a cache-sized copy at the jit boundary is only legal if it
+            # copies generated data (e.g. a broadcast), never the cache
+            # parameter the caller donated
+            assert "param" not in line, f"cache parameter copied: {line}"
+
+    out = eng.decode_all(*args)
+    jax.block_until_ready(out)
+    assert all(leaf.is_deleted()
+               for leaf in jax.tree_util.tree_leaves(cache))
