@@ -26,6 +26,7 @@ so capacity planning for full-scale models never allocates memory.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import functools
 from typing import Dict, List, Optional, Tuple
@@ -251,6 +252,12 @@ class DomainAllocator:
     spares for later tolerance-insensitive allocations, so avoidance
     costs no capacity overall.
 
+    :meth:`free` returns blocks for recycling: freed blocks are kept in
+    reliability order and re-issued before the bump cursor advances, so
+    a free-then-realloc of the same footprint lands on the same
+    reliability-ordered blocks -- the invariant a long-lived serving
+    allocator (requests arriving and retiring forever) depends on.
+
     After a :class:`CapacityError` the allocator state is undefined; the
     placement that triggered it must be rebuilt from scratch.
     """
@@ -277,9 +284,12 @@ class DomainAllocator:
                 domain.pc_ids, key=lambda pc: rank[int(pc)]))
         else:
             self.pc_order = tuple(domain.pc_ids)
+        self._rank = {pc: i for i, pc in enumerate(self.pc_order)}
         self._total_blocks = len(self.pc_order) * self.blocks_per_pc
         self._cursor = 0                 # blocks handed past, in pc_order
         self._spares: List[Tuple[int, int]] = []   # skipped weak blocks
+        self._freed: List[Tuple[int, int, int]] = []  # (rank, blk, pc)
+        self._owned: set = set()         # (pc, blk) currently allocated
         self._free_blocks = self._total_blocks
         self._weak_cache: Dict[int, object] = {}
 
@@ -301,11 +311,25 @@ class DomainAllocator:
 
     def _take(self, n_blocks: int, avoid_weak_rows: bool):
         """The next ``n_blocks`` (pc, block) pairs under the avoidance
-        policy, plus the post-take cursor/spares -- or None if the domain
-        cannot supply them."""
+        policy, plus the post-take cursor/spares/freed state -- or None
+        if the domain cannot supply them.  Freed blocks (already in
+        reliability order) are recycled before the cursor advances."""
         cursor, spares = self._cursor, list(self._spares)
+        freed = list(self._freed)
         taken: List[Tuple[int, int]] = []
-        if not avoid_weak_rows:
+        if avoid_weak_rows:
+            i = 0
+            while i < len(freed) and len(taken) < n_blocks:
+                _, blk, pc = freed[i]
+                if self._is_weak(pc, blk):
+                    i += 1
+                    continue
+                taken.append((pc, blk))
+                freed.pop(i)
+        else:
+            while freed and len(taken) < n_blocks:
+                _, blk, pc = freed.pop(0)
+                taken.append((pc, blk))
             while spares and len(taken) < n_blocks:
                 taken.append(spares.pop(0))
         while len(taken) < n_blocks and cursor < self._total_blocks:
@@ -317,7 +341,7 @@ class DomainAllocator:
             taken.append((pc, blk))
         if len(taken) < n_blocks:
             return None
-        return taken, cursor, spares
+        return taken, cursor, spares, freed
 
     def peek_pcs(self, n_words: int,
                  avoid_weak_rows: bool = False) -> Optional[Tuple[int, ...]]:
@@ -339,7 +363,8 @@ class DomainAllocator:
                 note += "; weak-row-avoiding allocation"
             raise CapacityError(self.domain.name, n_blocks * ALIGN_WORDS * 4,
                                 self.free_words * 4, note)
-        taken, self._cursor, self._spares = got
+        taken, self._cursor, self._spares, self._freed = got
+        self._owned.update(taken)
         self._free_blocks -= n_blocks
         segments: List[Segment] = []
         for i, (pc, blk) in enumerate(taken):
@@ -355,6 +380,44 @@ class DomainAllocator:
                     leaf_start_word=i * ALIGN_WORDS, n_words=words, pc=pc,
                     phys_base_word=base))
         return tuple(segments)
+
+    def free(self, segments: Tuple[Segment, ...]) -> None:
+        """Return the blocks backing ``segments`` to the allocator.
+
+        Blocks must have been handed out by :meth:`alloc` and not freed
+        since; anything else (double-free, a foreign segment, a block
+        outside this domain) raises a ``ValueError`` before any state
+        changes.  Freed blocks go back into the reliability-ordered
+        recycling list, so reallocating the same footprint reproduces
+        the same physical blocks in the same order.
+        """
+        blocks: List[Tuple[int, int]] = []
+        for seg in segments:
+            if seg.pc not in self._rank:
+                raise ValueError(
+                    f"segment pc {seg.pc} not in domain "
+                    f"{self.domain.name!r} (PCs {sorted(self._rank)})")
+            rel = seg.phys_base_word - seg.pc * self.words_per_pc
+            if rel % ALIGN_WORDS or not (
+                    0 <= rel < self.words_per_pc):
+                raise ValueError(
+                    f"segment base {seg.phys_base_word} is not a block "
+                    f"of pc {seg.pc} in domain {self.domain.name!r}")
+            blk0 = rel // ALIGN_WORDS
+            for b in range(blk0, blk0 + -(-seg.n_words // ALIGN_WORDS)):
+                blocks.append((seg.pc, b))
+        dup = sorted(set(b for b in blocks if b not in self._owned))
+        if len(set(blocks)) != len(blocks):
+            dup = sorted(set(b for b in blocks if blocks.count(b) > 1))
+        if dup:
+            raise ValueError(
+                f"double free in domain {self.domain.name!r}: "
+                f"(pc, block) {dup[:4]} not currently allocated "
+                "(freed twice, or never handed out by this allocator)")
+        for pc, blk in blocks:
+            self._owned.discard((pc, blk))
+            bisect.insort(self._freed, (self._rank[pc], blk, pc))
+            self._free_blocks += 1
 
 
 def _sorted_leaves(tree):

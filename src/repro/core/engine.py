@@ -226,8 +226,55 @@ def leaf_block_tables(placement: GroupPlacement):
                  for s, n, _ in table.leaf_blocks)
 
 
+def refine_tables(block_base, block_pc, page_words: int):
+    """Refine one leaf's arena block tables to page granularity.
+
+    ``page_words`` must divide BLOCK_WORDS, so every page sits inside
+    exactly one arena block and inherits that block's pseudo-channel
+    (threshold row); its physical base is the block's base plus the
+    page's offset inside the block.  The page tables are therefore a
+    pure index transform of the block tables -- the paged KV cache
+    costs zero extra placement bookkeeping.
+
+    Returns ``(page_base, page_pc)`` numpy arrays with
+    ``BLOCK_WORDS // page_words`` entries per block.
+    """
+    if page_words <= 0 or BLOCK_WORDS % page_words:
+        raise ValueError(
+            f"page_words={page_words} must positively divide the arena "
+            f"block size ({BLOCK_WORDS} words)")
+    per = BLOCK_WORDS // page_words
+    base = (np.repeat(np.asarray(block_base, np.uint32), per)
+            + np.tile(np.arange(per, dtype=np.uint32) * page_words,
+                      len(block_base)))
+    return base, np.repeat(np.asarray(block_pc, np.int32), per)
+
+
+def leaf_addr_tables(placement):
+    """Per-leaf ``(base, pc, words_log2)`` physical addressing tables.
+
+    For an arena-backed :class:`~repro.core.domains.GroupPlacement`
+    these are the block tables at BLOCK_WORDS granularity.  Placements
+    whose leaves carry their own page tables (the paged serving cache's
+    per-request placements, duck-typed on a ``page_base`` attribute)
+    return those instead, with each leaf's page granularity.
+    """
+    leaves = placement.leaves
+    if leaves and hasattr(leaves[0], "page_base"):
+        out = []
+        for lp in leaves:
+            lg2 = int(lp.page_words).bit_length() - 1
+            assert (1 << lg2) == lp.page_words, lp.page_words
+            out.append((np.asarray(lp.page_base, np.uint32),
+                        np.asarray(lp.page_pc, np.int32), lg2))
+        return tuple(out)
+    return tuple((bb, bp, BLOCK_WORDS_LOG2)
+                 for bb, bp in leaf_block_tables(placement))
+
+
 def corrupt_words(u32, off, block_base, block_thr, *, seed: int,
-                  method: str, words_per_row_log2: int, ecc: bool):
+                  method: str, words_per_row_log2: int, ecc: bool,
+                  words_log2: int = BLOCK_WORDS_LOG2):
     """Corrupt arbitrary leaf words through their arena block tables.
 
     The pure-jnp twin of the kernels' candidate-select addressing:
@@ -237,13 +284,15 @@ def corrupt_words(u32, off, block_base, block_thr, *, seed: int,
     rows (``block_thr``, possibly derived from a traced voltage), and
     the shared tile-level mask math is applied.  For ECC the last axis
     must hold leaf-adjacent words in even count (codeword pairs).
+    ``words_log2``: granularity of the tables (arena blocks by default,
+    pages for the paged serving cache).
 
     Returns (corrupted u32, uncorrectable count).
     """
     off = off.astype(jnp.uint32)
-    jvec = (off >> np.uint32(BLOCK_WORDS_LOG2)).astype(jnp.int32)
+    jvec = (off >> np.uint32(words_log2)).astype(jnp.int32)
     wid = (jnp.take(jnp.asarray(block_base), jvec)
-           + (off & np.uint32(BLOCK_WORDS - 1)))
+           + (off & np.uint32((1 << words_log2) - 1)))
     rows = jnp.take(jnp.asarray(block_thr), jvec, axis=0)
     thr = tuple(rows[..., c] for c in range(NUM_THR_COLS))
     if ecc:
@@ -257,7 +306,7 @@ def corrupt_words(u32, off, block_base, block_thr, *, seed: int,
 
 
 def _corrupt_full_leaf(leaf, block_base, block_thr, *, seed, method,
-                       wprl2, ecc):
+                       wprl2, ecc, words_log2=BLOCK_WORDS_LOG2):
     u32, meta = bitflip_ops.to_u32(leaf)
     n = u32.shape[0]
     pad = (-n) % 2 if ecc else 0
@@ -266,12 +315,13 @@ def _corrupt_full_leaf(leaf, block_base, block_thr, *, seed, method,
     off = jnp.arange(n + pad, dtype=jnp.uint32)
     out, bad = corrupt_words(u32, off, block_base, block_thr, seed=seed,
                              method=method, words_per_row_log2=wprl2,
-                             ecc=ecc)
+                             ecc=ecc, words_log2=words_log2)
     return bitflip_ops.from_u32(out[:n], meta), bad
 
 
 def _corrupt_leaf_slice(leaf, slot_axis, pos, block_base, block_thr, *,
-                        seed, method, wprl2, ecc):
+                        seed, method, wprl2, ecc,
+                        words_log2=BLOCK_WORDS_LOG2):
     """Corrupt only the slot written at absolute position ``pos``."""
     shape = leaf.shape
     ln = shape[slot_axis]
@@ -287,7 +337,7 @@ def _corrupt_leaf_slice(leaf, slot_axis, pos, block_base, block_thr, *,
            + jnp.arange(wpi, dtype=jnp.uint32)[None, :])
     out, bad = corrupt_words(u32, off, block_base, block_thr, seed=seed,
                              method=method, words_per_row_log2=wprl2,
-                             ecc=ecc)
+                             ecc=ecc, words_log2=words_log2)
     out = bitflip_ops.from_u32(out.reshape(-1), meta).reshape(sl.shape)
     return (jax.lax.dynamic_update_slice_in_dim(leaf, out, slot,
                                                 axis=slot_axis), bad)
@@ -339,9 +389,9 @@ def inject_placement_slice(tree, placement: GroupPlacement,
             faultmap, placement, voltage)
     wprl2 = faultmap.words_per_row_log2
     table = faultmap.threshold_table(voltage)
-    tables = {lp.path: (bb, table[jnp.asarray(bp)])
-              for lp, (bb, bp) in zip(placement.leaves,
-                                      leaf_block_tables(placement))}
+    tables = {lp.path: (bb, table[jnp.asarray(bp)], lg2)
+              for lp, (bb, bp, lg2) in zip(placement.leaves,
+                                           leaf_addr_tables(placement))}
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     if slot_axes is None:
@@ -357,9 +407,9 @@ def inject_placement_slice(tree, placement: GroupPlacement,
         if key in skip:
             out_leaves.append(leaf)
             continue
-        bb, bt = tables[key]
+        bb, bt, lg2 = tables[key]
         kw = dict(seed=faultmap.seed, method=method, wprl2=wprl2,
-                  ecc=domain.ecc)
+                  ecc=domain.ecc, words_log2=lg2)
         if pos is not None and _sliceable(leaf, axis, domain.ecc):
             faulted, bad = _corrupt_leaf_slice(leaf, axis, pos, bb, bt,
                                                **kw)

@@ -134,7 +134,8 @@ def apply_masks(x_u32, wid, thr_row, *, seed: int, method: str,
 
 
 def select_block_tables(off, base_ref, thr_ref, *, j0, n_cand: int,
-                        num_blocks: int):
+                        num_blocks: int,
+                        words_log2: int = BLOCK_WORDS_LOG2):
     """Physical word ids + per-word threshold columns for a tile of leaf
     word offsets ``off`` that may straddle several arena blocks.
 
@@ -146,12 +147,17 @@ def select_block_tables(off, base_ref, thr_ref, *, j0, n_cand: int,
     blocks it can span.  Works identically on SMEM refs inside a Pallas
     kernel and on plain jnp arrays (the oracle / incremental paths).
 
+    ``words_log2`` sets the table granularity: the default addresses
+    whole arena blocks; the paged serving cache passes its (smaller,
+    block-dividing) page size so the same candidate-select machinery
+    resolves per-*page* physical bases and threshold rows.
+
     Returns ``(wid, thr_cols)`` with ``wid`` the per-word physical ids
     and ``thr_cols`` a NUM_THR_COLS tuple of per-word uint32 arrays.
     """
     off = off.astype(jnp.uint32)
-    jvec = off >> np.uint32(BLOCK_WORDS_LOG2)
-    rem = off & np.uint32(BLOCK_WORDS - 1)
+    jvec = off >> np.uint32(words_log2)
+    rem = off & np.uint32((1 << words_log2) - 1)
     base = jnp.zeros_like(off)
     thr = [jnp.zeros_like(off) for _ in range(fm.NUM_THR_COLS)]
     j0 = j0.astype(jnp.int32) if hasattr(j0, "astype") else jnp.int32(j0)

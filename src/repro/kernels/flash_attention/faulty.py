@@ -107,14 +107,16 @@ def _tile_from_u32(u32, dtype, shape):
 def corrupt_kv_tile(x, word0, base_ref, thr_ref, *, num_blocks: int,
                     n_cand: int, seed: int, method: str,
                     words_per_row_log2: int, ecc: bool, slot_ids=None,
-                    clean_slot=None):
+                    clean_slot=None, words_log2: int = BLOCK_WORDS_LOG2):
     """Read-path corruption of one (rows, elems) K/V tile.
 
     ``word0`` (traced scalar): leaf word offset of the tile's first
     element; rows are leaf-contiguous.  ``base_ref``/``thr_ref``: the
     leaf's arena block tables (SMEM refs inside a kernel, arrays in the
-    oracle).  ``clean_slot``: optional traced slot index whose row keeps
-    its stored (store-buffer) value.
+    oracle) at ``words_log2`` granularity -- whole arena blocks by
+    default, single KV pages for a page-granular placement.
+    ``clean_slot``: optional traced slot index whose row keeps its
+    stored (store-buffer) value.
     """
     u = _tile_to_u32(x)
     word0 = word0.astype(jnp.uint32)
@@ -122,9 +124,10 @@ def corrupt_kv_tile(x, word0, base_ref, thr_ref, *, num_blocks: int,
            + jax.lax.broadcasted_iota(jnp.uint32, u.shape, 0)
            * np.uint32(u.shape[1])
            + jax.lax.broadcasted_iota(jnp.uint32, u.shape, 1))
-    j0 = (word0 >> np.uint32(BLOCK_WORDS_LOG2)).astype(jnp.int32)
+    j0 = (word0 >> np.uint32(words_log2)).astype(jnp.int32)
     wid, thr = select_block_tables(off, base_ref, thr_ref, j0=j0,
-                                   n_cand=n_cand, num_blocks=num_blocks)
+                                   n_cand=n_cand, num_blocks=num_blocks,
+                                   words_log2=words_log2)
     if ecc:
         assert u.shape[1] % 2 == 0, "ECC tiles need an even word count"
         out, _ = arena_ecc_codewords(u, wid, thr, seed=seed,
@@ -138,12 +141,52 @@ def corrupt_kv_tile(x, word0, base_ref, thr_ref, *, num_blocks: int,
     return _tile_from_u32(out, x.dtype, x.shape)
 
 
+def _flash_tile_update(q_ref, k_t, v_t, pos_t, q_pos, acc_ref, m_ref,
+                       l_ref, *, scale, causal, window, kh, g, d, bkv):
+    """One flash-decode accumulator update over a (bkv, KH, D) tile.
+
+    Shared op-for-op by the contiguous and the paged decode kernels, so
+    both emit bit-identical outputs on the same tile sequence -- the
+    contract that makes a paged serving cache token-equivalent to the
+    contiguous per-request cache.  Returns ``(acc, l_new)`` for the
+    caller's final normalization.
+    """
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # (H, D)
+    qr = q.reshape(kh, g, d)
+    kf = k_t.astype(jnp.float32)
+    vf = v_t.astype(jnp.float32)
+    # (KH, G, D) x (bkv, KH, D) -> (KH, G, bkv), KH batched
+    s = jax.lax.dot_general(qr, kf, (((2,), (2,)), ((0,), (1,))))
+
+    delta = q_pos - pos_t
+    mask = jnp.zeros((bkv,), jnp.float32)
+    if causal:
+        mask = jnp.where(delta < 0, NEG_INF, mask)
+    if window > 0:
+        mask = jnp.where(delta >= window, NEG_INF, mask)
+    mask = jnp.where(pos_t < 0, NEG_INF, mask)       # empty ring slots
+    s = s + mask[None, None, :]
+
+    m_prev = m_ref[...].reshape(kh, g)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    acc = acc_ref[...].reshape(kh, g, d) * corr[..., None]
+    # (KH, G, bkv) x (bkv, KH, D) -> (KH, G, D), KH batched
+    acc = acc + jax.lax.dot_general(p, vf, (((2,), (0,)), ((0,), (1,))))
+    l_new = l_ref[...].reshape(kh, g) * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc.reshape(acc_ref.shape)
+    m_ref[...] = m_new.reshape(m_ref.shape)
+    l_ref[...] = l_new.reshape(l_ref.shape)
+    return acc, l_new
+
+
 def _decode_kernel(kbase_ref, kthr_ref, vbase_ref, vthr_ref, offs_ref,
                    misc_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
                    acc_ref, m_ref, l_ref, *, scale, causal, window, bkv,
                    kh, g, d, seed, method, words_per_row_log2, ecc,
                    inject, k_wps, v_wps, k_cand, v_cand, k_blocks,
-                   v_blocks, length):
+                   v_blocks, length, words_log2):
     b = pl.program_id(0)
     ki = pl.program_id(1)
     nkv = pl.num_programs(1)
@@ -171,42 +214,20 @@ def _decode_kernel(kbase_ref, kthr_ref, vbase_ref, vthr_ref, offs_ref,
             kbase_ref, kthr_ref, num_blocks=k_blocks, n_cand=k_cand,
             seed=seed, method=method, words_per_row_log2=words_per_row_log2,
             ecc=ecc, slot_ids=slot_ids, clean_slot=clean,
+            words_log2=words_log2,
         ).reshape(bkv, kh, d)
         v_t = corrupt_kv_tile(
             v_t.reshape(bkv, kh * d), offs_ref[1] + slot0 * np.uint32(v_wps),
             vbase_ref, vthr_ref, num_blocks=v_blocks, n_cand=v_cand,
             seed=seed, method=method, words_per_row_log2=words_per_row_log2,
             ecc=ecc, slot_ids=slot_ids, clean_slot=clean,
+            words_log2=words_log2,
         ).reshape(bkv, kh, d)
 
-    q = q_ref[0, 0].astype(jnp.float32) * scale      # (H, D)
-    qr = q.reshape(kh, g, d)
-    kf = k_t.astype(jnp.float32)
-    vf = v_t.astype(jnp.float32)
-    # (KH, G, D) x (bkv, KH, D) -> (KH, G, bkv), KH batched
-    s = jax.lax.dot_general(qr, kf, (((2,), (2,)), ((0,), (1,))))
-
-    q_pos = misc_ref[1]
-    delta = q_pos - pos_t
-    mask = jnp.zeros((bkv,), jnp.float32)
-    if causal:
-        mask = jnp.where(delta < 0, NEG_INF, mask)
-    if window > 0:
-        mask = jnp.where(delta >= window, NEG_INF, mask)
-    mask = jnp.where(pos_t < 0, NEG_INF, mask)       # empty ring slots
-    s = s + mask[None, None, :]
-
-    m_prev = m_ref[...].reshape(kh, g)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-    p = jnp.exp(s - m_new[..., None])
-    corr = jnp.exp(m_prev - m_new)
-    acc = acc_ref[...].reshape(kh, g, d) * corr[..., None]
-    # (KH, G, bkv) x (bkv, KH, D) -> (KH, G, D), KH batched
-    acc = acc + jax.lax.dot_general(p, vf, (((2,), (0,)), ((0,), (1,))))
-    l_new = l_ref[...].reshape(kh, g) * corr + jnp.sum(p, axis=-1)
-    acc_ref[...] = acc.reshape(acc_ref.shape)
-    m_ref[...] = m_new.reshape(m_ref.shape)
-    l_ref[...] = l_new.reshape(l_ref.shape)
+    acc, l_new = _flash_tile_update(
+        q_ref, k_t, v_t, pos_t, misc_ref[1], acc_ref, m_ref, l_ref,
+        scale=scale, causal=causal, window=window, kh=kh, g=g, d=d,
+        bkv=bkv)
 
     @pl.when(ki == nkv - 1)
     def _finish():
@@ -219,7 +240,8 @@ def faulty_decode_attention(q, k, v, pos, *, q_pos, k_tables, v_tables,
                             window: int = 0, scale=None, seed: int,
                             method: str, words_per_row_log2: int,
                             ecc: bool, inject: bool, clean_slot=None,
-                            bkv=None, interpret=None):
+                            bkv=None, interpret=None,
+                            words_log2: int = BLOCK_WORDS_LOG2):
     """Decode attention over a ring cache with read-path injection.
 
     q: (B, 1, H, D) -- the decode token's query in model layout.
@@ -228,8 +250,10 @@ def faulty_decode_attention(q, k, v, pos, *, q_pos, k_tables, v_tables,
     q_pos: traced scalar, the decode token's absolute position.
     k_tables / v_tables: (block_base, block_thr) arena tables for the
     cache leaf (thresholds already gathered at the current, possibly
-    traced, voltage).  k_word0 / v_word0: traced word offset of this
-    (B, L, KH, D) slice within its leaf (stacked-layer leaves).
+    traced, voltage), at ``words_log2`` granularity -- arena blocks by
+    default, single KV pages when the request's cache is physically
+    paged.  k_word0 / v_word0: traced word offset of this (B, L, KH, D)
+    slice within its leaf (stacked-layer leaves).
     clean_slot: traced slot index exempt from corruption (the slot the
     current token was just written to), or None.
 
@@ -252,8 +276,9 @@ def faulty_decode_attention(q, k, v, pos, *, q_pos, k_tables, v_tables,
 
     k_base, k_thr = k_tables
     v_base, v_thr = v_tables
-    k_cand = -(-bkv * k_wps // BLOCK_WORDS) + 1
-    v_cand = -(-bkv * v_wps // BLOCK_WORDS) + 1
+    gran = 1 << words_log2
+    k_cand = -(-bkv * k_wps // gran) + 1
+    v_cand = -(-bkv * v_wps // gran) + 1
     offs = jnp.stack([jnp.asarray(k_word0), jnp.asarray(v_word0)]
                      ).astype(jnp.uint32)
     clean = jnp.int32(-1) if clean_slot is None else clean_slot
@@ -266,7 +291,7 @@ def faulty_decode_attention(q, k, v, pos, *, q_pos, k_tables, v_tables,
         words_per_row_log2=words_per_row_log2, ecc=ecc, inject=inject,
         k_wps=k_wps, v_wps=v_wps, k_cand=k_cand, v_cand=v_cand,
         k_blocks=int(k_base.shape[0]), v_blocks=int(v_base.shape[0]),
-        length=length)
+        length=length, words_log2=words_log2)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=6,
         grid=(b, nkv),
@@ -292,3 +317,161 @@ def faulty_decode_attention(q, k, v, pos, *, q_pos, k_tables, v_tables,
         grid_spec=grid_spec,
         interpret=bool(interpret),
     )(k_base, k_thr, v_base, v_thr, offs, misc, q, k, v, pos)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: batched decode over a page-pool cache
+# ---------------------------------------------------------------------------
+
+
+def corrupt_page_tile(x, base, thr_row, *, seed: int, method: str,
+                      words_per_row_log2: int, ecc: bool, slot_ids=None,
+                      clean_slot=None):
+    """Read-path corruption of one (rows, elems) K/V tile that is a
+    single physical page: every word shares one threshold row and the
+    physical ids are ``base`` plus the word's offset inside the page.
+
+    Same mask math as :func:`corrupt_kv_tile` (which resolves the same
+    base/row through the candidate selects), so a paged tile corrupts
+    bit-identically to the contiguous kernel reading the same physical
+    words.
+    """
+    u = _tile_to_u32(x)
+    wid = (jnp.asarray(base, jnp.uint32)
+           + jax.lax.broadcasted_iota(jnp.uint32, u.shape, 0)
+           * np.uint32(u.shape[1])
+           + jax.lax.broadcasted_iota(jnp.uint32, u.shape, 1))
+    if ecc:
+        assert u.shape[1] % 2 == 0, "ECC tiles need an even word count"
+        out, _ = arena_ecc_codewords(u, wid, thr_row, seed=seed,
+                                     words_per_row_log2=words_per_row_log2)
+    else:
+        out = apply_masks(u, wid, thr_row, seed=seed, method=method,
+                          words_per_row_log2=words_per_row_log2)
+    if clean_slot is not None:
+        keep = (slot_ids == clean_slot)[:, None]
+        out = jnp.where(keep, u, out)
+    return _tile_from_u32(out, x.dtype, x.shape)
+
+
+def _paged_kernel(ptab_ref, qpos_ref, kbase_ref, kthr_ref, vbase_ref,
+                  vthr_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale, causal, window, ps,
+                  kh, g, d, seed, method, words_per_row_log2, ecc,
+                  inject, length):
+    si = pl.program_id(0)
+    pi = pl.program_id(1)
+    npg = pl.num_programs(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k_t = k_ref[0]                       # (ps, KH, D): one physical page
+    v_t = v_ref[0]
+    pos_t = pos_ref[0]                   # (ps,) int32, may carry faults
+    q_pos = qpos_ref[si]
+
+    if inject:
+        pid = ptab_ref[si, pi]
+        # The freshly written slot never round-tripped through
+        # undervolted HBM this step (store-buffer exemption).
+        clean = q_pos % length
+        slot_ids = (pi * ps
+                    + jax.lax.broadcasted_iota(jnp.int32, (ps,), 0))
+        k_thr = tuple(kthr_ref[pid, c] for c in range(fm.NUM_THR_COLS))
+        v_thr = tuple(vthr_ref[pid, c] for c in range(fm.NUM_THR_COLS))
+        k_t = corrupt_page_tile(
+            k_t.reshape(ps, kh * d), kbase_ref[pid], k_thr, seed=seed,
+            method=method, words_per_row_log2=words_per_row_log2, ecc=ecc,
+            slot_ids=slot_ids, clean_slot=clean).reshape(ps, kh, d)
+        v_t = corrupt_page_tile(
+            v_t.reshape(ps, kh * d), vbase_ref[pid], v_thr, seed=seed,
+            method=method, words_per_row_log2=words_per_row_log2, ecc=ecc,
+            slot_ids=slot_ids, clean_slot=clean).reshape(ps, kh, d)
+
+    acc, l_new = _flash_tile_update(
+        q_ref, k_t, v_t, pos_t, q_pos, acc_ref, m_ref, l_ref,
+        scale=scale, causal=causal, window=window, kh=kh, g=g, d=d,
+        bkv=ps)
+
+    @pl.when(pi == npg - 1)
+    def _finish():
+        out = acc / jnp.maximum(l_new[..., None], 1e-30)
+        o_ref[0, 0] = out.reshape(kh * g, d).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pool, v_pool, pos_pool, page_table, *,
+                           q_pos, k_tables, v_tables, causal: bool = True,
+                           window: int = 0, scale=None, seed: int,
+                           method: str, words_per_row_log2: int,
+                           ecc: bool, inject: bool, interpret=None):
+    """Batched decode attention over a *paged* ring cache.
+
+    The continuous-batching scheduler's kernel: every serving slot
+    attends over its own logical ring cache whose tiles live in pool
+    pages.  Page tables arrive as scalar-prefetch operands and drive
+    the BlockSpec index maps, so K/V tiles are gathered page-by-page
+    straight from the pool buffer -- and corrupted in VMEM as they
+    load, addressed by the page's physical base word and threshold row
+    (one dynamic-scalar SMEM read each; a page never straddles arena
+    blocks, so no candidate selects are needed at all).
+
+    q: (S, 1, H, D) -- one decode query per serving slot.
+    k_pool, v_pool: (num_pages, PS, KH, D) -- this layer's page pool.
+    pos_pool: (num_pages, PS) int32 -- paged absolute positions.
+    page_table: (S, n_lp) int32 -- physical page of each slot's
+    logical page (inactive slots point at the pool's scratch page).
+    q_pos: (S,) int32 -- per-slot absolute decode position.
+    k_tables / v_tables: (page_base, page_thr) for this layer's leaf
+    slice, thresholds gathered at the current (possibly traced)
+    voltage.
+
+    Returns (S, 1, H, D) in v.dtype.
+    """
+    s, sq, h, d = q.shape
+    n, ps, kh, _ = k_pool.shape
+    assert sq == 1, "paged kernel is decode-specialized (S == 1)"
+    n_lp = page_table.shape[1]
+    length = n_lp * ps
+    g = h // kh
+    scale = float(d ** -0.5 if scale is None else scale)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    k_base, k_thr = k_tables
+    v_base, v_thr = v_tables
+    body = functools.partial(
+        _paged_kernel, scale=scale, causal=causal, window=window, ps=ps,
+        kh=kh, g=g, d=d, seed=seed, method=method,
+        words_per_row_log2=words_per_row_log2, ecc=ecc, inject=inject,
+        length=length)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(s, n_lp),
+        in_specs=[
+            pl.BlockSpec((1, 1, h, d), lambda s_, p_, *_: (s_, 0, 0, 0)),
+            pl.BlockSpec((1, ps, kh, d),
+                         lambda s_, p_, ptab, *_: (ptab[s_, p_], 0, 0, 0)),
+            pl.BlockSpec((1, ps, kh, d),
+                         lambda s_, p_, ptab, *_: (ptab[s_, p_], 0, 0, 0)),
+            pl.BlockSpec((1, ps),
+                         lambda s_, p_, ptab, *_: (ptab[s_, p_], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, h, d),
+                               lambda s_, p_, *_: (s_, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, d), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct((s, 1, h, d), v_pool.dtype),
+        grid_spec=grid_spec,
+        interpret=bool(interpret),
+    )(page_table, jnp.asarray(q_pos, jnp.int32), k_base, k_thr,
+      v_base, v_thr, q, k_pool, v_pool, pos_pool)

@@ -62,3 +62,31 @@ def ring_update(cache: Dict[str, jax.Array], new: Dict[str, jax.Array],
         cache["pos"],
         jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32), (0, slot))
     return out
+
+
+def paged_update(cache: Dict[str, jax.Array], new: Dict[str, jax.Array],
+                 pos: jax.Array, page_table: jax.Array, length: int,
+                 page_slots: int) -> Dict[str, jax.Array]:
+    """Paged twin of :func:`ring_update`: one decode token per serving
+    slot, scattered into a shared page pool.
+
+    ``cache`` holds pool buffers with the *page* axis at dim 0 and the
+    within-page slot axis at dim 1 (``pos``: (num_pages, page_slots);
+    values: (num_pages, page_slots, ...)).  ``new`` entries are
+    (S, 1, ...) per-slot tokens, ``pos`` is the (S,) or (S, 1) absolute
+    position per serving slot, and ``page_table`` (S, length//page_slots)
+    maps each slot's logical ring page to its physical pool page.  Slot
+    for position p is p % length, exactly like the contiguous ring --
+    inactive serving slots' page-table rows point at the pool's scratch
+    page, so their writes land in the sink.
+    """
+    qp = jnp.reshape(pos, (-1,)).astype(jnp.int32)
+    slot = qp % length
+    lp = slot // page_slots
+    row = slot % page_slots
+    pid = jnp.take_along_axis(page_table, lp[:, None], axis=1)[:, 0]
+    out = {}
+    for k, arr in new.items():
+        out[k] = cache[k].at[pid, row].set(arr[:, 0])
+    out["pos"] = cache["pos"].at[pid, row].set(qp)
+    return out

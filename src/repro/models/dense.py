@@ -113,12 +113,19 @@ def attn_mlp_apply(cfg: ArchConfig, kind: str, p, x, cache,
                           k_positions=positions, causal=causal,
                           window=window)
     else:  # decode: S == 1
-        new_cache = C.ring_update(cache, {"k": k, "v": v}, pos)
-        if (fault_ctx is not None and slot_ref is not None
-                and fault_ctx.covers(slot_ref[0])):
+        covered = (fault_ctx is not None and slot_ref is not None
+                   and fault_ctx.covers(slot_ref[0]))
+        if covered:
+            # The ctx owns both the ring write for its cache layout
+            # (contiguous ring_update, or the paged pool scatter) and
+            # the fused attention over it; under the paged scheduler
+            # ``pos`` is the per-serving-slot position vector.
+            new_cache = fault_ctx.update(slot_ref[0], cache,
+                                         {"k": k, "v": v}, pos)
             out = fault_ctx.attend(slot_ref[0], slot_ref[1], q, new_cache,
                                    q_pos=pos, causal=causal, window=window)
         else:
+            new_cache = C.ring_update(cache, {"k": k, "v": v}, pos)
             valid = new_cache["pos"] >= 0
             out = L.attention(q, new_cache["k"], new_cache["v"],
                               q_positions=positions,
@@ -222,3 +229,7 @@ def decode_step(params, cache, batch, pos, cfg: ArchConfig, dist=None,
 # The serving engine's fused read-path injection understands this
 # family's cache layout (ring k/v/pos leaves, slot axis "cache_seq").
 SUPPORTS_READ_PATH = True
+# The continuous-batching scheduler can page this family's cache: the
+# decode step threads a paged ctx through attn_mlp_apply (per-slot
+# position vectors, pool-page ring writes, batched paged attention).
+SUPPORTS_PAGED = True

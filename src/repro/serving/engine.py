@@ -42,6 +42,7 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import engine as arena
 from repro.core.engine import _static_value, resolve_method
@@ -99,6 +100,20 @@ def _static_kv_voltage(v):
     return _static_value(v)
 
 
+def sample_tokens(logits, key, temperature: float):
+    """Greedy / temperature sampling over (B, vocab) logits.
+
+    The single sampling implementation shared by the one-shot engine
+    and the continuous-batching scheduler: the scheduler's token-
+    equivalence contract (scheduler slot == standalone request, bit for
+    bit) depends on both using exactly these ops in this order.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(
+        jnp.int32)
+
+
 @dataclasses.dataclass
 class DecodeEngine:
     """Everything static about one request shape's decode phase, plus
@@ -120,7 +135,8 @@ class DecodeEngine:
 def build_decode_engine(bundle: ArchBundle, cfg: ArchConfig,
                         sc: ServeConfig, batch_size: int, prompt_len: int,
                         dist: Optional[DistContext] = None,
-                        static_voltage=None) -> DecodeEngine:
+                        static_voltage=None,
+                        kv_placement=None) -> DecodeEngine:
     """Construct the decode-phase closures for one request shape.
 
     ``static_voltage``: the concrete effective KV voltage if known
@@ -128,13 +144,48 @@ def build_decode_engine(bundle: ArchBundle, cfg: ArchConfig,
     injection is then assumed live and method must already be
     concrete).  Used by :func:`generate` and directly by benchmarks /
     structural tests that lower ``decode_all`` without running prefill.
+
+    ``kv_placement``: explicit physical placement of this request's
+    cache, overriding the plan's own allocation -- in particular a
+    page-granular :class:`repro.serving.paged.RequestPlacement`, which
+    is how a scheduler request is replayed standalone on identical
+    physical words (the token-equivalence contract).
     """
     module = bundle.module
-    kvp, cache_avals = _kv_placement(bundle, cfg, batch_size, sc)
+    if kv_placement is not None:
+        if sc.undervolt is None or not sc.undervolt.enabled:
+            raise ValueError(
+                "kv_placement override needs sc.undervolt (its fault "
+                "map supplies the placement's threshold tables)")
+        kvp = kv_placement
+        cache_avals = spec_avals(
+            module.cache_specs(cfg, batch_size, sc.max_len))
+        flat, _ = jax.tree_util.tree_flatten_with_path(cache_avals)
+        words = {jax.tree_util.keystr(p):
+                 int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize // 4
+                 for p, a in flat}
+        for lp in kvp.leaves:
+            if words.get(lp.path) != lp.n_words:
+                raise ValueError(
+                    f"kv_placement does not fit this request's cache: "
+                    f"leaf {lp.path} places {lp.n_words} words but the "
+                    f"(batch={batch_size}, max_len={sc.max_len}) cache "
+                    f"holds {words.get(lp.path)} -- placements exported "
+                    "by the paged pool describe a single request "
+                    "(batch 1) at the pool's max_len")
+    else:
+        kvp, cache_avals = _kv_placement(bundle, cfg, batch_size, sc)
     fmap = sc.undervolt.fault_map() if kvp is not None else None
+    paged_kvp = (kvp is not None and len(kvp.leaves) > 0
+                 and hasattr(kvp.leaves[0], "page_base"))
 
     if sc.kv_injection not in ("auto", "read", "write", "rewrite"):
         raise ValueError(f"unknown kv_injection {sc.kv_injection!r}")
+    if paged_kvp and sc.kv_injection == "rewrite":
+        raise ValueError(
+            "kv_injection='rewrite' (the legacy full-cache segment "
+            "walker) cannot address a page-granular placement; use "
+            "'read' (fused) or 'write' (incremental) with paged caches")
     sv = static_voltage
     active = kvp is not None and not (sv is not None
                                       and sv >= V_MIN - 1e-9)
@@ -186,6 +237,13 @@ def build_decode_engine(bundle: ArchBundle, cfg: ArchConfig,
                 c, kvp, fmap, voltage=v, method=method,
                 skip_paths=readpath.kv_paths(kvp))
             return c
+        if paged_kvp:
+            # whole-tree write-path injection through the page tables
+            # (bit-identical to the legacy segment walker, which cannot
+            # address sub-block pages)
+            c, _ = arena.inject_placement_slice(
+                c, kvp, fmap, voltage=v, method=method)
+            return c
         from repro.core.injection import inject_group
         c, _ = inject_group(c, kvp, fmap, voltage=v, method=method)
         return c
@@ -217,10 +275,7 @@ def build_decode_engine(bundle: ArchBundle, cfg: ArchConfig,
         return step_with_ctx(p, c, tok, pos, v, make_ctx(v))
 
     def sample(lg, k):
-        if sc.temperature <= 0.0:
-            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(k, lg / sc.temperature).astype(
-            jnp.int32)
+        return sample_tokens(lg, k, sc.temperature)
 
     @functools.partial(jax.jit, donate_argnums=(1,))
     def decode_all(p, c, tok, k, v):
@@ -250,11 +305,22 @@ def build_decode_engine(bundle: ArchBundle, cfg: ArchConfig,
 
 def generate(bundle: ArchBundle, cfg: ArchConfig, params, batch: Dict,
              sc: ServeConfig, dist: Optional[DistContext] = None,
-             key=None) -> jnp.ndarray:
-    """Prefill on batch['tokens'] then decode max_new_tokens greedily."""
+             key=None, kv_placement=None) -> jnp.ndarray:
+    """Prefill on batch['tokens'] then decode max_new_tokens greedily.
+
+    ``kv_placement`` overrides the plan's own cache allocation with an
+    explicit physical placement (see :func:`build_decode_engine`)."""
     tokens = batch["tokens"]
     b, s = tokens.shape
-    placement, _ = _kv_placement(bundle, cfg, b, sc)
+    if kv_placement is not None:
+        if sc.governor is not None:
+            raise ValueError(
+                "kv_placement and ServeConfig.governor are mutually "
+                "exclusive: the placement is already decided, so there "
+                "is no admission to govern")
+        placement = kv_placement
+    else:
+        placement, _ = _kv_placement(bundle, cfg, b, sc)
     module = bundle.module
     if sc.decode not in ("scan", "loop"):
         raise ValueError(f"unknown decode driver {sc.decode!r}")
@@ -302,7 +368,8 @@ def generate(bundle: ArchBundle, cfg: ArchConfig, params, batch: Dict,
         bundle, cfg, dataclasses.replace(sc, kv_voltage=None,
                                          governor=None),
         b, s, dist,
-        static_voltage=(sv if eff_v is not None else V_MIN))
+        static_voltage=(sv if eff_v is not None else V_MIN),
+        kv_placement=kv_placement)
     varr = (jnp.asarray(eff_v, jnp.float32) if eng.active
             else jnp.float32(0.0))
 

@@ -1,0 +1,653 @@
+"""Paged KV cache: serving-cache pages carved out of HBM arena blocks.
+
+The paper's three-factor trade-off (power x capacity x fault rate,
+Fig. 6) only becomes a *serving* resource once the system can steer
+which data lands on which reliability class of memory at runtime
+(Voltron's observation).  This module makes the fault map that
+steerable resource:
+
+  * a :class:`PagePool` carves fixed-size KV pages out of
+    ``DomainAllocator`` blocks.  Because a page size must divide the
+    arena block size, every page sits inside exactly one block and
+    inherits its pseudo-channel -- the per-page physical base / threshold
+    tables are a pure index refinement of the arena engine's block
+    tables (:func:`repro.core.engine.refine_tables`), zero extra
+    bookkeeping.  Pages are handed out tier-aware: weak-block pages go
+    to fault-tolerant requests first, weak-avoiding tiers get strong
+    pages most-reliable-first, and exhaustion raises
+    :class:`~repro.core.domains.CapacityError` for the scheduler to
+    treat as queue backpressure, not a crash.
+  * a :class:`PagedKVCache` owns the pooled device buffers (the pool is
+    literally ``cache_specs(cfg, num_pages, page_slots)`` -- a ring
+    cache whose "batch" rows are pages) and the serving-side data paths:
+    scattering a prefilled request into its pages, the paged decode
+    write, and the write-path fault injection of exactly the words a
+    step touched.
+  * a :class:`PagedServingCtx` is the decode-step hook (same protocol as
+    :class:`repro.serving.readpath.ReadPathCtx`, plus the paged cache
+    write): attention routes through
+    :func:`repro.kernels.flash_attention.faulty.paged_decode_attention`,
+    which gathers K/V tiles page-by-page via scalar-prefetched page
+    tables and corrupts them in VMEM as they load.
+  * :meth:`PagePool.request_placement` exports one request's pages as a
+    page-granular placement of the *standalone* contiguous cache, so
+    PR 3's ``generate()`` can replay the exact same physical fault map
+    -- the scheduler's token-for-token acceptance contract.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as arena
+from repro.core.domains import CapacityError, MemoryDomain, resolve_tier
+from repro.core.faultmap import NUM_THR_COLS, FaultMap
+from repro.kernels.bitflip.bitflip import BLOCK_WORDS
+from repro.kernels.flash_attention import faulty
+from repro.models.base import cache_slot_axes, spec_avals
+
+# Pool-cache leaves: the shared attention-cache layout (stack containers
+# x ring k/v/pos leaves).
+_LEAF_RE = re.compile(
+    r"^\['(prefix|periods|rest)'\]\['([^']+)'\]\['(k|v|pos)'\]$")
+
+
+class PagedLayoutError(ValueError):
+    """A cache layout that cannot be paged: page size not dividing the
+    arena block size, non-uniform cache lengths, ECC-incompatible page
+    geometry, ...  Subclasses ``ValueError`` so config-validation
+    callers can catch it generically."""
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PagedLeafPlacement:
+    """Page-granular placement of one leaf of a request's *standalone*
+    (contiguous, B=1) cache: entry ``j`` of the tables describes leaf
+    words ``[j * page_words, (j+1) * page_words)``.  Duck-typed against
+    :class:`~repro.core.domains.LeafPlacement` via the ``page_base``
+    attribute (see :func:`repro.core.engine.leaf_addr_tables`)."""
+
+    path: str
+    n_words: int
+    page_words: int
+    page_base: np.ndarray      # (n_pages,) uint32 physical base words
+    page_pc: np.ndarray        # (n_pages,) int32 owning pseudo-channel
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RequestPlacement:
+    """One request's cache placement assembled from its pool pages.
+
+    Quacks like a :class:`~repro.core.domains.GroupPlacement` for the
+    serving engine (``domain`` / ``leaves`` / ``total_words``) but
+    addresses physical words through per-leaf *page* tables, which is
+    what lets PR 3's contiguous ``generate()`` reproduce a scheduler
+    request bit-for-bit.
+    """
+
+    group: str
+    domain: MemoryDomain
+    leaves: Tuple[PagedLeafPlacement, ...]
+
+    @property
+    def total_words(self) -> int:
+        return sum(l.n_words for l in self.leaves)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class _PoolLeaf:
+    """Static metadata of one pool-cache leaf."""
+
+    path: str
+    container: str             # prefix | periods | rest
+    slot_key: str              # e.g. "s0_global"
+    which: str                 # k | v | pos
+    stacked: bool              # leading period axis
+    n_layers: int              # 1 for unstacked leaves
+    wps: int                   # uint32 words per cache slot
+    page_words: int            # wps * page_slots
+    layer_words: int           # words per layer slice of the pool leaf
+    # Physical tables (None when the pool is unplaced / clean):
+    page_base: Optional[np.ndarray]   # (n_layers, total_pages) uint32
+    page_pc: Optional[np.ndarray]     # (n_layers, total_pages) int32
+    block_base: Optional[np.ndarray]  # arena block tables of the leaf
+    block_pc: Optional[np.ndarray]
+
+
+def _leaf_words_per_slot(shape, slot_axis, dtype) -> int:
+    inner = int(np.prod(shape[slot_axis + 1:], dtype=np.int64))
+    nbytes = inner * jnp.dtype(dtype).itemsize
+    if nbytes % 4:
+        raise PagedLayoutError(
+            f"cache slot of {inner} x {jnp.dtype(dtype).name} elements "
+            "is not word-aligned; the paged cache needs whole uint32 "
+            "words per slot")
+    return nbytes // 4
+
+
+class PagePool:
+    """Host-side page allocator over one serving cache pool.
+
+    ``num_pages`` is the usable page count; one extra *scratch* page is
+    appended (``scratch_id``) as the write sink for inactive serving
+    slots -- it is never handed out.  A page id is valid across every
+    leaf and layer of the cache simultaneously (vLLM-style): allocating
+    ``n`` pages provisions K, V and position storage for ``n *
+    page_slots`` cache slots of every layer.
+
+    Tier routing: pages whose backing arena blocks contain weak rows
+    (in any leaf/layer) are classed *weak*.  Weak-avoiding tiers
+    allocate strong pages most-reliable-first; tolerant tiers consume
+    weak pages first and then strong pages least-reliable-first, so
+    the reliable end of the pool stays available for strict traffic.
+    """
+
+    def __init__(self, module, cfg, *, max_len: int, page_slots: int,
+                 num_pages: int, plan=None):
+        if not getattr(module, "SUPPORTS_PAGED", False):
+            raise ValueError(
+                f"family module {getattr(module, '__name__', module)!r} "
+                "does not support the paged serving cache (needs ring "
+                "k/v/pos cache leaves and the paged decode-step hook)")
+        if page_slots <= 0 or max_len % page_slots:
+            raise PagedLayoutError(
+                f"page_slots={page_slots} must positively divide "
+                f"max_len={max_len}: a request's logical cache is a "
+                "whole number of pages")
+        self.module = module
+        self.cfg = cfg
+        self.max_len = int(max_len)
+        self.page_slots = int(page_slots)
+        self.n_logical_pages = self.max_len // self.page_slots
+        self.num_pages = int(num_pages)
+        self.total_pages = self.num_pages + 1
+        self.scratch_id = self.num_pages      # trailing page, never issued
+        self.plan = plan
+
+        # The pool *is* a ring cache whose batch rows are pages.
+        self.pool_specs = module.cache_specs(cfg, self.total_pages,
+                                             self.page_slots)
+        self.pool_avals = spec_avals(self.pool_specs)
+
+        placed = (plan is not None and plan.enabled
+                  and plan.covers("kv_cache"))
+        if placed:
+            self.placement = plan.place(
+                {"kv_cache": self.pool_avals})["kv_cache"]
+            self.domain = self.placement.domain
+            self.faultmap: Optional[FaultMap] = plan.fault_map()
+        else:
+            self.placement = None
+            self.domain = None
+            self.faultmap = None
+        self.leaves = self._build_leaves()
+        self._by_path = {l.path: l for l in self.leaves}
+        # words one page id provisions across every leaf and layer
+        self.page_set_words = sum(l.n_layers * l.page_words
+                                  for l in self.leaves)
+        self.request_words = self.n_logical_pages * self.page_set_words
+
+        weak, rate = self._page_classes()
+        order = sorted(range(self.num_pages), key=lambda p: (rate[p], p))
+        self._strong: List[int] = [p for p in order if not weak[p]]
+        self._weak: List[int] = [p for p in order if weak[p]]
+        self._weak_set = set(self._weak)
+        self._rate = rate
+        self._owned: set = set()
+
+    # ---- static layout ---------------------------------------------------
+    def _build_leaves(self) -> Tuple[_PoolLeaf, ...]:
+        flat, _ = jax.tree_util.tree_flatten_with_path(self.pool_avals)
+        axes = jax.tree_util.tree_leaves(cache_slot_axes(self.pool_specs))
+        by_path = {}
+        for (p, aval), ax in zip(flat, axes):
+            by_path[jax.tree_util.keystr(p)] = (aval, ax)
+        # standalone specs tell us the request-side cache lengths
+        req_specs = self.module.cache_specs(self.cfg, 1, self.max_len)
+        req_axes = jax.tree_util.tree_leaves(cache_slot_axes(req_specs))
+        req_flat, _ = jax.tree_util.tree_flatten_with_path(
+            spec_avals(req_specs))
+        for (p, aval), ax in zip(req_flat, req_axes):
+            if ax >= 0 and aval.shape[ax] != self.max_len:
+                raise PagedLayoutError(
+                    f"cache leaf {jax.tree_util.keystr(p)} has ring "
+                    f"length {aval.shape[ax]} != max_len={self.max_len}; "
+                    "the paged scheduler shares one page-id space across "
+                    "layers and needs uniform cache lengths (window "
+                    "slots smaller than max_len are unsupported)")
+
+        placed = self.placement is not None
+        tabs = (arena.leaf_block_tables(self.placement) if placed else None)
+        paths = ([lp.path for lp in self.placement.leaves] if placed
+                 else None)
+        ecc = placed and self.domain.ecc
+        out = []
+        for path in sorted(by_path):
+            m = _LEAF_RE.match(path)
+            if not m:
+                raise PagedLayoutError(
+                    f"cache leaf {path} is not a ring k/v/pos leaf; the "
+                    "paged serving cache only understands the shared "
+                    "attention cache layout")
+            aval, ax = by_path[path]
+            stacked = m.group(1) == "periods"
+            if (ax != (2 if stacked else 1)):
+                raise PagedLayoutError(
+                    f"cache leaf {path}: slot axis {ax} is not the ring "
+                    "axis the paged layout expects")
+            n_layers = aval.shape[0] if stacked else 1
+            wps = _leaf_words_per_slot(aval.shape, ax, aval.dtype)
+            page_words = wps * self.page_slots
+            if BLOCK_WORDS % page_words:
+                raise PagedLayoutError(
+                    f"cache leaf {path}: page size {page_words} words "
+                    f"({self.page_slots} slots x {wps} words) does not "
+                    f"divide the arena block size ({BLOCK_WORDS} words); "
+                    "pick page_slots so every page sits inside one "
+                    "allocation block")
+            if ecc and (page_words % 2 or
+                        (m.group(3) in ("k", "v") and wps % 2)):
+                raise PagedLayoutError(
+                    f"cache leaf {path}: ECC domains need even page and "
+                    f"slot word counts (codeword pairs), got page="
+                    f"{page_words} / slot={wps} words")
+            layer_words = self.total_pages * page_words
+            pb = pc = bb = bp = None
+            if placed:
+                bb, bp = tabs[paths.index(path)]
+                pb_flat, pc_flat = arena.refine_tables(bb, bp, page_words)
+                n = n_layers * self.total_pages
+                pb = pb_flat[:n].reshape(n_layers, self.total_pages)
+                pc = pc_flat[:n].reshape(n_layers, self.total_pages)
+            out.append(_PoolLeaf(
+                path=path, container=m.group(1), slot_key=m.group(2),
+                which=m.group(3), stacked=stacked, n_layers=n_layers,
+                wps=wps, page_words=page_words, layer_words=layer_words,
+                page_base=pb, page_pc=pc, block_base=bb, block_pc=bp))
+        return tuple(out)
+
+    def _page_classes(self):
+        """(weak, worst-rate) per usable page, aggregated over every
+        leaf/layer slice the page id provisions.
+
+        A page is *weak* when any of its K/V payload slices overlaps a
+        weak DRAM row (the paper's C9 spatial-clustering unit) -- row
+        granularity, not allocation-block granularity, because pages
+        are much smaller than blocks and block-level classing would
+        condemn every page that merely shares a 16 KiB block with one
+        weak row.  The ``pos`` bookkeeping sliver (one word per slot,
+        packed so densely that a single weak row would condemn the
+        whole pool) is not counted: weak-row avoidance targets the
+        payload rows that dominate a request's fault exposure."""
+        weak = np.zeros(self.num_pages, bool)
+        rate = np.zeros(self.num_pages, np.float64)
+        if self.placement is None:
+            return weak, rate
+        fmap = self.faultmap
+        wpc = fmap.geometry.bytes_per_pc // 4
+        wpr = 1 << fmap.words_per_row_log2
+        rates = fmap.predicted_rates(self.domain.voltage)
+        rmasks = {int(pc): fmap.weak_row_mask(int(pc))
+                  for pc in self.domain.pc_ids}
+        for leaf in self.leaves:
+            base = leaf.page_base[:, :self.num_pages].astype(np.int64)
+            pc = leaf.page_pc[:, :self.num_pages]
+            for l in range(leaf.n_layers):
+                rate = np.maximum(rate, rates[pc[l]])
+                if leaf.which not in ("k", "v"):
+                    continue
+                in_pc = base[l] - pc[l].astype(np.int64) * wpc
+                r0 = in_pc // wpr
+                r1 = (in_pc + leaf.page_words - 1) // wpr
+                w = np.array([rmasks[int(c)][int(a):int(b) + 1].any()
+                              for c, a, b in zip(pc[l], r0, r1)])
+                weak |= w
+        return weak, rate
+
+    # ---- allocation ------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._strong) + len(self._weak)
+
+    def alloc(self, n_pages: int, tier="cheap") -> np.ndarray:
+        """Allocate ``n_pages`` page ids under ``tier``'s policy.
+
+        Raises :class:`CapacityError` (the scheduler's backpressure
+        signal) when the pool cannot supply them -- for weak-avoiding
+        tiers, weak pages do not count as supply.
+        """
+        tier = resolve_tier(tier)
+        name = self.domain.name if self.domain is not None else "page_pool"
+        if tier.avoid_weak_rows:
+            if len(self._strong) < n_pages:
+                raise CapacityError(
+                    name, n_pages * self.page_set_words * 4,
+                    len(self._strong) * self.page_set_words * 4,
+                    f"{n_pages} weak-free pages for tier {tier.name!r}; "
+                    f"{len(self._weak)} weak pages held back")
+            taken = self._strong[:n_pages]
+            del self._strong[:n_pages]
+        else:
+            if self.free_pages < n_pages:
+                raise CapacityError(
+                    name, n_pages * self.page_set_words * 4,
+                    self.free_pages * self.page_set_words * 4,
+                    f"{n_pages} pages for tier {tier.name!r}")
+            taken = self._weak[:n_pages]
+            del self._weak[:n_pages]
+            need = n_pages - len(taken)
+            if need:
+                # least-reliable strong pages first: keep the reliable
+                # end of the pool for weak-avoiding tiers
+                taken += self._strong[-need:][::-1]
+                del self._strong[-need:]
+        self._owned.update(taken)
+        return np.asarray(taken, np.int32)
+
+    def free(self, page_ids) -> None:
+        """Return pages to the pool (double-free raises ValueError)."""
+        ids = [int(p) for p in np.asarray(page_ids).reshape(-1)]
+        bad = [p for p in ids if p not in self._owned]
+        if bad or len(set(ids)) != len(ids):
+            raise ValueError(
+                f"double free of pool pages {sorted(set(bad) or set(ids))[:4]}: "
+                "not currently allocated")
+        for p in ids:
+            self._owned.discard(p)
+            lst = self._weak if p in self._weak_set else self._strong
+            keys = [(self._rate[q], q) for q in lst]
+            lst.insert(bisect.bisect_left(keys, (self._rate[p], p)), p)
+
+    # ---- exports ---------------------------------------------------------
+    def request_placement(self, page_ids) -> Optional[RequestPlacement]:
+        """The page-granular placement of one request's *standalone*
+        (B=1, contiguous) cache: logical page ``j`` of layer ``l`` lives
+        where pool page ``page_ids[j]``'s layer-``l`` slice lives.  Feed
+        it to ``generate(..., kv_placement=...)`` to replay a scheduler
+        request through PR 3's engine on identical physical words."""
+        if self.placement is None:
+            return None
+        pids = np.asarray(page_ids, np.int64).reshape(-1)
+        assert pids.shape[0] == self.n_logical_pages, pids.shape
+        leaves = []
+        for leaf in self.leaves:
+            base = leaf.page_base[:, pids].reshape(-1)     # (nl * n_lp,)
+            pc = leaf.page_pc[:, pids].reshape(-1)
+            leaves.append(PagedLeafPlacement(
+                path=leaf.path,
+                n_words=leaf.n_layers * self.max_len * leaf.wps,
+                page_words=leaf.page_words,
+                page_base=np.ascontiguousarray(base, np.uint32),
+                page_pc=np.ascontiguousarray(pc, np.int32)))
+        return RequestPlacement(group="kv_cache", domain=self.domain,
+                                leaves=tuple(leaves))
+
+
+# ---------------------------------------------------------------------------
+# Device-side paged cache
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _PagedLeafEntry:
+    base: jax.Array            # (n_layers, total_pages) uint32
+    thr: jax.Array             # (n_layers, total_pages, NUM_THR_COLS)
+
+
+@dataclasses.dataclass(frozen=True)
+class _PagedSlotEntry:
+    k: _PagedLeafEntry
+    v: _PagedLeafEntry
+
+
+@dataclasses.dataclass
+class PagedServingCtx:
+    """Decode-step hook for the paged serving cache.
+
+    Same ``covers``/``update``/``attend`` protocol as
+    :class:`repro.serving.readpath.ReadPathCtx`, with the cache write
+    overridden to the pool-page scatter and attention to the batched
+    paged kernel.  Inactive serving slots' page-table rows point at the
+    pool's scratch page and their positions are stale -- their lanes
+    compute masked garbage that the scheduler discards.
+    """
+
+    entries: Dict[str, _PagedSlotEntry]
+    page_table: jax.Array      # (S, n_logical_pages) int32
+    length: int                # logical ring length (max_len)
+    page_slots: int
+    seed: int
+    words_per_row_log2: int
+    method: str
+    ecc: bool
+    inject: bool
+    interpret: Optional[bool] = None
+
+    def covers(self, slot_key: str) -> bool:
+        return slot_key in self.entries
+
+    def update(self, slot_key: str, cache, new, pos):
+        """Paged ring write (see :func:`repro.models.cache.paged_update`)
+        of one decode token per serving slot."""
+        from repro.models.cache import paged_update
+        return paged_update(cache, new, pos, self.page_table,
+                            self.length, self.page_slots)
+
+    def attend(self, slot_key: str, layer_idx, q, cache, *, q_pos,
+               causal: bool, window: int, scale=None):
+        e = self.entries[slot_key]
+        idx = (jnp.uint32(0) if layer_idx is None
+               else layer_idx.astype(jnp.uint32))
+        kb = jax.lax.dynamic_index_in_dim(e.k.base, idx, keepdims=False)
+        kt = jax.lax.dynamic_index_in_dim(e.k.thr, idx, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(e.v.base, idx, keepdims=False)
+        vt = jax.lax.dynamic_index_in_dim(e.v.thr, idx, keepdims=False)
+        return faulty.paged_decode_attention(
+            q, cache["k"], cache["v"], cache["pos"], self.page_table,
+            q_pos=jnp.reshape(q_pos, (-1,)).astype(jnp.int32),
+            k_tables=(kb, kt), v_tables=(vb, vt), causal=causal,
+            window=window, scale=scale, seed=self.seed,
+            method=self.method,
+            words_per_row_log2=self.words_per_row_log2, ecc=self.ecc,
+            inject=self.inject, interpret=self.interpret)
+
+
+class PagedKVCache:
+    """Device-side data paths of one :class:`PagePool`.
+
+    Pure functions over the pool tree (the scheduler jits and donates
+    around them): init, prefill scatter, admission-time injection, the
+    per-step write-path injection, and the decode-step context.
+    """
+
+    def __init__(self, pool: PagePool, interpret: Optional[bool] = None):
+        self.pool = pool
+        self.interpret = interpret
+        self._tables = {}
+        if pool.placement is not None:
+            for leaf in pool.leaves:
+                self._tables[leaf.path] = (
+                    jnp.asarray(leaf.page_base),
+                    jnp.asarray(leaf.page_pc),
+                    jnp.asarray(leaf.block_base),
+                    jnp.asarray(leaf.block_pc))
+
+    def init_pool(self):
+        from repro.models.cache import init_cache
+        return init_cache(self.pool.pool_specs)
+
+    def _leaf_arrays(self, tree, leaf: _PoolLeaf):
+        arr = tree[leaf.container][leaf.slot_key][leaf.which]
+        return arr if leaf.stacked else arr[None]
+
+    def _store(self, tree, leaf: _PoolLeaf, arr_l):
+        tree[leaf.container][leaf.slot_key][leaf.which] = (
+            arr_l if leaf.stacked else arr_l[0])
+
+    @staticmethod
+    def _tree_copy(tree):
+        return jax.tree_util.tree_map(lambda x: x, tree)
+
+    # ---- context ---------------------------------------------------------
+    def make_ctx(self, page_table, voltage, *, method: str,
+                 inject: bool) -> PagedServingCtx:
+        p = self.pool
+        entries: Dict[str, Dict[str, _PagedLeafEntry]] = {}
+        if p.placement is not None:
+            table = p.faultmap.threshold_table(voltage)
+            seed, wprl2 = p.faultmap.seed, p.faultmap.words_per_row_log2
+            ecc = p.domain.ecc
+        else:
+            table = seed = None
+            wprl2, ecc, inject = 0, False, False
+        for leaf in p.leaves:
+            if leaf.which not in ("k", "v"):
+                continue
+            if table is not None:
+                pb, pc, _, _ = self._tables[leaf.path]
+                e = _PagedLeafEntry(base=pb, thr=table[pc])
+            else:
+                nl, tp = leaf.n_layers, p.total_pages
+                e = _PagedLeafEntry(
+                    base=jnp.zeros((nl, tp), jnp.uint32),
+                    thr=jnp.zeros((nl, tp, NUM_THR_COLS), jnp.uint32))
+            entries.setdefault(leaf.slot_key, {})[leaf.which] = e
+        return PagedServingCtx(
+            entries={k: _PagedSlotEntry(k=h["k"], v=h["v"])
+                     for k, h in entries.items()},
+            page_table=page_table, length=p.max_len,
+            page_slots=p.page_slots, seed=(seed if seed is not None else 0),
+            words_per_row_log2=wprl2, method=method, ecc=ecc,
+            inject=inject, interpret=self.interpret)
+
+    # ---- admission -------------------------------------------------------
+    def scatter_request(self, tree, cache, page_ids):
+        """Write a standalone (B=1) post-prefill cache into the pages
+        ``page_ids`` -- pure data movement, so a freshly admitted
+        request's pages hold exactly the state standalone prefill
+        produces (stale tenants are fully overwritten, empty ring slots
+        reset to the init state)."""
+        p = self.pool
+        tree = self._tree_copy(tree)
+        pids = jnp.asarray(page_ids, jnp.int32)
+        for leaf in p.leaves:
+            arr_l = self._leaf_arrays(tree, leaf)
+            src = self._leaf_arrays(cache, leaf)             # (nl, 1, L, ...)
+            tail = src.shape[3:]
+            src = src.reshape((leaf.n_layers, p.n_logical_pages,
+                               p.page_slots) + tail)
+            self._store(tree, leaf, arr_l.at[:, pids].set(src))
+        return tree
+
+    def inject_pages(self, tree, page_ids, voltage, *, method: str,
+                     skip_kv: bool):
+        """Whole-page injection of one request's pages -- the paged twin
+        of the engine's post-prefill ``init_inject`` (same physical
+        words, same masks).  ``skip_kv``: in read mode the K/V leaves
+        stay clean in the buffer (the read path corrupts them at load);
+        only bookkeeping (``pos``) takes write-path faults."""
+        p = self.pool
+        if p.placement is None:
+            return tree
+        tree = self._tree_copy(tree)
+        table = p.faultmap.threshold_table(voltage)
+        pids = jnp.asarray(page_ids, jnp.int32)
+        n_lp = pids.shape[0]
+        for leaf in p.leaves:
+            if skip_kv and leaf.which in ("k", "v"):
+                continue
+            _, _, bb, bp = self._tables[leaf.path]
+            bt = table[bp]
+            arr_l = self._leaf_arrays(tree, leaf)
+            vals = arr_l[:, pids]                    # (nl, n_lp, ps, ...)
+            shape = vals.shape
+            u32 = faulty._tile_to_u32(
+                vals.reshape(leaf.n_layers * n_lp, -1))
+            u32 = u32.reshape(leaf.n_layers, n_lp, leaf.page_words)
+            off = (jnp.arange(leaf.n_layers, dtype=jnp.uint32)[:, None, None]
+                   * np.uint32(leaf.layer_words)
+                   + pids.astype(jnp.uint32)[None, :, None]
+                   * np.uint32(leaf.page_words)
+                   + jnp.arange(leaf.page_words, dtype=jnp.uint32)[None,
+                                                                   None, :])
+            out, _ = arena.corrupt_words(
+                u32, off, bb, bt, seed=p.faultmap.seed, method=method,
+                words_per_row_log2=p.faultmap.words_per_row_log2,
+                ecc=p.domain.ecc)
+            out = faulty._tile_from_u32(
+                out.reshape(leaf.n_layers * n_lp, -1), vals.dtype,
+                (leaf.n_layers * n_lp,) + shape[2:]).reshape(shape)
+            self._store(tree, leaf, arr_l.at[:, pids].set(out))
+        return tree
+
+    # ---- per-step write path ---------------------------------------------
+    def post_step_inject(self, tree, page_table, q_pos, voltage, *,
+                         mode: str, method: str):
+        """Write-path injection of exactly the words a decode step
+        wrote: the (pid, row) slot of every active serving slot, in
+        every layer.  In read mode only the ``pos`` bookkeeping is
+        covered (K/V corruption happens at load); ECC domains corrupt
+        the whole ``pos`` pages instead (single positions split
+        codewords), matching the standalone engine's fallback.
+        """
+        p = self.pool
+        if p.placement is None:
+            return tree
+        tree = self._tree_copy(tree)
+        table = p.faultmap.threshold_table(voltage)
+        kw = dict(seed=p.faultmap.seed, method=method,
+                  words_per_row_log2=p.faultmap.words_per_row_log2)
+        qp = jnp.reshape(q_pos, (-1,)).astype(jnp.int32)
+        slot = qp % p.max_len
+        lp = slot // p.page_slots
+        row = slot % p.page_slots
+        pid = jnp.take_along_axis(page_table, lp[:, None], axis=1)[:, 0]
+        n_s = qp.shape[0]
+        for leaf in p.leaves:
+            if mode == "read" and leaf.which in ("k", "v"):
+                continue
+            _, _, bb, bp = self._tables[leaf.path]
+            bt = table[bp]
+            arr_l = self._leaf_arrays(tree, leaf)
+            if leaf.which == "pos" and p.domain.ecc:
+                # single positions split ECC codewords: corrupt the
+                # whole pos pages (cheap -- pos is 1 word per slot)
+                vals = arr_l[:, page_table]      # (nl, S, n_lp, ps)
+                u32 = jax.lax.bitcast_convert_type(vals, jnp.uint32)
+                off = (jnp.arange(leaf.n_layers,
+                                  dtype=jnp.uint32)[:, None, None, None]
+                       * np.uint32(leaf.layer_words)
+                       + page_table.astype(jnp.uint32)[None, :, :, None]
+                       * np.uint32(leaf.page_words)
+                       + jnp.arange(p.page_slots,
+                                    dtype=jnp.uint32)[None, None, None, :])
+                out, _ = arena.corrupt_words(u32, off, bb, bt, ecc=True,
+                                             **kw)
+                out = jax.lax.bitcast_convert_type(out, vals.dtype)
+                self._store(tree, leaf,
+                            arr_l.at[:, page_table].set(out))
+                continue
+            vals = arr_l[:, pid, row]            # (nl, S, ...)
+            shape = vals.shape
+            u32 = faulty._tile_to_u32(
+                vals.reshape(leaf.n_layers * n_s, -1))
+            u32 = u32.reshape(leaf.n_layers, n_s, leaf.wps)
+            off = (jnp.arange(leaf.n_layers, dtype=jnp.uint32)[:, None, None]
+                   * np.uint32(leaf.layer_words)
+                   + (pid.astype(jnp.uint32) * np.uint32(p.page_slots)
+                      + row.astype(jnp.uint32))[None, :, None]
+                   * np.uint32(leaf.wps)
+                   + jnp.arange(leaf.wps, dtype=jnp.uint32)[None, None, :])
+            out, _ = arena.corrupt_words(u32, off, bb, bt,
+                                         ecc=p.domain.ecc, **kw)
+            out = faulty._tile_from_u32(
+                out.reshape(leaf.n_layers * n_s, -1), vals.dtype,
+                (leaf.n_layers * n_s,) + shape[2:]).reshape(shape)
+            self._store(tree, leaf, arr_l.at[:, pid, row].set(out))
+        return tree

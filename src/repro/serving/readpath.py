@@ -49,6 +49,7 @@ class _LeafEntry:
     base: jax.Array           # (num_blocks,) uint32 physical block bases
     thr: jax.Array            # (num_blocks, NUM_THR_COLS) @ current voltage
     layer_words: int          # words per period index (0 = unstacked leaf)
+    words_log2: int           # table granularity (arena blocks or pages)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,9 +112,21 @@ class ReadPathCtx:
     ecc: bool
     inject: bool
     interpret: Optional[bool] = None
+    # KV-tile size override: page-granular placements force the tile to
+    # one page so the flash accumulation order (and hence the bits of
+    # the output) matches the paged serving kernel over the same words.
+    bkv: Optional[int] = None
 
     def covers(self, slot_key: str) -> bool:
         return slot_key in self.entries
+
+    def update(self, slot_key: str, cache, new, pos):
+        """Decode cache write for this ctx's layout: plain contiguous
+        ring update here; the paged serving ctx overrides it with the
+        pool-page scatter.  Owning the write on the ctx keeps the
+        model's decode branch cache-layout-agnostic."""
+        from repro.models.cache import ring_update
+        return ring_update(cache, new, pos)
 
     def attend(self, slot_key: str, layer_idx, q, cache, *, q_pos,
                causal: bool, window: int, scale=None):
@@ -130,6 +143,7 @@ class ReadPathCtx:
         idx = jnp.uint32(0) if layer_idx is None else layer_idx.astype(
             jnp.uint32)
         clean = (q_pos % k.shape[1]).astype(jnp.int32)
+        assert e.k.words_log2 == e.v.words_log2, (e.k, e.v)
         return faulty.faulty_decode_attention(
             q, k, v, pos, q_pos=q_pos,
             k_tables=(e.k.base, e.k.thr), v_tables=(e.v.base, e.v.thr),
@@ -138,7 +152,8 @@ class ReadPathCtx:
             causal=causal, window=window, scale=scale, seed=self.seed,
             method=self.method, words_per_row_log2=self.words_per_row_log2,
             ecc=self.ecc, inject=self.inject, clean_slot=clean,
-            interpret=self.interpret)
+            bkv=self.bkv, interpret=self.interpret,
+            words_log2=e.k.words_log2)
 
 
 def build_ctx(placement: GroupPlacement, faultmap: FaultMap, cache_avals,
@@ -146,11 +161,19 @@ def build_ctx(placement: GroupPlacement, faultmap: FaultMap, cache_avals,
               interpret=None) -> ReadPathCtx:
     """Build the per-voltage context (``voltage`` may be traced: the
     threshold gather happens inside the caller's trace, so per-request
-    voltage schedules re-execute one compiled decode)."""
+    voltage schedules re-execute one compiled decode).
+
+    ``placement`` may be an arena-backed GroupPlacement (block-granular
+    tables) or a page-granular request placement exported by the paged
+    serving cache (:mod:`repro.serving.paged`) -- the kernel addressing
+    is table-driven either way; a paged placement additionally pins the
+    KV tile to one page so the numerics match the paged batch kernel.
+    """
     table = faultmap.threshold_table(voltage)
-    tabs = arena.leaf_block_tables(placement)
+    tabs = arena.leaf_addr_tables(placement)
     by_path = _avals_by_path(cache_avals)
     halves: Dict[str, Dict[str, _LeafEntry]] = {}
+    bkv = set()
     for i, lp in enumerate(placement.leaves):
         m = _KV_LEAF_RE.match(lp.path)
         if not m:
@@ -158,17 +181,22 @@ def build_ctx(placement: GroupPlacement, faultmap: FaultMap, cache_avals,
         slot_key, which, stacked = m.group(2), m.group(3), \
             m.group(1) == "periods"
         aval = by_path[lp.path]
-        bb, bp = tabs[i]
+        bb, bp, lg2 = tabs[i]
         shape = aval.shape[1:] if stacked else aval.shape
         _, length, kh, d = shape
         wps = faulty.kv_words_per_slot(kh, d, aval.dtype)
         layer_words = shape[0] * length * wps if stacked else 0
+        if hasattr(lp, "page_words"):
+            assert lp.page_words % wps == 0, (lp.path, lp.page_words, wps)
+            bkv.add(lp.page_words // wps)
         halves.setdefault(slot_key, {})[which] = _LeafEntry(
             base=jnp.asarray(bb), thr=table[jnp.asarray(bp)],
-            layer_words=int(layer_words))
+            layer_words=int(layer_words), words_log2=lg2)
     entries = {key: _SlotEntry(k=h["k"], v=h["v"])
                for key, h in halves.items() if "k" in h and "v" in h}
+    assert len(bkv) <= 1, f"inconsistent page slot counts {bkv}"
     return ReadPathCtx(
         entries=entries, seed=faultmap.seed,
         words_per_row_log2=faultmap.words_per_row_log2, method=method,
-        ecc=placement.domain.ecc, inject=inject, interpret=interpret)
+        ecc=placement.domain.ecc, inject=inject, interpret=interpret,
+        bkv=(bkv.pop() if bkv else None))

@@ -1,0 +1,424 @@
+"""Continuous-batching serving scheduler over the reliability-aware
+paged KV cache.
+
+PR 3's serving path decodes one fixed, contiguously placed batch at a
+time: admission happens once, at ``generate()``, and capacity is
+whatever that batch's placement grabbed.  This module replaces that
+with an admission -> prefill -> decode -> retire loop over concurrent
+requests:
+
+  * requests wait in a FIFO queue; admission takes a free serving slot
+    plus ``max_len / page_slots`` pool pages matching the request's
+    criticality tier (weak-block pages go to tolerant requests first).
+    :class:`~repro.core.domains.CapacityError` from the page pool -- or
+    from the admission governor -- is *backpressure*: the request simply
+    waits for pages to be retired, it never crashes the loop.
+  * prefill runs per request (batch 1, exactly the standalone prefill)
+    and is scattered into the request's pages; the post-prefill
+    injection pass corrupts those pages the same way the standalone
+    engine's ``init_inject`` would.
+  * the decode step is ONE jitted function over a fixed-capacity slot
+    array -- active mask, per-slot positions/tokens/keys, the page
+    table, and the donated pool -- so the compile count is flat in
+    traffic: requests of any mix of lengths and tiers ride the same
+    compiled step, and the per-step KV voltage is a traced scalar the
+    admission governor can re-plan at every admission without a
+    recompile.
+  * retirement frees the request's pages back to the pool (reliability-
+    ordered recycling), turning capacity reclaimed by tolerating weak
+    blocks directly into extra concurrent traffic.
+
+Token-equivalence contract (asserted in tests/test_scheduler.py):
+every request's tokens are bit-identical to running it alone through
+PR 3's ``generate()`` with the request's page placement
+(:meth:`PagePool.request_placement`) -- greedy and sampled, read and
+write injection modes, with and without ECC.  The one exclusion is a
+*governor-driven* run whose voltage actually moves mid-request: the
+domain rail is global, so a re-plan triggered by a later admission
+also retunes the in-flight requests' thresholds, and a standalone
+replay (one constant ``kv_voltage``) cannot reproduce that trajectory
+-- ``RequestResult.voltage`` records the admission-time re-plan, not a
+promise that the whole lifetime ran there.  ``kv_injection='rewrite'``
+(the legacy full-cache oracle) cannot address pages and is rejected up
+front.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.domains import CapacityError
+from repro.core.engine import _static_value, resolve_method
+from repro.core.faultmodel import V_MIN
+from repro.models.base import ArchBundle, ArchConfig
+from repro.serving.engine import ServeConfig, sample_tokens
+from repro.serving.paged import PagedKVCache, PagePool, RequestPlacement
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request.
+
+    ``max_new_tokens`` defaults to the scheduler's ServeConfig value;
+    ``tier`` routes page allocation (a name from
+    ``repro.core.domains.TIERS`` or a CriticalityTier); ``key`` is the
+    request's sampling PRNGKey (defaults to PRNGKey(0), exactly like
+    ``generate``)."""
+
+    rid: Any
+    tokens: Any                       # prompt token ids, shape (prompt_len,)
+    max_new_tokens: Optional[int] = None
+    tier: Any = "cheap"
+    key: Optional[jax.Array] = None
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: Any
+    tokens: np.ndarray                # (1, max_new_tokens), like generate()
+    page_ids: np.ndarray
+    placement: Optional[RequestPlacement]
+    voltage: Optional[float]          # KV-domain voltage at admission
+
+
+class ContinuousBatchingScheduler:
+    """Serve overlapping requests through one compiled decode step.
+
+    ``num_slots`` bounds concurrent requests (the compiled step's batch
+    width); ``num_pages`` x ``page_slots`` sizes the shared KV pool;
+    ``max_active`` optionally throttles admissions below ``num_slots``
+    (benchmarks use it to sweep concurrency on one compiled step).
+    """
+
+    def __init__(self, bundle: ArchBundle, cfg: ArchConfig, params,
+                 sc: ServeConfig, *, num_slots: int, num_pages: int,
+                 page_slots: int, max_active: Optional[int] = None,
+                 dist=None, interpret: Optional[bool] = None):
+        if sc.kv_injection == "rewrite":
+            raise ValueError(
+                "kv_injection='rewrite' re-injects whole contiguous "
+                "caches every token; the scheduler's caches are paged "
+                "and the legacy segment walker cannot address pages. "
+                "Use 'read' (fused, default via 'auto') or 'write' "
+                "(incremental), or serve one-shot batches through "
+                "generate() if you need the rewrite oracle")
+        if sc.kv_injection not in ("auto", "read", "write"):
+            raise ValueError(f"unknown kv_injection {sc.kv_injection!r}")
+        self.bundle = bundle
+        self.cfg = cfg
+        self.params = params
+        self.sc = sc
+        self.dist = dist
+        self.num_slots = int(num_slots)
+        self.max_active = int(num_slots if max_active is None
+                              else max_active)
+        if self.num_slots < 1 or not 1 <= self.max_active <= self.num_slots:
+            raise ValueError(
+                f"need 1 <= max_active ({self.max_active}) <= num_slots "
+                f"({self.num_slots})")
+
+        plan = (sc.undervolt
+                if sc.undervolt is not None and sc.undervolt.enabled
+                else None)
+        self.pool = PagePool(bundle.module, cfg, max_len=sc.max_len,
+                             page_slots=page_slots, num_pages=num_pages,
+                             plan=plan)
+        self.kvc = PagedKVCache(self.pool, interpret=interpret)
+
+        # ---- voltage control / injection mode (mirrors generate()) ----
+        placed = self.pool.placement is not None
+        self.governor = sc.governor
+        if self.governor is not None:
+            if sc.kv_voltage is not None:
+                raise ValueError(
+                    "ServeConfig.governor and kv_voltage are mutually "
+                    "exclusive voltage controls")
+            if sc.undervolt is None or self.governor.plan is not sc.undervolt:
+                raise ValueError(
+                    "sc.governor must be built from sc.undervolt (its "
+                    "frontier/capacity tables belong to that plan's "
+                    "fault map and domains)")
+            if not placed:
+                raise ValueError(
+                    "ServeConfig.governor is set but the undervolt plan "
+                    "does not place 'kv_cache' (or is disabled): "
+                    "admission governance would silently be a no-op")
+            if self.governor.config.domain != self.pool.domain.name:
+                raise ValueError(
+                    f"sc.governor governs domain "
+                    f"{self.governor.config.domain!r} but the KV cache "
+                    f"is placed in domain {self.pool.domain.name!r}")
+        eff_v = sc.kv_voltage if sc.kv_voltage is not None else (
+            self.pool.domain.voltage if placed else None)
+        sv = _static_value(eff_v) if eff_v is not None else None
+        self.active = placed and (
+            self.governor is not None
+            or eff_v is None
+            or sv is None                       # traced: assume live
+            or sv < V_MIN - 1e-9)
+        mode = sc.kv_injection
+        if mode == "auto":
+            mode = "read"
+        self.mode = mode
+        method = sc.kv_method
+        if self.active and method == "auto":
+            if self.governor is not None:
+                raise ValueError(
+                    "kv_method='auto' cannot dispatch under an admission "
+                    "governor (the KV voltage is re-planned per "
+                    "admission); pass kv_method='word' or 'bitwise' "
+                    "explicitly")
+            if sv is None:
+                raise ValueError(
+                    "kv_method='auto' cannot dispatch from a traced "
+                    "kv_voltage (method selection is static); pass "
+                    "kv_method='word' or 'bitwise' explicitly for "
+                    "traced voltage schedules")
+            method = ("word" if self.pool.domain.ecc
+                      else resolve_method(self.pool.faultmap,
+                                          self.pool.placement, sv))
+        self.method = method
+        self._voltage = float(sv) if sv is not None else (
+            eff_v if eff_v is not None else 0.0)
+
+        # ---- bookkeeping ----------------------------------------------
+        self.queue: collections.deque = collections.deque()
+        self.results: Dict[Any, RequestResult] = {}
+        self._slots: List[Optional[Any]] = [None] * self.num_slots
+        self._slot_pages: List[Optional[np.ndarray]] = (
+            [None] * self.num_slots)
+        self._out: Dict[Any, List[int]] = {}
+        self._remaining: Dict[Any, int] = {}
+        self._meta: Dict[Any, RequestResult] = {}
+        self.steps = 0
+        self.admitted = 0
+        self.peak_active = 0
+        self.traces: List[int] = []
+
+        self.state = self._init_state()
+        self._step = jax.jit(self._step_fn, donate_argnums=(1,))
+        self._admit_pool = jax.jit(self._admit_pool_fn,
+                                   donate_argnums=(0,))
+        # one jitted prefill: jax.jit itself specializes per prompt
+        # length, so compile count stays one per distinct length
+        module, cfg = self.bundle.module, self.cfg
+        self._prefill = jax.jit(
+            lambda p, bt: module.prefill(p, bt, cfg, sc.max_len,
+                                         self.dist))
+
+    # ---- compiled pieces --------------------------------------------------
+    def _init_state(self):
+        s = self.num_slots
+        return {
+            "pool": self.kvc.init_pool(),
+            "ptab": jnp.full((s, self.pool.n_logical_pages),
+                             self.pool.scratch_id, jnp.int32),
+            "qpos": jnp.zeros((s,), jnp.int32),
+            "tok": jnp.zeros((s, 1), jnp.int32),
+            "keys": jnp.zeros((s, 2), jnp.uint32),
+            "active": jnp.zeros((s,), bool),
+        }
+
+    def _sample_one(self, logits, key):
+        """Standalone-identical sampling on one (1, vocab) logits row
+        (the engine's shared implementation, so the bit-equality
+        contract has a single sampling code path)."""
+        return sample_tokens(logits, key, self.sc.temperature)
+
+    def _step_fn(self, params, state, v):
+        self.traces.append(1)
+        module = self.bundle.module
+        ctx = self.kvc.make_ctx(
+            state["ptab"], v, method=self.method,
+            inject=(self.active and self.mode == "read"))
+        ks = jax.vmap(jax.random.split)(state["keys"])
+        new_keys, ki = ks[:, 0], ks[:, 1]
+        logits, pool = module.decode_step(
+            params, state["pool"], {"tokens": state["tok"]},
+            state["qpos"][:, None], self.cfg, self.dist, fault_ctx=ctx)
+        if self.active and self.mode in ("read", "write"):
+            pool = self.kvc.post_step_inject(
+                pool, state["ptab"], state["qpos"], v, mode=self.mode,
+                method=self.method)
+        nt = jax.vmap(lambda lg, kk: self._sample_one(lg[None], kk)[0])(
+            logits, ki)[:, None]
+        act = state["active"]
+        new_state = {
+            "pool": pool,
+            "ptab": state["ptab"],
+            "qpos": state["qpos"] + act.astype(jnp.int32),
+            "tok": jnp.where(act[:, None], nt, state["tok"]),
+            "keys": jnp.where(act[:, None], new_keys, state["keys"]),
+            "active": act,
+        }
+        return new_state, nt
+
+    def _admit_pool_fn(self, pool_tree, cache, pids, v):
+        tree = self.kvc.scatter_request(pool_tree, cache, pids)
+        if self.active:
+            tree = self.kvc.inject_pages(
+                tree, pids, v, method=self.method,
+                skip_kv=(self.mode == "read"))
+        return tree
+
+    # ---- host loop --------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        n_new = (request.max_new_tokens
+                 if request.max_new_tokens is not None
+                 else self.sc.max_new_tokens)
+        if int(n_new) < 1:
+            raise ValueError(
+                f"request {request.rid!r}: max_new_tokens={n_new} must "
+                "be >= 1 (every admitted request samples at least the "
+                "prefill token)")
+        self.queue.append(request)
+
+    @property
+    def n_active(self) -> int:
+        return sum(1 for r in self._slots if r is not None)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self._slots):
+            if r is None:
+                return i
+        return None
+
+    def admit_pending(self) -> int:
+        """Admit queued requests FIFO until a slot, the page pool, or
+        the governor pushes back.  Returns the number admitted."""
+        n = 0
+        while self.queue and self.n_active < self.max_active:
+            slot = self._free_slot()
+            if slot is None:
+                break
+            req = self.queue[0]
+            try:
+                pids = self.pool.alloc(self.pool.n_logical_pages,
+                                       req.tier)
+            except CapacityError:
+                break                          # backpressure: wait
+            if self.governor is not None:
+                try:
+                    # the governed domain must keep the WHOLE post-
+                    # admission working set usable (the scheduler's
+                    # analog of generate()'s whole-batch bytes), not
+                    # just the new request's cache
+                    self._voltage = self.governor.admit(
+                        (self.n_active + 1) * self.pool.request_words * 4)
+                except CapacityError:
+                    self.pool.free(pids)
+                    break
+            self.queue.popleft()
+            self._admit(req, slot, pids)
+            n += 1
+        return n
+
+    def _admit(self, req: Request, slot: int, pids: np.ndarray) -> None:
+        sc = self.sc
+        prompt = np.asarray(req.tokens, np.int32).reshape(1, -1)
+        prompt_len = prompt.shape[1]
+        n_new = int(req.max_new_tokens if req.max_new_tokens is not None
+                    else sc.max_new_tokens)      # >= 1, checked at submit
+        v_arr = jnp.float32(self._voltage)
+
+        logits, cache = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(prompt)})
+        key = req.key if req.key is not None else jax.random.PRNGKey(0)
+        key, k0 = jax.random.split(key)
+        tok0 = self._sample_one(logits, k0)        # (1,)
+
+        st = self.state
+        st["pool"] = self._admit_pool(st["pool"], cache,
+                                      jnp.asarray(pids), v_arr)
+        self.state = {
+            "pool": st["pool"],
+            "ptab": st["ptab"].at[slot].set(jnp.asarray(pids)),
+            "qpos": st["qpos"].at[slot].set(prompt_len),
+            "tok": st["tok"].at[slot].set(tok0),
+            "keys": st["keys"].at[slot].set(key),
+            "active": st["active"].at[slot].set(True),
+        }
+        self._slots[slot] = req.rid
+        self._slot_pages[slot] = np.asarray(pids)
+        self._out[req.rid] = [int(tok0[0])]
+        self._remaining[req.rid] = n_new - 1
+        self._meta[req.rid] = RequestResult(
+            rid=req.rid, tokens=None, page_ids=np.asarray(pids),
+            placement=self.pool.request_placement(pids),
+            voltage=(self._voltage if self.pool.placement is not None
+                     else None))
+        self.admitted += 1
+        self.peak_active = max(self.peak_active, self.n_active)
+        if self._remaining[req.rid] == 0:
+            self._retire(slot)
+
+    def _retire(self, slot: int) -> None:
+        rid = self._slots[slot]
+        res = self._meta.pop(rid)
+        res.tokens = np.asarray(self._out.pop(rid), np.int32)[None, :]
+        self.results[rid] = res
+        self.pool.free(self._slot_pages[slot])
+        del self._remaining[rid]
+        self._slots[slot] = None
+        self._slot_pages[slot] = None
+        st = self.state
+        self.state = {
+            **st,
+            "ptab": st["ptab"].at[slot].set(self.pool.scratch_id),
+            "active": st["active"].at[slot].set(False),
+        }
+
+    def step_once(self) -> None:
+        """One decode step for every active slot (single compiled
+        call), then collect tokens and retire finished requests."""
+        self.state, nt = self._step(self.params, self.state,
+                                    jnp.float32(self._voltage))
+        toks = np.asarray(nt)[:, 0]
+        self.steps += 1
+        for slot, rid in enumerate(self._slots):
+            if rid is None:
+                continue
+            self._out[rid].append(int(toks[slot]))
+            self._remaining[rid] -= 1
+            if self._remaining[rid] == 0:
+                self._retire(slot)
+
+    def run(self) -> Dict[Any, RequestResult]:
+        """Drain the queue: admit / step / retire until every submitted
+        request has finished.  Returns ``results`` (also kept on the
+        scheduler)."""
+        while self.queue or self.n_active:
+            self.admit_pending()
+            if not self.n_active:
+                if not self.queue:
+                    break
+                # Nothing running and the head request still cannot be
+                # admitted: it can never fit.  Re-run its admission
+                # checks so the capacity source raises its own error.
+                pids = self.pool.alloc(self.pool.n_logical_pages,
+                                       self.queue[0].tier)
+                self.pool.free(pids)
+                if self.governor is not None:
+                    self.governor.admit(self.pool.request_words * 4)
+                raise CapacityError(
+                    "scheduler", self.pool.request_words * 4,
+                    self.pool.free_pages * self.pool.page_set_words * 4,
+                    "admission stuck with an idle pool")
+            self.step_once()
+        return self.results
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "steps": self.steps,
+            "admitted": self.admitted,
+            "peak_active": self.peak_active,
+            "decode_traces": len(self.traces),
+            "free_pages": self.pool.free_pages,
+            "voltage": self._voltage,
+        }

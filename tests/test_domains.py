@@ -8,7 +8,7 @@ import pytest
 from repro.core import injection
 from repro.core.domains import (ALIGN_WORDS, CapacityError, CriticalityTier,
                                 DeviceCrashError, DomainAllocator,
-                                MemoryDomain, place_groups,
+                                MemoryDomain, Segment, place_groups,
                                 place_groups_tiered, resolve_tier)
 from repro.core.faultmap import PAPER_MAP_SEED, FaultMap
 from repro.core.hbm import VCU128, HBMGeometry
@@ -237,3 +237,65 @@ def test_clamp_nonfinite():
     np.testing.assert_array_equal(np.asarray(out["x"]),
                                   [1.0, 0.0, 0.0, 0.0, 2.0])
     np.testing.assert_array_equal(np.asarray(out["i"]), [1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# DomainAllocator.free(): block recycling for long-lived serving pools
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_free_then_realloc_returns_same_blocks():
+    """The recycling invariant a serving allocator (requests arriving
+    and retiring forever) depends on: freed blocks come back in the
+    same reliability order, so identical footprints land on identical
+    physical blocks."""
+    d = MemoryDomain("d", 0.90, tuple(range(6)))
+    a = DomainAllocator(TINY, d, faultmap=TINY_FMAP)
+    s1 = a.alloc(3 * ALIGN_WORDS)
+    s2 = a.alloc(2 * ALIGN_WORDS)
+    free_before = a.free_words
+    a.free(s1)
+    assert a.free_words == free_before + 3 * ALIGN_WORDS
+    assert a.alloc(3 * ALIGN_WORDS) == s1
+    # freed blocks of several allocations merge back in rank order
+    a.free(s2)
+    a.free(s1)
+    assert a.alloc(3 * ALIGN_WORDS) == s1
+    assert a.alloc(2 * ALIGN_WORDS) == s2
+
+
+def test_allocator_double_free_raises():
+    d = MemoryDomain("d", 0.90, tuple(range(6)))
+    a = DomainAllocator(TINY, d, faultmap=TINY_FMAP)
+    segs = a.alloc(2 * ALIGN_WORDS)
+    a.free(segs)
+    with pytest.raises(ValueError, match="double free"):
+        a.free(segs)
+    with pytest.raises(ValueError, match="double free"):
+        # never handed out by this allocator
+        a.free((Segment(leaf_start_word=0, n_words=ALIGN_WORDS, pc=5,
+                        phys_base_word=5 * (TINY.bytes_per_pc // 4)),))
+    with pytest.raises(ValueError, match="not in domain"):
+        a.free((Segment(leaf_start_word=0, n_words=ALIGN_WORDS, pc=7,
+                        phys_base_word=0),))
+
+
+def test_allocator_freed_weak_blocks_stay_avoided():
+    """Recycled weak blocks must not leak into weak-row-avoiding
+    allocations."""
+    d = MemoryDomain("d", 0.90, tuple(range(6)))
+    a = DomainAllocator(TINY, d, faultmap=TINY_FMAP)
+    wpc = TINY.bytes_per_pc // 4
+    segs = a.alloc(12 * ALIGN_WORDS)          # plain: weak blocks included
+    blocks = []
+    for s in segs:
+        b0 = (s.phys_base_word - s.pc * wpc) // ALIGN_WORDS
+        blocks += [(s.pc, b0 + i) for i in range(-(-s.n_words // ALIGN_WORDS))]
+    assert any(a._is_weak(pc, blk) for pc, blk in blocks), (
+        "fault map should mark some of these blocks weak")
+    a.free(segs)
+    avoided = a.alloc(4 * ALIGN_WORDS, avoid_weak_rows=True)
+    for s in avoided:
+        b0 = (s.phys_base_word - s.pc * wpc) // ALIGN_WORDS
+        for i in range(-(-s.n_words // ALIGN_WORDS)):
+            assert not a._is_weak(s.pc, b0 + i)

@@ -1,0 +1,280 @@
+"""Paged KV-cache primitives.
+
+Three contracts back the continuous-batching scheduler:
+
+  * the batched *paged* decode-attention kernel is bit-identical to the
+    PR 3 contiguous read-path kernel on the same operands -- injection
+    on/off x ECC on/off x constant/traced voltage -- because both share
+    one flash tile body and one mask math addressed by physical word
+    ids;
+  * per-page physical tables are pure refinements of the arena block
+    tables (a page never straddles a block), and the same candidate-
+    select addressing resolves them at page granularity;
+  * the page pool routes criticality tiers (weak pages to tolerant
+    requests first, weak-avoiding tiers never see weak pages), recycles
+    freed pages deterministically, and turns exhaustion into a typed
+    CapacityError.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.domains import CapacityError, MemoryDomain, place_groups
+from repro.core.faultmap import FaultMap
+from repro.core.hbm import VCU128, HBMGeometry
+from repro.kernels.flash_attention import faulty
+from repro.models.base import get_arch
+from repro.serving.paged import PagedLayoutError, PagePool
+from repro.training.undervolt import UndervoltPlan
+
+TINY = HBMGeometry(name="tiny", num_stacks=2, channels_per_stack=2,
+                   pcs_per_channel=2, bytes_per_pc=64 * 1024)
+FMAP = FaultMap.from_seed(TINY, seed=7)
+
+B, L, KH, G, D = 2, 32, 2, 3, 8
+H = KH * G
+PS = 8                                  # page_slots
+N_LP = L // PS
+
+
+def _bits(x):
+    return np.asarray(jax.lax.bitcast_convert_type(
+        x.reshape(-1),
+        {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}[x.dtype.itemsize]))
+
+
+def _operands(seed, v, ecc, *, method):
+    """Contiguous cache + both granularities of physical tables."""
+    rng = np.random.RandomState(seed)
+    tree = {"k": jnp.asarray(rng.randn(B, L, KH, D), jnp.bfloat16),
+            "v": jnp.asarray(rng.randn(B, L, KH, D), jnp.bfloat16)}
+    domains = {"d": MemoryDomain("d", v, tuple(range(6)), ecc=ecc)}
+    placement = place_groups({"g": tree}, {"g": "d"}, domains, TINY)["g"]
+    table = FMAP.threshold_table(v)
+    tabs = engine.leaf_block_tables(placement)
+    paths = [lp.path for lp in placement.leaves]
+    wps = faulty.kv_words_per_slot(KH, D, jnp.bfloat16)
+    page_words = PS * wps
+    block_t, page_t = {}, {}
+    for name in ("k", "v"):
+        bb, bp = tabs[paths.index(f"['{name}']")]
+        block_t[name] = (jnp.asarray(bb), table[jnp.asarray(bp)])
+        pb, pp = engine.refine_tables(bb, bp, page_words)
+        page_t[name] = (jnp.asarray(pb), table[jnp.asarray(pp)])
+    q = jnp.asarray(rng.randn(B, 1, H, D), jnp.bfloat16)
+    pos_vals = np.arange(L)[None, :].repeat(B, 0).astype(np.int32)
+    pos_vals[:, -3:] = -1               # empty ring slots stay masked
+    pos = jnp.asarray(pos_vals)
+    kw = dict(causal=True, window=0, seed=FMAP.seed, method=method,
+              words_per_row_log2=FMAP.words_per_row_log2, ecc=ecc)
+    return tree, q, pos, block_t, page_t, page_words, kw
+
+
+def _pool_view(tree, pos):
+    """The same cache as a page pool with identity page tables."""
+    pool_k = tree["k"].reshape(B * N_LP, PS, KH, D)
+    pool_v = tree["v"].reshape(B * N_LP, PS, KH, D)
+    pool_pos = pos.reshape(B * N_LP, PS)
+    ptab = jnp.asarray(
+        np.arange(B * N_LP, dtype=np.int32).reshape(B, N_LP))
+    return pool_k, pool_v, pool_pos, ptab
+
+
+CASES = [("word", 0.88, False), ("bitwise", 0.86, False),
+         ("word", 0.86, True)]
+
+
+@pytest.mark.parametrize("inject", [True, False])
+@pytest.mark.parametrize("method,v,ecc", CASES)
+def test_paged_kernel_bit_identical_to_contiguous(method, v, ecc, inject):
+    """The satellite contract: batched paged attention == the PR 3
+    contiguous kernel on the same operands, including the clean-slot
+    exemption, with and without injection."""
+    tree, q, pos, block_t, page_t, page_words, kw = _operands(
+        1, v, ecc, method=method)
+    q_pos = jnp.int32(L + 4)
+    ref = faulty.faulty_decode_attention(
+        q, tree["k"], tree["v"], pos, q_pos=q_pos,
+        k_tables=block_t["k"], v_tables=block_t["v"],
+        k_word0=jnp.uint32(0), v_word0=jnp.uint32(0), inject=inject,
+        clean_slot=(q_pos % L), bkv=PS, **kw)
+
+    # same kernel addressed through page-granular tables
+    lg2 = page_words.bit_length() - 1
+    out_pg = faulty.faulty_decode_attention(
+        q, tree["k"], tree["v"], pos, q_pos=q_pos,
+        k_tables=page_t["k"], v_tables=page_t["v"],
+        k_word0=jnp.uint32(0), v_word0=jnp.uint32(0), inject=inject,
+        clean_slot=(q_pos % L), bkv=PS, words_log2=lg2, **kw)
+    np.testing.assert_array_equal(_bits(ref), _bits(out_pg))
+
+    # the batched paged kernel over the pool view of the same cache
+    pool_k, pool_v, pool_pos, ptab = _pool_view(tree, pos)
+    out_paged = faulty.paged_decode_attention(
+        q, pool_k, pool_v, pool_pos, ptab,
+        q_pos=jnp.full((B,), L + 4, jnp.int32),
+        k_tables=page_t["k"], v_tables=page_t["v"], inject=inject, **kw)
+    np.testing.assert_array_equal(_bits(ref), _bits(out_paged))
+
+
+def test_paged_kernel_per_slot_positions():
+    """Every serving slot carries its own decode position (and hence
+    its own causal mask and clean-slot exemption): each batched row
+    equals a standalone single-request call at that position."""
+    tree, q, pos, _, page_t, _, kw = _operands(2, 0.86, False,
+                                               method="bitwise")
+    pool_k, pool_v, pool_pos, ptab = _pool_view(tree, pos)
+    q_pos = jnp.asarray([L + 4, L - 9], jnp.int32)
+    out = faulty.paged_decode_attention(
+        q, pool_k, pool_v, pool_pos, ptab, q_pos=q_pos,
+        k_tables=page_t["k"], v_tables=page_t["v"], inject=True, **kw)
+    for b in range(B):
+        single = faulty.paged_decode_attention(
+            q[b:b + 1], pool_k, pool_v, pool_pos, ptab[b:b + 1],
+            q_pos=q_pos[b:b + 1], k_tables=page_t["k"],
+            v_tables=page_t["v"], inject=True, **kw)
+        np.testing.assert_array_equal(_bits(out[b]), _bits(single[0]))
+
+
+def test_paged_kernel_traced_voltage_traces_once():
+    """Page threshold tables derive from a traced voltage inside the
+    caller's trace: a 5-point sweep compiles once and matches eager."""
+    tree, q, pos, _, _, page_words, kw = _operands(3, 0.90, False,
+                                                   method="word")
+    pool_k, pool_v, pool_pos, ptab = _pool_view(tree, pos)
+    domains = {"d": MemoryDomain("d", 0.90, tuple(range(6)))}
+    placement = place_groups({"g": {k: tree[k] for k in ("k", "v")}},
+                             {"g": "d"}, domains, TINY)["g"]
+    tabs = engine.leaf_block_tables(placement)
+    paths = [lp.path for lp in placement.leaves]
+    refined = {name: engine.refine_tables(*tabs[paths.index(f"['{name}']")],
+                                          page_words)
+               for name in ("k", "v")}
+    traces = []
+
+    def run(vv):
+        traces.append(1)
+        table = FMAP.threshold_table(vv)
+        t = {name: (jnp.asarray(pb), table[jnp.asarray(pp)])
+             for name, (pb, pp) in refined.items()}
+        return faulty.paged_decode_attention(
+            q, pool_k, pool_v, pool_pos, ptab,
+            q_pos=jnp.full((B,), L, jnp.int32), k_tables=t["k"],
+            v_tables=t["v"], inject=True, **kw)
+
+    jrun = jax.jit(run)
+    outs = {vv: jrun(jnp.float32(vv))
+            for vv in (0.90, 0.89, 0.88, 0.87, 0.86)}
+    assert len(traces) == 1, f"voltage sweep retraced {len(traces)} times"
+    assert bool(jnp.any(outs[0.90] != outs[0.86]))
+    for vv in (0.90, 0.86):
+        np.testing.assert_array_equal(_bits(outs[vv]),
+                                      _bits(run(jnp.float32(vv))))
+
+
+def test_refine_tables_is_pure_index_transform():
+    bb = np.asarray([4096 * 7, 4096 * 11], np.uint32)
+    bp = np.asarray([3, 5], np.int32)
+    pb, pp = engine.refine_tables(bb, bp, 1024)
+    np.testing.assert_array_equal(
+        pb, [4096 * 7, 4096 * 7 + 1024, 4096 * 7 + 2048, 4096 * 7 + 3072,
+             4096 * 11, 4096 * 11 + 1024, 4096 * 11 + 2048,
+             4096 * 11 + 3072])
+    np.testing.assert_array_equal(pp, [3, 3, 3, 3, 5, 5, 5, 5])
+    with pytest.raises(ValueError, match="divide"):
+        engine.refine_tables(bb, bp, 24)
+
+
+# ---------------------------------------------------------------------------
+# PagePool: tier routing, recycling, layout validation
+# ---------------------------------------------------------------------------
+
+BUNDLE = get_arch("llama3.2-3b")
+CFG = BUNDLE.reduced
+ALL_PCS = tuple(range(VCU128.num_pcs))
+
+
+def _plan(v=0.88, ecc=False):
+    return UndervoltPlan(
+        domains={"kv": MemoryDomain("kv", v, ALL_PCS, ecc=ecc)},
+        policy={"kv_cache": "kv"}, geometry=VCU128)
+
+
+def _pool(num_pages=16, page_slots=8, plan=None, max_len=32, cfg=CFG):
+    return PagePool(BUNDLE.module, cfg, max_len=max_len,
+                    page_slots=page_slots, num_pages=num_pages,
+                    plan=plan if plan is not None else _plan())
+
+
+def test_pool_tier_routing_and_capacity_backpressure():
+    pool = _pool()
+    n_strong, n_weak = len(pool._strong), len(pool._weak)
+    assert n_strong + n_weak == 16
+    assert n_weak >= 1, "fault map should make some pages weak"
+
+    strict = pool.alloc(2, "critical")
+    assert not any(int(p) in pool._weak_set for p in strict)
+    tolerant = pool.alloc(min(n_weak, 2), "cheap")
+    assert all(int(p) in pool._weak_set for p in tolerant), (
+        "tolerant tiers must consume weak pages first")
+
+    with pytest.raises(CapacityError) as ei:
+        pool.alloc(n_strong + n_weak, "critical")
+    assert ei.value.domain == "kv"
+    assert "weak" in str(ei.value)
+    # ...but the same footprint is admissible for a tolerant tier if it
+    # fits the whole pool
+    assert pool.free_pages == 16 - len(strict) - len(tolerant)
+
+
+def test_pool_free_realloc_deterministic_and_double_free_raises():
+    pool = _pool()
+    a = pool.alloc(4, "cheap")
+    b = pool.alloc(3, "critical")
+    pool.free(a)
+    a2 = pool.alloc(4, "cheap")
+    np.testing.assert_array_equal(np.sort(a), np.sort(a2))
+    pool.free(a2)
+    with pytest.raises(ValueError, match="double free"):
+        pool.free(a2)
+    with pytest.raises(ValueError, match="double free"):
+        pool.free(np.asarray([pool.scratch_id]))  # never handed out
+    pool.free(b)
+    assert pool.free_pages == 16
+
+
+def test_pool_request_words_match_standalone_cache():
+    pool = _pool()
+    from repro.models.base import spec_avals
+    avals = spec_avals(BUNDLE.module.cache_specs(CFG, 1, 32))
+    n_words = sum(int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize // 4
+                  for a in jax.tree_util.tree_leaves(avals))
+    assert pool.request_words == n_words
+
+
+def test_pool_layout_errors_are_typed_and_actionable():
+    # page count not dividing the ring length
+    with pytest.raises(PagedLayoutError, match="divide"):
+        _pool(page_slots=7)
+    # page words not dividing the arena block size (kv slot = 8 words,
+    # 3 slots -> 24-word pages; 4096 % 24 != 0)
+    with pytest.raises(PagedLayoutError, match="block size"):
+        _pool(page_slots=3, max_len=24)
+    # non-uniform ring lengths (sliding-window layers) are rejected
+    cfg = dataclasses.replace(CFG, pattern=("local", "global"), window=8)
+    with pytest.raises(PagedLayoutError, match="uniform"):
+        _pool(cfg=cfg)
+    # ECC pools need even per-slot word counts (codeword pairs):
+    # 1 kv-head x head_dim 2 = one bf16 word per slot
+    cfg = dataclasses.replace(CFG, n_kv_heads=1, head_dim=2, n_heads=3)
+    with pytest.raises(PagedLayoutError, match="ECC"):
+        _pool(cfg=cfg, plan=_plan(ecc=True))
+    # unpaged families are rejected up front
+    from repro.models import moe
+    with pytest.raises(ValueError, match="paged"):
+        PagePool(moe, CFG, max_len=32, page_slots=8, num_pages=4,
+                 plan=_plan())

@@ -1,0 +1,239 @@
+"""Continuous-batching scheduler: the acceptance contract.
+
+Overlapping mixed-tier requests served through the paged KV cache are
+token-for-token identical to running each request *alone* through
+PR 3's ``generate()`` on the same physical words (the request's page
+placement), greedy and sampled, in every scheduler injection mode,
+with and without ECC -- while the decode step compiles exactly once
+and its pallas-launch count stays flat as requests are admitted and
+retired.  Capacity exhaustion is backpressure, not a crash; the legacy
+``rewrite`` oracle is rejected loudly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as arena
+from repro.core.domains import CapacityError, MemoryDomain
+from repro.core.hbm import VCU128
+from repro.models.base import get_arch
+from repro.serving.engine import ServeConfig, generate
+from repro.serving.scheduler import ContinuousBatchingScheduler, Request
+from repro.training import trainer
+from repro.training.undervolt import UndervoltPlan
+
+BUNDLE = get_arch("llama3.2-3b")
+CFG = BUNDLE.reduced
+PARAMS = trainer.init_state(BUNDLE, CFG, jax.random.PRNGKey(0))["params"]
+ALL_PCS = tuple(range(VCU128.num_pcs))
+
+_R = np.random.RandomState(7)
+# (rid, prompt, max_new_tokens, tier, key seed): three overlapping
+# requests with distinct prompt lengths, lifetimes and tiers
+REQS = [
+    ("a", _R.randint(0, CFG.vocab, (5,)), 4, "cheap", 11),
+    ("b", _R.randint(0, CFG.vocab, (9,)), 6, "critical", 22),
+    ("c", _R.randint(0, CFG.vocab, (12,)), 8, "cheap", 33),
+]
+
+
+def _plan(v, ecc=False):
+    return UndervoltPlan(
+        domains={"kv": MemoryDomain("kv", v, ALL_PCS, ecc=ecc)},
+        policy={"kv_cache": "kv"}, geometry=VCU128)
+
+
+def _sc(mode, temperature=0.0, plan=None, method="bitwise", **kw):
+    return ServeConfig(max_len=32, max_new_tokens=4,
+                       temperature=temperature, undervolt=plan,
+                       kv_injection=mode, kv_method=method, **kw)
+
+
+def _serve(sc, reqs=REQS, **kw):
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("num_pages", 16)
+    kw.setdefault("page_slots", 8)
+    sched = ContinuousBatchingScheduler(BUNDLE, CFG, PARAMS, sc, **kw)
+    for rid, toks, n, tier, seed in reqs:
+        sched.submit(Request(rid=rid, tokens=toks, max_new_tokens=n,
+                             tier=tier, key=jax.random.PRNGKey(seed)))
+    return sched, sched.run()
+
+
+def _reference(sc, res, reqs=REQS):
+    """Each request alone through PR 3's generate() on its own pages."""
+    out = {}
+    for rid, toks, n, tier, seed in reqs:
+        out[rid] = np.asarray(generate(
+            BUNDLE, CFG, PARAMS, {"tokens": jnp.asarray(toks[None])},
+            dataclasses.replace(sc, max_new_tokens=n),
+            key=jax.random.PRNGKey(seed),
+            kv_placement=res[rid].placement))
+    return out
+
+
+@pytest.mark.parametrize("mode,temperature",
+                         [("read", 0.0), ("read", 0.7), ("write", 0.0)])
+def test_scheduler_matches_standalone_generate(mode, temperature):
+    """The tentpole contract, deep in the collapse regime: overlapped
+    mixed-tier serving == per-request standalone decode, bit for bit."""
+    sc = _sc(mode, temperature, _plan(0.86))
+    sched, res = _serve(sc)
+    assert sched.peak_active >= 3, sched.stats
+    assert len(sched.traces) == 1, sched.stats
+    refs = _reference(sc, res)
+    for rid, toks, n, tier, seed in REQS:
+        np.testing.assert_array_equal(refs[rid], res[rid].tokens,
+                                      err_msg=f"{rid} {mode}")
+    # the undervolted cache really faults: clean serving disagrees
+    clean_sched, clean = _serve(_sc(mode, temperature, None))
+    assert any((clean[rid].tokens != res[rid].tokens).any()
+               for rid, *_ in REQS)
+
+
+@pytest.mark.parametrize("mode", ["read", "write"])
+def test_scheduler_matches_standalone_ecc(mode):
+    sc = _sc(mode, 0.0, _plan(0.86, ecc=True), method="word")
+    sched, res = _serve(sc)
+    refs = _reference(sc, res)
+    for rid, *_ in REQS:
+        np.testing.assert_array_equal(refs[rid], res[rid].tokens,
+                                      err_msg=rid)
+
+
+def test_scheduler_matches_standalone_word_regime():
+    """~1e-4 rates (word path): faults are sparse enough that tokens
+    survive -- the equality is then a statement about live numerics,
+    not about mutually NaN-ed logits."""
+    sc = _sc("read", 0.0, _plan(0.88), method="word")
+    sched, res = _serve(sc)
+    refs = _reference(sc, res)
+    for rid, *_ in REQS:
+        np.testing.assert_array_equal(refs[rid], res[rid].tokens,
+                                      err_msg=rid)
+
+
+def test_clean_pool_matches_clean_generate():
+    """Without an undervolt plan the paged path is pure serving
+    mechanics and must reproduce plain generate()."""
+    sc = _sc("auto", 0.0, None)
+    sched, res = _serve(sc)
+    for rid, toks, n, tier, seed in REQS:
+        ref = np.asarray(generate(
+            BUNDLE, CFG, PARAMS, {"tokens": jnp.asarray(toks[None])},
+            dataclasses.replace(sc, max_new_tokens=n),
+            key=jax.random.PRNGKey(seed)))
+        np.testing.assert_array_equal(ref, res[rid].tokens, err_msg=rid)
+
+
+def test_churn_backpressure_and_page_recycling():
+    """Six requests through two slots and eight pages: admission waits
+    for capacity (never crashes), retired pages are recycled for new
+    tenants, every request still matches its standalone replay, and
+    the whole churn rides ONE compiled decode step."""
+    reqs = [(i, _R.randint(0, CFG.vocab, (4 + i,)), 3 + (i % 3),
+             "cheap" if i % 2 else "hedged", 7 * i + 1)
+            for i in range(6)]
+    sc = _sc("write", 0.0, _plan(0.86))
+    sched, res = _serve(sc, reqs=reqs, num_slots=2, num_pages=8)
+    assert len(res) == 6
+    assert sched.peak_active == 2 and sched.admitted == 6
+    assert len(sched.traces) == 1, sched.stats
+    assert sched.pool.free_pages == 8
+    refs = _reference(sc, res, reqs=reqs)
+    for rid, *_ in reqs:
+        np.testing.assert_array_equal(refs[rid], res[rid].tokens,
+                                      err_msg=str(rid))
+
+
+def test_step_pallas_launch_budget_flat():
+    """One fused paged-attention launch per decode step -- independent
+    of pool size, slot count and injection mode (write-path injection
+    is pure jnp gather/scatter)."""
+    counts = {}
+    for mode in ("read", "write"):
+        for num_pages, num_slots in ((8, 2), (24, 6)):
+            sc = _sc(mode, 0.0, _plan(0.88), method="word")
+            sched = ContinuousBatchingScheduler(
+                BUNDLE, CFG, PARAMS, sc, num_slots=num_slots,
+                num_pages=num_pages, page_slots=8)
+            jaxpr = jax.make_jaxpr(sched._step_fn)(
+                PARAMS, sched.state, jnp.float32(0.88))
+            counts[(mode, num_pages)] = arena.count_pallas_calls(
+                jaxpr.jaxpr)
+    assert set(counts.values()) == {1}, counts
+
+
+def test_impossible_request_raises_capacity_error():
+    sc = _sc("read", 0.0, _plan(0.88), method="word")
+    sched = ContinuousBatchingScheduler(
+        BUNDLE, CFG, PARAMS, sc, num_slots=2, num_pages=2, page_slots=8)
+    sched.submit(Request("x", REQS[0][1], 2, "cheap"))
+    with pytest.raises(CapacityError):
+        sched.run()                   # needs 4 pages, pool has 2
+
+
+def test_zero_token_requests_rejected_at_submit():
+    """Degenerate requests are rejected before any pages are allocated
+    (an admission-time failure would leak the request's pool pages)."""
+    sc = _sc("read", 0.0, _plan(0.88), method="word")
+    sched = ContinuousBatchingScheduler(
+        BUNDLE, CFG, PARAMS, sc, num_slots=2, num_pages=8, page_slots=8)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        sched.submit(Request("z", REQS[0][1], 0, "cheap"))
+    assert not sched.queue and sched.pool.free_pages == 8
+
+
+def test_rewrite_mode_rejected_loudly():
+    sc = _sc("rewrite", 0.0, _plan(0.88))
+    with pytest.raises(ValueError, match="rewrite"):
+        ContinuousBatchingScheduler(BUNDLE, CFG, PARAMS, sc,
+                                    num_slots=2, num_pages=8,
+                                    page_slots=8)
+    # the standalone engine rejects rewrite on paged placements too
+    sc_ok = _sc("read", 0.0, _plan(0.88), method="word")
+    _, res = _serve(sc_ok, reqs=REQS[:1], num_slots=1, num_pages=4)
+    with pytest.raises(ValueError, match="rewrite"):
+        generate(BUNDLE, CFG, PARAMS,
+                 {"tokens": jnp.asarray(REQS[0][1][None])},
+                 dataclasses.replace(_sc("rewrite", 0.0, _plan(0.88)),
+                                     max_new_tokens=4),
+                 kv_placement=res["a"].placement)
+    # a placement exported for one request cannot address a batch-2
+    # cache: mis-sized overrides raise instead of silently mis-aiming
+    # the fault injection
+    with pytest.raises(ValueError, match="does not fit"):
+        generate(BUNDLE, CFG, PARAMS,
+                 {"tokens": jnp.zeros((2, 4), jnp.int32)},
+                 dataclasses.replace(sc_ok, max_new_tokens=1),
+                 kv_placement=res["a"].placement)
+
+
+def test_governor_replans_voltage_at_admission():
+    plan = _plan(0.91)
+    gov = plan.make_governor("kv", mode="rate", tolerable_rate=1e-3,
+                             v_lo=0.87)
+    sc = ServeConfig(max_len=32, max_new_tokens=3, undervolt=plan,
+                     governor=gov, kv_injection="read",
+                     kv_method="bitwise")
+    sched, res = _serve(sc, reqs=[(r, t, 3, "cheap", s)
+                                  for r, t, n, _, s in REQS])
+    assert len(res) == 3
+    # the governor walked the domain off its configured voltage, and
+    # the (traced-voltage) step still compiled exactly once
+    assert sched.stats["voltage"] != pytest.approx(0.91)
+    assert len(sched.traces) == 1, sched.stats
+
+    with pytest.raises(ValueError, match="kv_method='auto'"):
+        ContinuousBatchingScheduler(
+            BUNDLE, CFG, PARAMS,
+            dataclasses.replace(sc, kv_method="auto"),
+            num_slots=2, num_pages=8, page_slots=8)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        ContinuousBatchingScheduler(
+            BUNDLE, CFG, PARAMS,
+            dataclasses.replace(sc, kv_voltage=0.9),
+            num_slots=2, num_pages=8, page_slots=8)
