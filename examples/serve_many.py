@@ -1,12 +1,18 @@
-"""Serving at scale: a mixed-tier request stream through the
-continuous-batching scheduler.
+"""Serving at scale: a mixed-tier request stream with a shared system
+prompt through the continuous-batching scheduler.
 
 A stream of requests with different prompts, generation lengths and
 criticality tiers is pushed through one scheduler: strict-tier requests
 get weak-row-free pages, tolerant requests soak up the weak pages first,
 the admission governor walks the KV-domain voltage along the
-power/reliability frontier as load changes, and every request's decode
-rides ONE compiled step (watch ``decode_traces`` stay 1).
+power/reliability frontier as load changes, and every request --
+prompt prefill included, chunked through the same program -- rides ONE
+compiled step (watch ``decode_traces`` stay 1).
+
+Half the stream opens with the same system prompt: after the first
+tenant publishes it, later tenants map the cached prefix pages
+read-only (copy-on-write) instead of recomputing and re-storing it --
+watch ``pages_shared`` and the flat ``ttft`` of sharing tenants.
 
   PYTHONPATH=src python examples/serve_many.py
 """
@@ -35,11 +41,13 @@ def main():
                                   tolerable_rate=1e-3, v_lo=0.87)
     sc = ServeConfig(max_len=64, max_new_tokens=8, undervolt=plan,
                      governor=governor, kv_injection="read",
-                     kv_method="bitwise")
+                     kv_method="bitwise", prefill_chunk=8,
+                     share_prefix=True)
     sched = ContinuousBatchingScheduler(
         bundle, cfg, params, sc, num_slots=4, num_pages=40, page_slots=8)
 
     rng = np.random.RandomState(0)
+    system = rng.randint(0, cfg.vocab, (19,))   # shared system prompt
     tiers = ["cheap", "critical", "cheap", "hedged", "cheap", "cheap",
              "critical", "cheap"]
     print(f"pool: {sched.pool.free_pages} pages "
@@ -47,8 +55,10 @@ def main():
           f"{len(sched.pool._strong)} weak-free), "
           f"{sched.pool.n_logical_pages} pages/request")
     for i, tier in enumerate(tiers):
+        user = rng.randint(0, cfg.vocab, (4 + i,))
+        toks = np.concatenate([system, user]) if i % 2 else user
         sched.submit(Request(
-            rid=f"req{i}", tokens=rng.randint(0, cfg.vocab, (6 + i,)),
+            rid=f"req{i}", tokens=toks,
             max_new_tokens=4 + 2 * (i % 3), tier=tier,
             key=jax.random.PRNGKey(i)))
 
@@ -58,10 +68,13 @@ def main():
         weak = sum(1 for p in r.page_ids
                    if int(p) in sched.pool._weak_set)
         print(f"req{i} [{tier:8s}] v={r.voltage:.2f} "
-              f"pages={r.page_ids.tolist()} ({weak} weak) "
+              f"pages={r.page_ids.tolist()} ({weak} weak, "
+              f"{r.pages_shared} shared) ttft={r.ttft_steps} "
               f"tokens={r.tokens[0].tolist()}")
     print("stats:", sched.stats)
     assert sched.stats["decode_traces"] == 1
+    shared = [results[f"req{i}"].pages_shared for i in range(8) if i % 2]
+    assert any(s > 0 for s in shared[1:]), shared
 
 
 if __name__ == "__main__":

@@ -92,13 +92,18 @@ class CriticalityTier:
         return rate <= self.max_rate
 
 
-# The default tier ladder, strictest first.  ``critical`` additionally
-# dodges weak rows so it stays clean deeper than ``safe``; ``hedged``
+# The default tier ladder, strictest first.  ``shared_prefix`` is the
+# serving pool's tier for copy-on-write shared prompt pages: one
+# corrupted shared page poisons every tenant mapping it, so shared
+# data gets the strictest placement there is (weak-row-free extents,
+# handed out most-reliable-first).  ``critical`` additionally dodges
+# weak rows so it stays clean deeper than ``safe``; ``hedged``
 # tolerates ppm-level faults on weak-row-free extents; ``cheap`` is for
 # fault-tolerant bulk data (KV cache, activations); ``disposable``
 # matches the paper's "0% to 50% fault rate" deep-undervolt example.
 TIERS: Dict[str, CriticalityTier] = {
     t.name: t for t in (
+        CriticalityTier("shared_prefix", 0.0, avoid_weak_rows=True),
         CriticalityTier("critical", 0.0, avoid_weak_rows=True),
         CriticalityTier("safe", 0.0),
         CriticalityTier("hedged", 1e-6, avoid_weak_rows=True),

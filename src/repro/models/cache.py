@@ -66,27 +66,41 @@ def ring_update(cache: Dict[str, jax.Array], new: Dict[str, jax.Array],
 
 def paged_update(cache: Dict[str, jax.Array], new: Dict[str, jax.Array],
                  pos: jax.Array, page_table: jax.Array, length: int,
-                 page_slots: int) -> Dict[str, jax.Array]:
-    """Paged twin of :func:`ring_update`: one decode token per serving
+                 page_slots: int, wstart: jax.Array = None,
+                 scratch_id: int = None) -> Dict[str, jax.Array]:
+    """Paged twin of :func:`ring_update`: a chunk of tokens per serving
     slot, scattered into a shared page pool.
 
     ``cache`` holds pool buffers with the *page* axis at dim 0 and the
     within-page slot axis at dim 1 (``pos``: (num_pages, page_slots);
     values: (num_pages, page_slots, ...)).  ``new`` entries are
-    (S, 1, ...) per-slot tokens, ``pos`` is the (S,) or (S, 1) absolute
-    position per serving slot, and ``page_table`` (S, length//page_slots)
-    maps each slot's logical ring page to its physical pool page.  Slot
-    for position p is p % length, exactly like the contiguous ring --
-    inactive serving slots' page-table rows point at the pool's scratch
-    page, so their writes land in the sink.
+    (S, C, ...) per-slot token chunks (decode steps use C=1), ``pos``
+    is the (S,) or (S, C) absolute position per token, and
+    ``page_table`` (S, length//page_slots) maps each slot's logical
+    ring page to its physical pool page.  Slot for position p is
+    p % length, exactly like the contiguous ring -- inactive serving
+    slots' page-table rows point at the pool's scratch page, so their
+    writes land in the sink.
+
+    Tokens whose position is negative (chunk padding past the prompt)
+    or below ``wstart`` (per-slot write floor: positions already held
+    by copy-on-write shared prefix pages must never be rewritten) are
+    redirected to the ``scratch_id`` sink page instead of written.
     """
-    qp = jnp.reshape(pos, (-1,)).astype(jnp.int32)
-    slot = qp % length
+    qp = pos.astype(jnp.int32)
+    if qp.ndim == 1:
+        qp = qp[:, None]
+    valid = qp >= 0
+    if wstart is not None:
+        valid &= qp >= jnp.reshape(wstart, (-1, 1)).astype(jnp.int32)
+    slot = jnp.where(valid, qp, 0) % length
     lp = slot // page_slots
-    row = slot % page_slots
-    pid = jnp.take_along_axis(page_table, lp[:, None], axis=1)[:, 0]
+    row = jnp.where(valid, slot % page_slots, 0)
+    pid = jnp.take_along_axis(page_table, lp, axis=1)
+    if scratch_id is not None:
+        pid = jnp.where(valid, pid, scratch_id)
     out = {}
     for k, arr in new.items():
-        out[k] = cache[k].at[pid, row].set(arr[:, 0])
+        out[k] = cache[k].at[pid, row].set(arr[:, :qp.shape[1]])
     out["pos"] = cache["pos"].at[pid, row].set(qp)
     return out

@@ -198,32 +198,64 @@ def forward_train(params, batch, cfg: ArchConfig, dist=None):
     return loss, {"loss": loss}
 
 
-def prefill(params, batch, cfg: ArchConfig, max_len: int, dist=None):
+def prefill(params, batch, cfg: ArchConfig, max_len: int, dist=None,
+            prompt_len=None):
+    """``prompt_len`` (traced int32, <= tokens.shape[1]): the real
+    prompt length when ``tokens`` is padded to a length bucket.  Pad
+    tokens sit at positions >= prompt_len, so real queries mask them
+    causally and the real rows' numerics are bit-identical to an
+    unpadded prefill; the cache rows the padding wrote are reset to
+    the init state (k/v=0, pos=-1) and logits are taken at column
+    prompt_len - 1 instead of -1.  Requires uniform full-length caches
+    (see ``SUPPORTS_PADDED_PREFILL``)."""
     tokens = batch["tokens"]
     b, s = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     cache = C.init_cache(cache_specs(cfg, b, max_len))
     x = L.embed(tokens, params["embed"])
     x, cache = _run_stack(cfg, params, x, positions, cache, "prefill")
-    logits = L.unembed(x[:, -1:], params["unembed"])
+    if prompt_len is None:
+        logits = L.unembed(x[:, -1:], params["unembed"])
+        return logits[:, 0], cache
+    plen = jnp.asarray(prompt_len, jnp.int32)
+    last = jax.lax.dynamic_index_in_dim(x, plen - 1, axis=1,
+                                        keepdims=True)
+    logits = L.unembed(last, params["unembed"])
+
+    def scrub(leaf):
+        ln = leaf["pos"].shape[-1]
+        pad = jnp.arange(ln, dtype=jnp.int32) >= plen
+        out = dict(leaf)
+        out["pos"] = jnp.where(pad, -1, leaf["pos"])
+        for k in ("k", "v"):
+            mask = pad.reshape((1,) * (leaf[k].ndim - 3) + (ln, 1, 1))
+            out[k] = jnp.where(mask, jnp.zeros((), leaf[k].dtype), leaf[k])
+        return out
+
+    cache = jax.tree_util.tree_map(
+        scrub, cache,
+        is_leaf=lambda t: isinstance(t, dict) and "pos" in t)
     return logits[:, 0], cache
 
 
 def decode_step(params, cache, batch, pos, cfg: ArchConfig, dist=None,
                 fault_ctx=None):
-    """batch["tokens"]: (B, 1); pos: scalar int32 absolute position.
+    """batch["tokens"]: (B, C); pos: scalar int32 absolute position
+    (C=1, returns (B, vocab) logits) or a (B, C) per-token position
+    array (mixed prefill-chunk/decode serving step, returns full
+    (B, C, vocab) logits -- the caller picks each slot's sample column).
 
     ``fault_ctx``: optional read-path injection context -- attention
     layers it covers corrupt their K/V tiles at load time instead of
     requiring the cache to be re-injected between steps."""
     tokens = batch["tokens"]
-    b = tokens.shape[0]
-    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    b, c = tokens.shape
+    positions = jnp.broadcast_to(pos, (b, c)).astype(jnp.int32)
     x = L.embed(tokens, params["embed"])
     x, cache = _run_stack(cfg, params, x, positions, cache, "decode",
                           pos=pos, fault_ctx=fault_ctx)
     logits = L.unembed(x, params["unembed"])
-    return logits[:, 0], cache
+    return (logits[:, 0] if c == 1 else logits), cache
 
 
 # The serving engine's fused read-path injection understands this
@@ -233,3 +265,8 @@ SUPPORTS_READ_PATH = True
 # decode step threads a paged ctx through attn_mlp_apply (per-slot
 # position vectors, pool-page ring writes, batched paged attention).
 SUPPORTS_PAGED = True
+# prefill() accepts a traced ``prompt_len`` over padded token buckets
+# (positions >= prompt_len are causally dead and scrubbed from the
+# cache), letting the serving engine compile O(log max_len) prefill
+# buckets instead of one program per distinct prompt length.
+SUPPORTS_PADDED_PREFILL = True

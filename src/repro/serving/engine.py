@@ -82,6 +82,14 @@ class ServeConfig:
     decode: str = "scan"
     # Where faults are applied: see the module docstring.
     kv_injection: str = "auto"
+    # Continuous-batching scheduler knobs (ignored by generate()):
+    # prompt tokens consumed per mixed step for prefilling slots --
+    # chunked prefill rides the ONE compiled donated step instead of a
+    # per-prompt-length jitted prefill.
+    prefill_chunk: int = 8
+    # Reliability-pinned copy-on-write prefix sharing: tenants with a
+    # common prompt prefix map the same physical pages read-only.
+    share_prefix: bool = False
 
 
 def _kv_placement(bundle, cfg, batch_size, sc):
@@ -98,6 +106,79 @@ def _kv_placement(bundle, cfg, batch_size, sc):
 def _static_kv_voltage(v):
     """float(v) for concrete scalars, None for traced values."""
     return _static_value(v)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+class _BucketedPrefill:
+    """Memoized jitted prefill over power-of-two prompt-length buckets.
+
+    ``jax.jit`` re-specializes on every distinct prompt length, so a
+    serving front door compiling prefill per request pays one XLA
+    compile per length seen.  Families advertising
+    ``SUPPORTS_PADDED_PREFILL`` take a traced ``prompt_len`` over a
+    zero-padded token buffer instead: prompts are padded up to the next
+    power of two (capped at ``max_len``), so the compile count is
+    O(log max_len) while logits and cache stay bit-identical to the
+    unpadded prefill (pad positions are causally dead and scrubbed).
+    ``traces`` counts actual retraces -- asserted in
+    tests/test_prefill_buckets.py.
+    """
+
+    def __init__(self, module, cfg, max_len: int, dist=None):
+        self.module = module
+        self.cfg = cfg
+        self.max_len = int(max_len)
+        self.dist = dist
+        self.traces: list = []
+        # Padding rewrites ring rows at positions >= prompt_len, which
+        # is only sound when every cache ring is full-length (window
+        # caches rotate once the padded length exceeds the window).
+        specs = module.cache_specs(cfg, 1, max_len)
+        flat = jax.tree_util.tree_leaves(spec_avals(specs))
+        axes = jax.tree_util.tree_leaves(cache_slot_axes(specs))
+        self.uniform = all(a.shape[ax] == self.max_len
+                           for a, ax in zip(flat, axes) if ax >= 0)
+        self._padded = jax.jit(self._traced)
+        self._exact = jax.jit(
+            lambda p, bt: module.prefill(p, bt, cfg, max_len, dist))
+
+    def _traced(self, params, batch, plen):
+        self.traces.append(1)
+        return self.module.prefill(params, batch, self.cfg, self.max_len,
+                                   self.dist, prompt_len=plen)
+
+    def __call__(self, params, batch):
+        tokens = batch["tokens"]
+        s = tokens.shape[1]
+        if not self.uniform or s > self.max_len:
+            return self._exact(params, batch)
+        bucket = min(_next_pow2(s), self.max_len)
+        padded = dict(batch)
+        padded["tokens"] = jnp.pad(jnp.asarray(tokens),
+                                   ((0, 0), (0, bucket - s)))
+        return self._padded(params, padded, jnp.int32(s))
+
+
+_PREFILL_BUCKETS: Dict[Any, Any] = {}
+
+
+def bucketed_prefill(module, cfg, max_len: int, dist=None):
+    """The process-wide bucketed-prefill entry for one (module, cfg,
+    max_len) serving shape, or None when the family cannot pad.
+    Sharing the instance across ``generate()`` calls is what bounds the
+    legacy path's compile count."""
+    if not getattr(module, "SUPPORTS_PADDED_PREFILL", False):
+        return None
+    key = (module, cfg, int(max_len),
+           id(dist) if dist is not None else None)
+    bp = _PREFILL_BUCKETS.get(key)
+    if bp is None:
+        bp = _PREFILL_BUCKETS[key] = _BucketedPrefill(module, cfg,
+                                                      max_len, dist)
+    return bp
 
 
 def sample_tokens(logits, key, temperature: float):
@@ -373,8 +454,10 @@ def generate(bundle: ArchBundle, cfg: ArchConfig, params, batch: Dict,
     varr = (jnp.asarray(eff_v, jnp.float32) if eng.active
             else jnp.float32(0.0))
 
-    prefill = jax.jit(lambda p, bt: module.prefill(
-        p, bt, cfg, sc.max_len, dist))
+    prefill = bucketed_prefill(module, cfg, sc.max_len, dist)
+    if prefill is None:
+        prefill = jax.jit(lambda p, bt: module.prefill(
+            p, bt, cfg, sc.max_len, dist))
     logits, cache = prefill(params, batch)
     pos0 = s + (cfg.enc_len if cfg.family == "vlm" else 0)
 

@@ -65,6 +65,15 @@ class PagedLayoutError(ValueError):
     callers can catch it generically."""
 
 
+class PageSharingError(ValueError):
+    """A refcounted-page protocol violation: releasing a shared page a
+    holder does not hold (double release), retaining or COW-forking a
+    page that is not shared, re-sharing an already-shared page, or
+    ``free()``-ing a page that still has holders.  Typed so the
+    scheduler's copy-on-write bookkeeping fails loudly instead of
+    silently corrupting a page another tenant still maps."""
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class PagedLeafPlacement:
     """Page-granular placement of one leaf of a request's *standalone*
@@ -200,6 +209,12 @@ class PagePool:
         self._weak_set = set(self._weak)
         self._rate = rate
         self._owned: set = set()
+        # Copy-on-write prefix sharing: refcounted holders per shared
+        # page, plus the content-hash prefix cache (prompt-prefix bytes
+        # -> the shared pages storing it, insertion-ordered for LRU
+        # eviction under capacity pressure).
+        self._shared: Dict[int, set] = {}
+        self._prefix: Dict[bytes, np.ndarray] = {}
 
     # ---- static layout ---------------------------------------------------
     def _build_leaves(self) -> Tuple[_PoolLeaf, ...]:
@@ -351,18 +366,140 @@ class PagePool:
         return np.asarray(taken, np.int32)
 
     def free(self, page_ids) -> None:
-        """Return pages to the pool (double-free raises ValueError)."""
+        """Return pages to the pool (double-free raises ValueError;
+        freeing a page that still has sharing holders raises
+        PageSharingError -- shared pages retire through release())."""
         ids = [int(p) for p in np.asarray(page_ids).reshape(-1)]
+        held = [p for p in ids if p in self._shared]
+        if held:
+            raise PageSharingError(
+                f"free() of shared pages {sorted(held)[:4]}: pages with "
+                "live holders must be released per holder, not freed")
         bad = [p for p in ids if p not in self._owned]
         if bad or len(set(ids)) != len(ids):
             raise ValueError(
                 f"double free of pool pages {sorted(set(bad) or set(ids))[:4]}: "
                 "not currently allocated")
         for p in ids:
-            self._owned.discard(p)
-            lst = self._weak if p in self._weak_set else self._strong
-            keys = [(self._rate[q], q) for q in lst]
-            lst.insert(bisect.bisect_left(keys, (self._rate[p], p)), p)
+            self._reinsert(p)
+
+    def _reinsert(self, p: int) -> None:
+        self._owned.discard(p)
+        lst = self._weak if p in self._weak_set else self._strong
+        keys = [(self._rate[q], q) for q in lst]
+        lst.insert(bisect.bisect_left(keys, (self._rate[p], p)), p)
+
+    # ---- copy-on-write prefix sharing ------------------------------------
+    @property
+    def shared_pages(self) -> int:
+        return len(self._shared)
+
+    @property
+    def prefix_entries(self) -> int:
+        return len(self._prefix)
+
+    def is_shared(self, pid) -> bool:
+        return int(pid) in self._shared
+
+    def share(self, page_ids, holder) -> None:
+        """Convert privately-owned pages into shared pages held by
+        ``holder`` (refcount 1).  Re-sharing raises PageSharingError."""
+        for p in (int(q) for q in np.asarray(page_ids).reshape(-1)):
+            if p not in self._owned:
+                raise PageSharingError(
+                    f"share of page {p}: not currently allocated")
+            if p in self._shared:
+                raise PageSharingError(
+                    f"share of page {p}: already shared (holders="
+                    f"{len(self._shared[p])}); use retain()")
+            self._shared[p] = {holder}
+
+    def retain(self, page_ids, holder) -> None:
+        """Add ``holder`` to shared pages' holder sets."""
+        pids = [int(q) for q in np.asarray(page_ids).reshape(-1)]
+        for p in pids:
+            if p not in self._shared:
+                raise PageSharingError(
+                    f"retain of page {p}: not a shared page")
+            if holder in self._shared[p]:
+                raise PageSharingError(
+                    f"retain of page {p}: holder {holder!r} already "
+                    "holds it")
+        for p in pids:
+            self._shared[p].add(holder)
+
+    def release(self, page_ids, holder) -> None:
+        """Drop ``holder``'s reference; a page whose holder set empties
+        returns to the free lists (reliability-ordered recycling).
+        Releasing a page the holder does not hold -- including a second
+        release from the same request -- raises PageSharingError."""
+        pids = [int(q) for q in np.asarray(page_ids).reshape(-1)]
+        for p in pids:
+            if p not in self._shared or holder not in self._shared[p]:
+                raise PageSharingError(
+                    f"double release of page {p} by holder {holder!r}: "
+                    "not currently held")
+        for p in pids:
+            self._shared[p].discard(holder)
+            if not self._shared[p]:
+                del self._shared[p]
+                self._reinsert(p)
+
+    def cow_fork(self, src_pid, tier="cheap") -> int:
+        """Allocate the private target page for copy-on-write-forking
+        the shared page ``src_pid`` (first write to a partially-filled
+        shared boundary page).  Forking an unshared page is a protocol
+        violation and raises PageSharingError; the device-side row copy
+        is :meth:`PagedKVCache.reset_and_fork`."""
+        src = int(np.asarray(src_pid).reshape(()))
+        if src not in self._shared:
+            raise PageSharingError(
+                f"cow_fork of page {src}: not a shared page (private "
+                "pages are written in place, never forked)")
+        return int(self.alloc(1, tier)[0])
+
+    def match_prefix(self, tokens: np.ndarray) -> Tuple[int, np.ndarray]:
+        """Longest cached prefix of ``tokens``: the full prompt first
+        (partial boundary page -> COW fork), then page-aligned prefixes
+        descending.  Returns (matched_len, shared page ids covering
+        ceil(matched/page_slots) logical pages), or (0, empty)."""
+        toks = np.ascontiguousarray(tokens, np.int32).reshape(-1)
+        n = toks.shape[0]
+        lengths = [n] + [k * self.page_slots
+                         for k in range(n // self.page_slots, 0, -1)
+                         if k * self.page_slots != n]
+        for ln in lengths:
+            pids = self._prefix.get(toks[:ln].tobytes())
+            if pids is not None:
+                return ln, pids.copy()
+        return 0, np.zeros((0,), np.int32)
+
+    def register_prefix(self, tokens: np.ndarray, page_ids) -> bool:
+        """Publish ``page_ids`` as the shared storage of the prompt
+        prefix ``tokens``; each page gains the entry's cache holder, so
+        the prefix outlives its creating tenant until evicted.  Pages
+        must already be shared (the scheduler share()s a creator's own
+        pages at its prefill->decode transition).  Returns False when
+        the key is already cached."""
+        toks = np.ascontiguousarray(tokens, np.int32).reshape(-1)
+        key = toks.tobytes()
+        if key in self._prefix:
+            return False
+        pids = np.asarray(page_ids, np.int32).reshape(-1)
+        self.retain(pids, ("__prefix__", key))
+        self._prefix[key] = pids.copy()
+        return True
+
+    def evict_prefix(self) -> bool:
+        """Drop the least-recently-registered prefix entry, releasing
+        its cache holds (pages still mapped by live tenants survive via
+        their holders).  Returns False when the cache is empty."""
+        if not self._prefix:
+            return False
+        key = next(iter(self._prefix))
+        pids = self._prefix.pop(key)
+        self.release(pids, ("__prefix__", key))
+        return True
 
     # ---- exports ---------------------------------------------------------
     def request_placement(self, page_ids) -> Optional[RequestPlacement]:
@@ -458,6 +595,60 @@ class PagedServingCtx:
             inject=self.inject, interpret=self.interpret)
 
 
+@dataclasses.dataclass
+class MixedServingCtx(PagedServingCtx):
+    """Mixed prefill-chunk/decode step hook: one compiled step serves
+    slots in both phases.
+
+    Decode lanes (``dec``) behave exactly like :class:`PagedServingCtx`
+    on their first token column (fused paged kernel, read-path
+    injection).  Prefill lanes instead run *clean* chunked prefill
+    attention: K/V for positions < ``prefill_end`` are gathered from
+    the slot's pages (stored clean until the prefill->decode transition
+    injects them, so the numerics are bit-identical to standalone
+    prefill) with arithmetic key positions -- never the stored ``pos``
+    bookkeeping, which is write-path corrupt on shared prefix pages.
+    Writes below ``wstart`` (positions held by copy-on-write shared
+    pages) are redirected to the scratch sink.
+    """
+
+    dec: Optional[jax.Array] = None           # (S,) bool
+    wstart: Optional[jax.Array] = None        # (S,) int32
+    prefill_end: Optional[jax.Array] = None   # (S,) int32
+    scratch_id: int = 0
+
+    def update(self, slot_key: str, cache, new, pos):
+        from repro.models.cache import paged_update
+        return paged_update(cache, new, pos, self.page_table,
+                            self.length, self.page_slots,
+                            wstart=self.wstart, scratch_id=self.scratch_id)
+
+    def attend(self, slot_key: str, layer_idx, q, cache, *, q_pos,
+               causal: bool, window: int, scale=None):
+        from repro.models import layers as mlayers
+        qp = jnp.asarray(q_pos, jnp.int32)
+        s = q.shape[0]
+        qp = jnp.broadcast_to(qp.reshape(s, -1), q.shape[:2])
+        dec_out = PagedServingCtx.attend(
+            self, slot_key, layer_idx, q[:, :1], cache,
+            q_pos=jnp.maximum(qp[:, 0], 0), causal=causal, window=window,
+            scale=scale)
+        gk = cache["k"][self.page_table]      # (S, n_lp, ps, KH, D)
+        gv = cache["v"][self.page_table]
+        gk = gk.reshape((s, self.length) + gk.shape[3:])
+        gv = gv.reshape((s, self.length) + gv.shape[3:])
+        kpos = jnp.broadcast_to(
+            jnp.arange(self.length, dtype=jnp.int32), (s, self.length))
+        kv_valid = kpos < self.prefill_end[:, None]
+        pref = mlayers.attention(q, gk, gv, q_positions=qp,
+                                 k_positions=kpos, causal=causal,
+                                 window=window, kv_valid=kv_valid,
+                                 softmax_scale=scale)
+        col0 = jnp.where(self.dec[:, None, None, None], dec_out,
+                         pref[:, :1])
+        return jnp.concatenate([col0, pref[:, 1:]], axis=1)
+
+
 class PagedKVCache:
     """Device-side data paths of one :class:`PagePool`.
 
@@ -496,7 +687,11 @@ class PagedKVCache:
 
     # ---- context ---------------------------------------------------------
     def make_ctx(self, page_table, voltage, *, method: str,
-                 inject: bool) -> PagedServingCtx:
+                 inject: bool, dec=None, wstart=None,
+                 prefill_end=None) -> PagedServingCtx:
+        """Decode-step context; passing the per-slot phase arrays
+        (``dec``/``wstart``/``prefill_end``) returns the mixed
+        chunked-prefill/decode variant instead."""
         p = self.pool
         entries: Dict[str, Dict[str, _PagedLeafEntry]] = {}
         if p.placement is not None:
@@ -518,13 +713,18 @@ class PagedKVCache:
                     base=jnp.zeros((nl, tp), jnp.uint32),
                     thr=jnp.zeros((nl, tp, NUM_THR_COLS), jnp.uint32))
             entries.setdefault(leaf.slot_key, {})[leaf.which] = e
-        return PagedServingCtx(
+        kw = dict(
             entries={k: _PagedSlotEntry(k=h["k"], v=h["v"])
                      for k, h in entries.items()},
             page_table=page_table, length=p.max_len,
             page_slots=p.page_slots, seed=(seed if seed is not None else 0),
             words_per_row_log2=wprl2, method=method, ecc=ecc,
             inject=inject, interpret=self.interpret)
+        if dec is not None:
+            return MixedServingCtx(dec=dec, wstart=wstart,
+                                   prefill_end=prefill_end,
+                                   scratch_id=p.scratch_id, **kw)
+        return PagedServingCtx(**kw)
 
     # ---- admission -------------------------------------------------------
     def scatter_request(self, tree, cache, page_ids):
@@ -543,6 +743,45 @@ class PagedKVCache:
             src = src.reshape((leaf.n_layers, p.n_logical_pages,
                                p.page_slots) + tail)
             self._store(tree, leaf, arr_l.at[:, pids].set(src))
+        return tree
+
+    def reset_and_fork(self, tree, page_ids, fork_src, fork_dst,
+                       fork_rows, fork_pos0):
+        """Chunked-prefill admission: reset ``page_ids`` to the init
+        state (stale-tenant scrub: pos -> -1, values -> 0), then
+        copy-on-write-fork the partially-filled shared boundary page
+        ``fork_src`` into the private page ``fork_dst``: rows below
+        ``fork_rows`` copy the shared page's K/V (clean by the sharing
+        protocol) with positions synthesized arithmetically from
+        ``fork_pos0`` (the stored ``pos`` of a shared page is its
+        creator's write-path corruption -- never copied), rows at or
+        above reset to init.  Shared entries of an admission's page
+        table are passed as the scratch id (resetting the scratch sink
+        is harmless), which keeps the traced shapes fixed; a disabled
+        fork points both ``fork_src`` and ``fork_dst`` at scratch."""
+        p = self.pool
+        tree = self._tree_copy(tree)
+        pids = jnp.asarray(page_ids, jnp.int32)
+        dst = jnp.asarray(fork_dst, jnp.int32)
+        rows = jnp.arange(p.page_slots, dtype=jnp.int32)
+        keep = rows < jnp.asarray(fork_rows, jnp.int32)
+        for leaf in p.leaves:
+            arr_l = self._leaf_arrays(tree, leaf)
+            if leaf.which == "pos":
+                arr_l = arr_l.at[:, pids].set(-1)
+                fp = jnp.where(keep,
+                               jnp.asarray(fork_pos0, jnp.int32) + rows, -1)
+                fork = jnp.broadcast_to(fp, (leaf.n_layers, p.page_slots))
+            else:
+                arr_l = arr_l.at[:, pids].set(0)
+                srcv = jax.lax.dynamic_index_in_dim(
+                    arr_l, jnp.asarray(fork_src, jnp.int32), axis=1,
+                    keepdims=False)                       # (nl, ps, ...)
+                mask = keep.reshape((1, p.page_slots)
+                                    + (1,) * (srcv.ndim - 2))
+                fork = jnp.where(mask, srcv, 0)
+            self._store(tree, leaf,
+                        arr_l.at[:, dst].set(fork.astype(arr_l.dtype)))
         return tree
 
     def inject_pages(self, tree, page_ids, voltage, *, method: str,

@@ -13,34 +13,49 @@ requests:
     :class:`~repro.core.domains.CapacityError` from the page pool -- or
     from the admission governor -- is *backpressure*: the request simply
     waits for pages to be retired, it never crashes the loop.
-  * prefill runs per request (batch 1, exactly the standalone prefill)
-    and is scattered into the request's pages; the post-prefill
-    injection pass corrupts those pages the same way the standalone
-    engine's ``init_inject`` would.
-  * the decode step is ONE jitted function over a fixed-capacity slot
-    array -- active mask, per-slot positions/tokens/keys, the page
-    table, and the donated pool -- so the compile count is flat in
-    traffic: requests of any mix of lengths and tiers ride the same
-    compiled step, and the per-step KV voltage is a traced scalar the
-    admission governor can re-plan at every admission without a
-    recompile.
-  * retirement frees the request's pages back to the pool (reliability-
-    ordered recycling), turning capacity reclaimed by tolerating weak
-    blocks directly into extra concurrent traffic.
+  * prefill is *chunked into the decode step*: each compiled step
+    consumes up to ``ServeConfig.prefill_chunk`` prompt tokens for
+    every prefilling slot (written through the paged path, attended
+    with clean gathered attention) while decoding slots advance one
+    token through the fused paged kernel.  There is no separate
+    prefill program, so the compile count is flat in prompt length
+    *and* traffic -- ONE jitted donated step serves any mix of phases,
+    lengths and tiers, and the per-step KV voltage stays a traced
+    scalar the admission governor can re-plan without a recompile.
+  * prompt prefixes are shared copy-on-write: an admitted prompt is
+    matched against the pool's content-hash prefix cache and maps the
+    longest page-aligned cached prefix read-only (per-page refcounts);
+    a partially-filled boundary page is forked onto a private page
+    before first write.  Pages that may become shared are allocated
+    under the strictest placement tier (``shared_prefix``: weak-free
+    blocks, most-reliable pseudo-channels first), because one
+    corrupted shared page would poison every tenant mapping it.
+  * retirement releases per-page references; pages whose holder sets
+    empty return to the pool (reliability-ordered recycling), turning
+    capacity reclaimed by tolerating weak blocks -- and by not storing
+    shared prefixes twice -- directly into extra concurrent traffic.
 
 Token-equivalence contract (asserted in tests/test_scheduler.py):
 every request's tokens are bit-identical to running it alone through
 PR 3's ``generate()`` with the request's page placement
 (:meth:`PagePool.request_placement`) -- greedy and sampled, read and
-write injection modes, with and without ECC.  The one exclusion is a
-*governor-driven* run whose voltage actually moves mid-request: the
-domain rail is global, so a re-plan triggered by a later admission
-also retunes the in-flight requests' thresholds, and a standalone
-replay (one constant ``kv_voltage``) cannot reproduce that trajectory
--- ``RequestResult.voltage`` records the admission-time re-plan, not a
+write injection modes, with and without ECC, shared prefix or not.
+The mechanism behind sharing-compatible injection: shared pages store
+*clean* K/V in every mode and the decode kernel's read-path masks are
+applied at load in every mode -- the stuck-at masks and the ECC round
+are idempotent, so privately-stored-corrupt pages re-mask to
+themselves while clean shared pages corrupt to exactly the standalone
+stored values.  The one exclusion is a *governor-driven* run whose
+voltage actually moves mid-request: the domain rail is global, so a
+re-plan triggered by a later admission also retunes the in-flight
+requests' thresholds, and a standalone replay (one constant
+``kv_voltage``) cannot reproduce that trajectory --
+``RequestResult.voltage`` records the admission-time re-plan, not a
 promise that the whole lifetime ran there.  ``kv_injection='rewrite'``
 (the legacy full-cache oracle) cannot address pages and is rejected up
-front.
+front.  Prompts longer than ``max_len`` are rejected at submit:
+chunked prefill writes the prompt through the ring in place and
+cannot rotate it the way the standalone prefill's tail-keep does.
 """
 from __future__ import annotations
 
@@ -84,10 +99,29 @@ class RequestResult:
     page_ids: np.ndarray
     placement: Optional[RequestPlacement]
     voltage: Optional[float]          # KV-domain voltage at admission
+    ttft_steps: Optional[int] = None  # steps from admission to token 0
+    pages_shared: int = 0             # prefix pages mapped read-only
+
+
+@dataclasses.dataclass
+class _AdmitPlan:
+    """Host-side page plan of one admission."""
+
+    row: np.ndarray                   # (n_logical_pages,) page-table row
+    retained: np.ndarray              # shared prefix pages mapped read-only
+    eligible: bool                    # may register / extend the prefix cache
+    matched: int                      # shared prefix length (tokens)
+    fs: int                           # retained page count (full pages)
+    cover: int                        # pages holding prompt rows
+    fork_src: int                     # shared boundary page (scratch = none)
+    fork_rows: int                    # clean rows to COW-copy
+    cursor0: int                      # first prompt position to prefill
+    wstart0: int                      # write floor (shared rows are r/o)
 
 
 class ContinuousBatchingScheduler:
-    """Serve overlapping requests through one compiled decode step.
+    """Serve overlapping requests through one compiled mixed
+    prefill/decode step.
 
     ``num_slots`` bounds concurrent requests (the compiled step's batch
     width); ``num_pages`` x ``page_slots`` sizes the shared KV pool;
@@ -121,6 +155,12 @@ class ContinuousBatchingScheduler:
             raise ValueError(
                 f"need 1 <= max_active ({self.max_active}) <= num_slots "
                 f"({self.num_slots})")
+        self.chunk = int(sc.prefill_chunk)
+        if self.chunk < 1:
+            raise ValueError(
+                f"prefill_chunk={sc.prefill_chunk} must be >= 1: every "
+                "step consumes at least one prompt token per prefilling "
+                "slot")
 
         plan = (sc.undervolt
                 if sc.undervolt is not None and sc.undervolt.enabled
@@ -189,9 +229,16 @@ class ContinuousBatchingScheduler:
         # ---- bookkeeping ----------------------------------------------
         self.queue: collections.deque = collections.deque()
         self.results: Dict[Any, RequestResult] = {}
-        self._slots: List[Optional[Any]] = [None] * self.num_slots
-        self._slot_pages: List[Optional[np.ndarray]] = (
-            [None] * self.num_slots)
+        s = self.num_slots
+        self._slots: List[Optional[Any]] = [None] * s
+        self._slot_priv: List[Optional[np.ndarray]] = [None] * s
+        self._slot_shared: List[Optional[np.ndarray]] = [None] * s
+        self._slot_plan: List[Optional[_AdmitPlan]] = [None] * s
+        self._ptoks: List[Optional[np.ndarray]] = [None] * s
+        self._dec_h = [True] * s
+        self._cursor_h = [0] * s
+        self._plen_h = [0] * s
+        self._admit_step: Dict[Any, int] = {}
         self._out: Dict[Any, List[int]] = {}
         self._remaining: Dict[Any, int] = {}
         self._meta: Dict[Any, RequestResult] = {}
@@ -202,26 +249,27 @@ class ContinuousBatchingScheduler:
 
         self.state = self._init_state()
         self._step = jax.jit(self._step_fn, donate_argnums=(1,))
-        self._admit_pool = jax.jit(self._admit_pool_fn,
-                                   donate_argnums=(0,))
-        # one jitted prefill: jax.jit itself specializes per prompt
-        # length, so compile count stays one per distinct length
-        module, cfg = self.bundle.module, self.cfg
-        self._prefill = jax.jit(
-            lambda p, bt: module.prefill(p, bt, cfg, sc.max_len,
-                                         self.dist))
+        self._admit_reset = jax.jit(self._admit_reset_fn,
+                                    donate_argnums=(0,))
+        self._transition_pool = jax.jit(self._transition_pool_fn,
+                                        donate_argnums=(0,))
 
     # ---- compiled pieces --------------------------------------------------
     def _init_state(self):
-        s = self.num_slots
+        s, c = self.num_slots, self.chunk
         return {
             "pool": self.kvc.init_pool(),
             "ptab": jnp.full((s, self.pool.n_logical_pages),
                              self.pool.scratch_id, jnp.int32),
             "qpos": jnp.zeros((s,), jnp.int32),
-            "tok": jnp.zeros((s, 1), jnp.int32),
+            "tok": jnp.zeros((s, c), jnp.int32),
             "keys": jnp.zeros((s, 2), jnp.uint32),
             "active": jnp.zeros((s,), bool),
+            # per-slot phase: decoding (True) vs chunked-prefilling
+            "dec": jnp.ones((s,), bool),
+            "cursor": jnp.zeros((s,), jnp.int32),
+            "plen": jnp.zeros((s,), jnp.int32),
+            "wstart": jnp.zeros((s,), jnp.int32),
         }
 
     def _sample_one(self, logits, key):
@@ -233,38 +281,88 @@ class ContinuousBatchingScheduler:
     def _step_fn(self, params, state, v):
         self.traces.append(1)
         module = self.bundle.module
+        c = self.chunk
+        act, dec = state["active"], state["dec"]
+        cursor, plen = state["cursor"], state["plen"]
+        cols = jnp.arange(c, dtype=jnp.int32)
+        # Token-lane positions: decode lanes use column 0 only, prefill
+        # lanes are this step's prompt chunk; -1 lanes are causally
+        # dead and their cache writes are suppressed.
+        pref_pos = cursor[:, None] + cols[None, :]
+        pref_pos = jnp.where(pref_pos < plen[:, None], pref_pos, -1)
+        dec_pos = jnp.where(cols[None, :] == 0, state["qpos"][:, None], -1)
+        pos = jnp.where(dec[:, None], dec_pos, pref_pos)
+        prefill_end = jnp.where(act & ~dec,
+                                jnp.minimum(cursor + c, plen), 0)
+        # Read-path masks run in EVERY mode: idempotent on privately
+        # stored-corrupt pages, and the only way clean shared pages can
+        # read as each tenant's standalone stored-corrupt values.
         ctx = self.kvc.make_ctx(
-            state["ptab"], v, method=self.method,
-            inject=(self.active and self.mode == "read"))
+            state["ptab"], v, method=self.method, inject=self.active,
+            dec=dec, wstart=state["wstart"], prefill_end=prefill_end)
         ks = jax.vmap(jax.random.split)(state["keys"])
         new_keys, ki = ks[:, 0], ks[:, 1]
         logits, pool = module.decode_step(
-            params, state["pool"], {"tokens": state["tok"]},
-            state["qpos"][:, None], self.cfg, self.dist, fault_ctx=ctx)
+            params, state["pool"], {"tokens": state["tok"]}, pos,
+            self.cfg, self.dist, fault_ctx=ctx)
         if self.active and self.mode in ("read", "write"):
+            # write-path injection covers only decoding slots' writes;
+            # prefill writes stay clean until the transition injection
+            ptab_inj = jnp.where(dec[:, None], state["ptab"],
+                                 self.pool.scratch_id)
             pool = self.kvc.post_step_inject(
-                pool, state["ptab"], state["qpos"], v, mode=self.mode,
+                pool, ptab_inj, state["qpos"], v, mode=self.mode,
                 method=self.method)
-        nt = jax.vmap(lambda lg, kk: self._sample_one(lg[None], kk)[0])(
-            logits, ki)[:, None]
-        act = state["active"]
+        # sample column: decode lanes at 0, a finishing prefill at its
+        # last prompt lane (the standalone post-prefill logits row)
+        fin = act & ~dec & (plen - cursor <= c)
+        sampling = act & (dec | fin)
+        if c == 1:
+            lg = logits
+        else:
+            col = jnp.where(dec, 0, jnp.clip(plen - 1 - cursor, 0, c - 1))
+            lg = jnp.take_along_axis(logits, col[:, None, None],
+                                     axis=1)[:, 0]
+        nt = jax.vmap(lambda l, kk: self._sample_one(l[None], kk)[0])(
+            lg, ki)[:, None]
+        pad = jnp.zeros((self.num_slots, c - 1), jnp.int32)
+        nt_row = jnp.concatenate([nt, pad], axis=1) if c > 1 else nt
         new_state = {
             "pool": pool,
             "ptab": state["ptab"],
-            "qpos": state["qpos"] + act.astype(jnp.int32),
-            "tok": jnp.where(act[:, None], nt, state["tok"]),
-            "keys": jnp.where(act[:, None], new_keys, state["keys"]),
+            "qpos": state["qpos"] + (act & dec).astype(jnp.int32),
+            "tok": jnp.where(sampling[:, None], nt_row, state["tok"]),
+            # keys advance only where a token was sampled, so a
+            # request's key trajectory matches standalone generate()
+            "keys": jnp.where(sampling[:, None], new_keys, state["keys"]),
             "active": act,
+            "dec": dec,       # the prefill->decode flip happens on host
+            "cursor": jnp.where(act & ~dec,
+                                jnp.minimum(cursor + c, plen), cursor),
+            "plen": plen,
+            "wstart": state["wstart"],
         }
         return new_state, nt
 
-    def _admit_pool_fn(self, pool_tree, cache, pids, v):
-        tree = self.kvc.scatter_request(pool_tree, cache, pids)
-        if self.active:
-            tree = self.kvc.inject_pages(
-                tree, pids, v, method=self.method,
-                skip_kv=(self.mode == "read"))
-        return tree
+    def _admit_reset_fn(self, pool_tree, reset_ids, fork_src, fork_dst,
+                        fork_rows, fork_pos0):
+        return self.kvc.reset_and_fork(pool_tree, reset_ids, fork_src,
+                                       fork_dst, fork_rows, fork_pos0)
+
+    def _transition_pool_fn(self, pool_tree, priv, shared, v):
+        """Prefill->decode transition injection: the paged twin of the
+        standalone engine's post-prefill ``init_inject`` over the whole
+        cache.  Private pages take the mode's full treatment; pages
+        that are (or just became) shared keep their K/V clean in every
+        mode -- the kernel's always-on read-path masks reproduce the
+        standalone stored corruption at load -- and only their ``pos``
+        bookkeeping takes write-path faults (same physical words and
+        values for every tenant, so replays agree)."""
+        tree = self.kvc.inject_pages(
+            pool_tree, priv, v, method=self.method,
+            skip_kv=(self.mode == "read"))
+        return self.kvc.inject_pages(tree, shared, v, method=self.method,
+                                     skip_kv=True)
 
     # ---- host loop --------------------------------------------------------
     def submit(self, request: Request) -> None:
@@ -276,6 +374,16 @@ class ContinuousBatchingScheduler:
                 f"request {request.rid!r}: max_new_tokens={n_new} must "
                 "be >= 1 (every admitted request samples at least the "
                 "prefill token)")
+        plen = int(np.asarray(request.tokens).reshape(-1).shape[0])
+        if plen < 1:
+            raise ValueError(
+                f"request {request.rid!r}: empty prompt")
+        if plen > self.sc.max_len:
+            raise ValueError(
+                f"request {request.rid!r}: prompt length {plen} exceeds "
+                f"max_len={self.sc.max_len}; chunked prefill writes the "
+                "prompt through the paged ring in place and cannot "
+                "rotate it (serve long prompts through generate())")
         self.queue.append(request)
 
     @property
@@ -288,20 +396,98 @@ class ContinuousBatchingScheduler:
                 return i
         return None
 
+    def _plan_pages(self, req: Request, prompt: np.ndarray,
+                    n_new: int) -> _AdmitPlan:
+        """Match the prompt against the prefix cache, retain the shared
+        pages, and allocate the rest: prospective-shared pages (those
+        that will hold prompt rows and be published at the transition)
+        under the strictest ``shared_prefix`` tier, the remainder under
+        the request's own tier.  Raises CapacityError with every
+        side effect rolled back."""
+        p = self.pool
+        ps = p.page_slots
+        plen = prompt.shape[0]
+        holder = ("__req__", req.rid)
+        # no sharing when generation would wrap the ring into the
+        # read-only prefix pages
+        eligible = bool(self.sc.share_prefix) and plen + n_new <= p.max_len
+        if eligible:
+            matched, spids = p.match_prefix(prompt)
+        else:
+            matched, spids = 0, np.zeros((0,), np.int32)
+        fs, r = matched // ps, matched % ps
+        # partial matches are page-aligned by construction; only a
+        # full-prompt match can end inside a page (COW boundary fork)
+        assert r == 0 or matched == plen
+        cover = -(-plen // ps)
+        retained = spids[:fs].astype(np.int32)
+        if fs:
+            p.retain(retained, holder)
+        try:
+            fork_dst = -1
+            if r:
+                fork_dst = p.cow_fork(int(spids[fs]), "shared_prefix")
+            try:
+                n_share = cover - fs - (1 if r else 0)
+                share_new = (p.alloc(n_share, "shared_prefix")
+                             if eligible and n_share else
+                             np.zeros((0,), np.int32))
+                try:
+                    n_rest = (p.n_logical_pages - cover if eligible
+                              else p.n_logical_pages)
+                    rest = p.alloc(n_rest, req.tier)
+                except CapacityError:
+                    if len(share_new):
+                        p.free(share_new)
+                    raise
+            except CapacityError:
+                if fork_dst >= 0:
+                    p.free([fork_dst])
+                raise
+        except CapacityError:
+            if fs:
+                p.release(retained, holder)
+            raise
+        fork = (np.array([fork_dst], np.int32) if r
+                else np.zeros((0,), np.int32))
+        row = np.concatenate([retained, fork, share_new, rest])
+        assert row.shape[0] == p.n_logical_pages
+        return _AdmitPlan(
+            row=row, retained=retained, eligible=eligible,
+            matched=matched, fs=fs, cover=(cover if eligible else 0),
+            fork_src=(int(spids[fs]) if r else p.scratch_id),
+            fork_rows=r,
+            cursor0=(matched if matched < plen else plen - 1),
+            wstart0=(matched if matched < plen else plen))
+
+    def _rollback(self, plan: _AdmitPlan, rid) -> None:
+        if plan.fs:
+            self.pool.release(plan.retained, ("__req__", rid))
+        self.pool.free(plan.row[plan.fs:])
+
     def admit_pending(self) -> int:
         """Admit queued requests FIFO until a slot, the page pool, or
-        the governor pushes back.  Returns the number admitted."""
+        the governor pushes back (evicting idle prefix-cache entries
+        before giving up).  Returns the number admitted."""
         n = 0
         while self.queue and self.n_active < self.max_active:
             slot = self._free_slot()
             if slot is None:
                 break
             req = self.queue[0]
-            try:
-                pids = self.pool.alloc(self.pool.n_logical_pages,
-                                       req.tier)
-            except CapacityError:
-                break                          # backpressure: wait
+            prompt = np.asarray(req.tokens, np.int32).reshape(-1)
+            n_new = int(req.max_new_tokens
+                        if req.max_new_tokens is not None
+                        else self.sc.max_new_tokens)
+            plan = None
+            while plan is None:
+                try:
+                    plan = self._plan_pages(req, prompt, n_new)
+                except CapacityError:
+                    if not self.pool.evict_prefix():
+                        break                  # backpressure: wait
+            if plan is None:
+                break
             if self.governor is not None:
                 try:
                     # the governed domain must keep the WHOLE post-
@@ -311,50 +497,104 @@ class ContinuousBatchingScheduler:
                     self._voltage = self.governor.admit(
                         (self.n_active + 1) * self.pool.request_words * 4)
                 except CapacityError:
-                    self.pool.free(pids)
+                    self._rollback(plan, req.rid)
                     break
             self.queue.popleft()
-            self._admit(req, slot, pids)
+            self._admit(req, slot, plan, prompt, n_new)
             n += 1
         return n
 
-    def _admit(self, req: Request, slot: int, pids: np.ndarray) -> None:
-        sc = self.sc
-        prompt = np.asarray(req.tokens, np.int32).reshape(1, -1)
-        prompt_len = prompt.shape[1]
-        n_new = int(req.max_new_tokens if req.max_new_tokens is not None
-                    else sc.max_new_tokens)      # >= 1, checked at submit
-        v_arr = jnp.float32(self._voltage)
-
-        logits, cache = self._prefill(self.params,
-                                      {"tokens": jnp.asarray(prompt)})
-        key = req.key if req.key is not None else jax.random.PRNGKey(0)
-        key, k0 = jax.random.split(key)
-        tok0 = self._sample_one(logits, k0)        # (1,)
-
+    def _admit(self, req: Request, slot: int, plan: _AdmitPlan,
+               prompt: np.ndarray, n_new: int) -> None:
+        p = self.pool
+        plen = prompt.shape[0]
+        # scrub the freshly allocated pages (stale-tenant data) and COW-
+        # copy the shared boundary page's clean prompt rows; retained
+        # shared entries are passed as scratch (reset there is a no-op)
+        reset_row = plan.row.copy()
+        reset_row[:plan.fs] = p.scratch_id
         st = self.state
-        st["pool"] = self._admit_pool(st["pool"], cache,
-                                      jnp.asarray(pids), v_arr)
+        pool_tree = self._admit_reset(
+            st["pool"], jnp.asarray(reset_row),
+            jnp.int32(plan.fork_src),
+            jnp.int32(plan.row[plan.fs] if plan.fork_rows
+                      else p.scratch_id),
+            jnp.int32(plan.fork_rows), jnp.int32(plan.fs * p.page_slots))
+        key = req.key if req.key is not None else jax.random.PRNGKey(0)
         self.state = {
-            "pool": st["pool"],
-            "ptab": st["ptab"].at[slot].set(jnp.asarray(pids)),
-            "qpos": st["qpos"].at[slot].set(prompt_len),
-            "tok": st["tok"].at[slot].set(tok0),
+            "pool": pool_tree,
+            "ptab": st["ptab"].at[slot].set(jnp.asarray(plan.row)),
+            "qpos": st["qpos"].at[slot].set(plen),
+            "tok": st["tok"],
             "keys": st["keys"].at[slot].set(key),
             "active": st["active"].at[slot].set(True),
+            "dec": st["dec"].at[slot].set(False),
+            "cursor": st["cursor"].at[slot].set(plan.cursor0),
+            "plen": st["plen"].at[slot].set(plen),
+            "wstart": st["wstart"].at[slot].set(plan.wstart0),
         }
         self._slots[slot] = req.rid
-        self._slot_pages[slot] = np.asarray(pids)
-        self._out[req.rid] = [int(tok0[0])]
-        self._remaining[req.rid] = n_new - 1
+        self._slot_shared[slot] = plan.retained.copy()
+        self._slot_priv[slot] = plan.row[plan.fs:].copy()
+        self._slot_plan[slot] = plan
+        self._ptoks[slot] = prompt
+        self._dec_h[slot] = False
+        self._cursor_h[slot] = plan.cursor0
+        self._plen_h[slot] = plen
+        self._admit_step[req.rid] = self.steps
+        self._out[req.rid] = []
+        self._remaining[req.rid] = n_new
         self._meta[req.rid] = RequestResult(
-            rid=req.rid, tokens=None, page_ids=np.asarray(pids),
-            placement=self.pool.request_placement(pids),
-            voltage=(self._voltage if self.pool.placement is not None
-                     else None))
+            rid=req.rid, tokens=None, page_ids=plan.row.copy(),
+            placement=p.request_placement(plan.row),
+            voltage=(self._voltage if p.placement is not None else None),
+            pages_shared=plan.fs)
         self.admitted += 1
         self.peak_active = max(self.peak_active, self.n_active)
-        if self._remaining[req.rid] == 0:
+
+    def _transition(self, slot: int) -> None:
+        """Prefill finished this step: publish shareable pages, inject
+        the request's pages (the standalone ``init_inject`` twin), and
+        flip the slot to the decode phase."""
+        rid = self._slots[slot]
+        plan = self._slot_plan[slot]
+        p = self.pool
+        if plan.eligible:
+            own = plan.row[plan.fs:plan.cover]
+            if len(own):
+                p.share(own, ("__req__", rid))
+                self._slot_shared[slot] = np.concatenate(
+                    [self._slot_shared[slot], own])
+                self._slot_priv[slot] = plan.row[plan.cover:].copy()
+            prompt = self._ptoks[slot]
+            plen = prompt.shape[0]
+            lengths = list(range(p.page_slots, plen, p.page_slots))
+            for ln in lengths + [plen]:
+                p.register_prefix(prompt[:ln],
+                                  plan.row[:-(-ln // p.page_slots)])
+        st = self.state
+        new_state = {**st, "dec": st["dec"].at[slot].set(True)}
+        if self.active:
+            pad = np.full(p.n_logical_pages, p.scratch_id, np.int32)
+            priv = pad.copy()
+            priv[:len(self._slot_priv[slot])] = self._slot_priv[slot]
+            shared = pad.copy()
+            nsh = plan.cover if plan.eligible else 0
+            shared[:nsh] = plan.row[:nsh]
+            new_state["pool"] = self._transition_pool(
+                st["pool"], jnp.asarray(priv), jnp.asarray(shared),
+                jnp.float32(self._voltage))
+        self.state = new_state
+        self._dec_h[slot] = True
+
+    def _collect(self, slot: int, rid, token: int) -> None:
+        out = self._out[rid]
+        if not out:
+            self._meta[rid].ttft_steps = (self.steps
+                                          - self._admit_step[rid])
+        out.append(int(token))
+        self._remaining[rid] -= 1
+        if self._remaining[rid] == 0:
             self._retire(slot)
 
     def _retire(self, slot: int) -> None:
@@ -362,20 +602,48 @@ class ContinuousBatchingScheduler:
         res = self._meta.pop(rid)
         res.tokens = np.asarray(self._out.pop(rid), np.int32)[None, :]
         self.results[rid] = res
-        self.pool.free(self._slot_pages[slot])
+        if len(self._slot_shared[slot]):
+            self.pool.release(self._slot_shared[slot], ("__req__", rid))
+        if len(self._slot_priv[slot]):
+            self.pool.free(self._slot_priv[slot])
         del self._remaining[rid]
+        del self._admit_step[rid]
         self._slots[slot] = None
-        self._slot_pages[slot] = None
+        self._slot_priv[slot] = None
+        self._slot_shared[slot] = None
+        self._slot_plan[slot] = None
+        self._ptoks[slot] = None
+        self._dec_h[slot] = True
         st = self.state
         self.state = {
             **st,
             "ptab": st["ptab"].at[slot].set(self.pool.scratch_id),
             "active": st["active"].at[slot].set(False),
+            "dec": st["dec"].at[slot].set(True),
         }
 
+    def _feed_chunks(self) -> None:
+        """Host -> device refresh of the prompt-chunk token lanes of
+        every prefilling slot (decoding slots keep their sampled
+        token in lane 0)."""
+        idx = [i for i, r in enumerate(self._slots)
+               if r is not None and not self._dec_h[i]]
+        if not idx:
+            return
+        rows = np.zeros((len(idx), self.chunk), np.int32)
+        for j, i in enumerate(idx):
+            cur = self._cursor_h[i]
+            t = self._ptoks[i][cur:cur + self.chunk]
+            rows[j, :len(t)] = t
+        self.state["tok"] = self.state["tok"].at[
+            np.asarray(idx)].set(jnp.asarray(rows))
+
     def step_once(self) -> None:
-        """One decode step for every active slot (single compiled
-        call), then collect tokens and retire finished requests."""
+        """One mixed step: every prefilling slot consumes a prompt
+        chunk, every decoding slot one token (single compiled call);
+        then transition finished prefills, collect tokens, and retire
+        finished requests."""
+        self._feed_chunks()
         self.state, nt = self._step(self.params, self.state,
                                     jnp.float32(self._voltage))
         toks = np.asarray(nt)[:, 0]
@@ -383,10 +651,16 @@ class ContinuousBatchingScheduler:
         for slot, rid in enumerate(self._slots):
             if rid is None:
                 continue
-            self._out[rid].append(int(toks[slot]))
-            self._remaining[rid] -= 1
-            if self._remaining[rid] == 0:
-                self._retire(slot)
+            if self._dec_h[slot]:
+                self._collect(slot, rid, toks[slot])
+                continue
+            cur = self._cursor_h[slot]
+            fin = self._plen_h[slot] - cur <= self.chunk
+            self._cursor_h[slot] = min(cur + self.chunk,
+                                       self._plen_h[slot])
+            if fin:
+                self._transition(slot)
+                self._collect(slot, rid, toks[slot])
 
     def run(self) -> Dict[Any, RequestResult]:
         """Drain the queue: admit / step / retire until every submitted
@@ -400,9 +674,13 @@ class ContinuousBatchingScheduler:
                 # Nothing running and the head request still cannot be
                 # admitted: it can never fit.  Re-run its admission
                 # checks so the capacity source raises its own error.
-                pids = self.pool.alloc(self.pool.n_logical_pages,
-                                       self.queue[0].tier)
-                self.pool.free(pids)
+                req = self.queue[0]
+                prompt = np.asarray(req.tokens, np.int32).reshape(-1)
+                n_new = int(req.max_new_tokens
+                            if req.max_new_tokens is not None
+                            else self.sc.max_new_tokens)
+                plan = self._plan_pages(req, prompt, n_new)
+                self._rollback(plan, req.rid)
                 if self.governor is not None:
                     self.governor.admit(self.pool.request_words * 4)
                 raise CapacityError(
@@ -421,4 +699,7 @@ class ContinuousBatchingScheduler:
             "decode_traces": len(self.traces),
             "free_pages": self.pool.free_pages,
             "voltage": self._voltage,
+            "prefill_chunk": self.chunk,
+            "shared_pages": self.pool.shared_pages,
+            "prefix_entries": self.pool.prefix_entries,
         }

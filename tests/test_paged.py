@@ -278,3 +278,85 @@ def test_pool_layout_errors_are_typed_and_actionable():
     with pytest.raises(ValueError, match="paged"):
         PagePool(moe, CFG, max_len=32, page_slots=8, num_pages=4,
                  plan=_plan())
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write prefix sharing: refcounts, typed guards, prefix cache
+# ---------------------------------------------------------------------------
+
+
+def test_pool_sharing_refcounts_and_typed_guards():
+    """Every sharing-protocol violation is a typed PageSharingError:
+    double release by the same holder, COW-forking an unshared page,
+    re-sharing, re-retaining, and free()-ing a page with live holders."""
+    from repro.serving.paged import PageSharingError
+    pool = _pool()
+    pids = pool.alloc(2, "cheap")
+    a, b = ("__req__", "a"), ("__req__", "b")
+
+    with pytest.raises(PageSharingError, match="not a shared page"):
+        pool.cow_fork(pids[0])          # private pages fork nothing
+    with pytest.raises(PageSharingError, match="not a shared page"):
+        pool.retain(pids, a)
+
+    pool.share(pids, a)
+    assert pool.shared_pages == 2
+    with pytest.raises(PageSharingError, match="already shared"):
+        pool.share(pids[:1], b)
+    with pytest.raises(PageSharingError, match="released per holder"):
+        pool.free(pids)                 # live holders block free()
+
+    pool.retain(pids, b)
+    with pytest.raises(PageSharingError, match="already"):
+        pool.retain(pids[:1], b)        # double retain, same holder
+
+    fork = pool.cow_fork(pids[0], "critical")
+    assert fork not in set(int(p) for p in pids)
+    assert int(fork) not in pool._weak_set
+
+    pool.release(pids, a)
+    with pytest.raises(PageSharingError, match="double release"):
+        pool.release(pids, a)           # second release, same request
+    assert pool.shared_pages == 2       # b still holds both
+    pool.release(pids, b)
+    assert pool.shared_pages == 0
+    pool.free([fork])
+    assert pool.free_pages == 16        # refcounted release recycles
+
+
+def test_pool_prefix_cache_match_register_evict():
+    """Longest-prefix matching is content-hashed and page-aligned (the
+    full prompt may end inside a page), registration is idempotent, and
+    LRU eviction releases only the cache's own holds."""
+    pool = _pool()
+    ps = pool.page_slots
+    toks = np.arange(20, dtype=np.int32)          # 2 full pages + 4 rows
+    pids = pool.alloc(3, "cheap")
+    pool.share(pids, ("__req__", "creator"))
+    assert pool.register_prefix(toks[:ps], pids[:1])
+    assert pool.register_prefix(toks[:2 * ps], pids[:2])
+    assert pool.register_prefix(toks, pids)
+    assert not pool.register_prefix(toks, pids)   # already cached
+    assert pool.prefix_entries == 3
+
+    ln, got = pool.match_prefix(toks)             # full match first
+    assert ln == 20 and np.array_equal(got, pids)
+    other = np.concatenate([toks[:2 * ps], [999, 998]]).astype(np.int32)
+    ln, got = pool.match_prefix(other)            # page-aligned fallback
+    assert ln == 2 * ps and np.array_equal(got, pids[:2])
+    ln, got = pool.match_prefix(toks[:ps - 1])    # shorter than a page
+    assert ln == 0 and got.shape == (0,)
+    ln, _ = pool.match_prefix(np.array([7, 7, 7], np.int32))
+    assert ln == 0
+
+    # LRU eviction: oldest entry first; pages survive through the
+    # holders that remain (later entries, the creating request)
+    assert pool.evict_prefix()
+    assert pool.prefix_entries == 2
+    assert pool.match_prefix(other)[0] == 2 * ps  # longer entry intact
+    pool.release(pids, ("__req__", "creator"))
+    assert pool.shared_pages == 3                 # cache holds remain
+    while pool.evict_prefix():
+        pass
+    assert pool.prefix_entries == 0 and pool.shared_pages == 0
+    assert pool.free_pages == 16                  # fully recycled

@@ -1,0 +1,89 @@
+"""pow2-bucketed standalone prefill: O(log max_len) compiles while the
+logits AND the whole post-prefill cache stay bit-identical to the
+unpadded prefill (pad positions are causally dead, their ring rows are
+scrubbed back to the init state, and logits are read at the real last
+prompt column)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import get_arch
+from repro.serving.engine import (ServeConfig, _BucketedPrefill,
+                                  _next_pow2, bucketed_prefill, generate)
+from repro.training import trainer
+
+BUNDLE = get_arch("llama3.2-3b")
+CFG = BUNDLE.reduced
+PARAMS = trainer.init_state(BUNDLE, CFG, jax.random.PRNGKey(0))["params"]
+MAX_LEN = 32
+
+
+def _assert_trees_equal(a, b, msg):
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    assert len(fa) == len(fb)
+    for la, lb in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=msg)
+
+
+def test_next_pow2():
+    assert [_next_pow2(n) for n in (1, 2, 3, 5, 8, 9, 31, 32)] == [
+        1, 2, 4, 8, 8, 16, 32, 32]
+
+
+def test_padded_prefill_bitexact_and_trace_count():
+    bp = _BucketedPrefill(BUNDLE.module, CFG, MAX_LEN)
+    assert bp.uniform
+    rng = np.random.RandomState(3)
+    lengths = (1, 5, 8, 9, 12, 16, 31, 32)
+    for s in lengths:
+        toks = jnp.asarray(rng.randint(0, CFG.vocab, (1, s)), jnp.int32)
+        lg, cache = bp(PARAMS, {"tokens": toks})
+        lg_ref, cache_ref = BUNDLE.module.prefill(
+            PARAMS, {"tokens": toks}, CFG, MAX_LEN)
+        np.testing.assert_array_equal(np.asarray(lg), np.asarray(lg_ref),
+                                      err_msg=f"logits s={s}")
+        _assert_trees_equal(cache, cache_ref, f"cache s={s}")
+    # one retrace per pow2 bucket actually hit, not per length
+    buckets = {min(_next_pow2(s), MAX_LEN) for s in lengths}
+    assert len(bp.traces) == len(buckets), (len(bp.traces), buckets)
+
+
+def test_window_cache_families_fall_back_to_exact():
+    """Sliding-window rings rotate once the padded length exceeds the
+    window -- padding is unsound there, so the bucket wrapper must route
+    to the per-length exact prefill instead of mis-scrubbing."""
+    import dataclasses
+    cfg = dataclasses.replace(CFG, pattern=("local", "global"), window=8)
+    params = trainer.init_state(BUNDLE, cfg, jax.random.PRNGKey(1))["params"]
+    bp = _BucketedPrefill(BUNDLE.module, cfg, MAX_LEN)
+    assert not bp.uniform
+    toks = jnp.asarray(np.random.RandomState(0).randint(
+        0, cfg.vocab, (1, 12)), jnp.int32)
+    lg, cache = bp(params, {"tokens": toks})
+    lg_ref, cache_ref = BUNDLE.module.prefill(params, {"tokens": toks},
+                                              cfg, MAX_LEN)
+    np.testing.assert_array_equal(np.asarray(lg), np.asarray(lg_ref))
+    _assert_trees_equal(cache, cache_ref, "window fallback cache")
+    assert len(bp.traces) == 0          # padded path never traced
+
+
+def test_generate_shares_buckets_across_calls():
+    """generate() routes its prefill through the process-wide bucket
+    instance: four distinct prompt lengths in two buckets cost at most
+    two prefill retraces (and zero once the buckets are warm)."""
+    bp = bucketed_prefill(BUNDLE.module, CFG, 48)
+    assert bp is not None
+    before = len(bp.traces)
+    sc = ServeConfig(max_len=48, max_new_tokens=2, temperature=0.0)
+    rng = np.random.RandomState(11)
+    for s in (5, 6, 7, 9):              # buckets: 8, 8, 8, 16
+        toks = jnp.asarray(rng.randint(0, CFG.vocab, (1, s)), jnp.int32)
+        generate(BUNDLE, CFG, PARAMS, {"tokens": toks}, sc)
+    assert len(bp.traces) - before <= 2
+    # warm path: a fresh length in a warm bucket does not retrace
+    warm = len(bp.traces)
+    toks = jnp.asarray(rng.randint(0, CFG.vocab, (1, 10)), jnp.int32)
+    generate(BUNDLE, CFG, PARAMS, {"tokens": toks}, sc)
+    assert len(bp.traces) == warm

@@ -237,3 +237,143 @@ def test_governor_replans_voltage_at_admission():
             BUNDLE, CFG, PARAMS,
             dataclasses.replace(sc, kv_voltage=0.9),
             num_slots=2, num_pages=8, page_slots=8)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill + reliability-pinned copy-on-write prefix sharing
+# ---------------------------------------------------------------------------
+
+SYS = _R.randint(0, CFG.vocab, (11,))         # shared "system prompt"
+_T0 = _R.randint(0, CFG.vocab, (4,))
+P0 = np.concatenate([SYS, _T0])               # creator prompt, 15 tokens
+TENANTS = [
+    # rid, prompt, n_new, tier, seed
+    ("t1", np.concatenate([SYS, _R.randint(0, CFG.vocab, (2,))]), 4,
+     "cheap", 41),                            # page-aligned match (8)
+    ("t2", np.concatenate([P0, _R.randint(0, CFG.vocab, (4,))]), 4,
+     "critical", 42),                         # longer prompt, mixed tiers
+    ("t3", P0.copy(), 4, "cheap", 43),        # exact match: fork + last
+]
+CREATOR = [("t0", P0, 4, "cheap", 40)]
+
+
+def _serve_waves(sc, waves, **kw):
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("num_pages", 16)
+    kw.setdefault("page_slots", 8)
+    sched = ContinuousBatchingScheduler(BUNDLE, CFG, PARAMS, sc, **kw)
+    for wave in waves:
+        for rid, toks, n, tier, seed in wave:
+            sched.submit(Request(rid=rid, tokens=toks, max_new_tokens=n,
+                                 tier=tier, key=jax.random.PRNGKey(seed)))
+        sched.run()
+    return sched, sched.results
+
+
+@pytest.mark.parametrize("mode,temperature,ecc",
+                         [("read", 0.0, False), ("read", 0.7, False),
+                          ("write", 0.0, False), ("read", 0.0, True),
+                          ("write", 0.0, True)])
+def test_prefix_sharing_matches_standalone(mode, temperature, ecc):
+    """Tenants mapping a cached prefix read-only -- page-aligned, COW-
+    forked boundary page, and exact-prompt recompute -- are each bit-
+    identical to their solo generate() replay on the same physical
+    pages, in every injection mode, sampled and greedy, ECC on/off."""
+    sc = _sc(mode, temperature, _plan(0.86, ecc=ecc),
+             method=("word" if ecc else "bitwise"), share_prefix=True)
+    sched, res = _serve_waves(sc, [CREATOR, TENANTS])
+    assert len(sched.traces) == 1, sched.stats
+    for rid, *_ in TENANTS:
+        assert res[rid].pages_shared >= 1, (rid, res[rid])
+        # strictly fewer fresh pages than a no-sharing admission
+        fresh = sched.pool.n_logical_pages - res[rid].pages_shared
+        assert fresh < sched.pool.n_logical_pages
+    refs = _reference(sc, res, reqs=CREATOR + TENANTS)
+    for rid, *_ in CREATOR + TENANTS:
+        np.testing.assert_array_equal(refs[rid], res[rid].tokens,
+                                      err_msg=f"{rid} {mode} ecc={ecc}")
+
+
+def test_shared_pages_pinned_to_most_reliable_strong_pages():
+    """Pages that may be published as shared prefixes are allocated
+    under the strictest tier: weak-free, most-reliable-first, agreeing
+    with the fault map's pseudo-channel reliability order."""
+    sc = _sc("read", 0.0, _plan(0.86), share_prefix=True)
+    sched = ContinuousBatchingScheduler(BUNDLE, CFG, PARAMS, sc,
+                                        num_slots=4, num_pages=16,
+                                        page_slots=8)
+    pool = sched.pool
+    assert len(pool._weak) >= 1, "fault map should make pages weak"
+    best = list(pool._strong[:2])       # most-reliable strong pages
+    rid, toks, n, tier, seed = CREATOR[0]
+    sched.submit(Request(rid=rid, tokens=toks, max_new_tokens=n,
+                         tier=tier, key=jax.random.PRNGKey(seed)))
+    sched.run()
+    shared = [p for p in range(pool.num_pages) if pool.is_shared(p)]
+    assert sorted(shared) == sorted(best), (shared, best)
+    assert not any(p in pool._weak_set for p in shared)
+    # the pool's page ordering IS the fault map's reliability order:
+    # a page's rate is its worst pseudo-channel's predicted rate, and
+    # pc rates sorted ascending reproduce reliability_order
+    fmap = pool.faultmap
+    v = pool.domain.voltage
+    np.testing.assert_array_equal(
+        fmap.reliability_order(v),
+        np.argsort(fmap.pc_total_rate(v), kind="stable"))
+    rates = fmap.predicted_rates(v)
+    pcs = {int(c) for leaf in pool.leaves if leaf.which == "k"
+           for c in leaf.page_pc[:, shared].reshape(-1)}
+    strong_rates = [pool._rate[p] for p in pool._strong]
+    assert all(rates[c] <= (max(strong_rates) if strong_rates else 0)
+               for c in pcs)
+
+
+def test_prefix_pages_recycled_for_later_tenants():
+    """A tenant admitted after creator AND earlier tenants retired
+    still maps the cached prefix pages (the cache's own holds keep
+    them alive), and evicting the cache returns every page."""
+    sc = _sc("read", 0.0, _plan(0.86), share_prefix=True)
+    sched, res = _serve_waves(sc, [CREATOR, TENANTS[:2]])
+    shared_page = int(res["t0"].page_ids[0])
+    late = ("t9", np.concatenate([SYS, _R.randint(0, CFG.vocab, (3,))]),
+            3, "cheap", 99)
+    sched.submit(Request(rid=late[0], tokens=late[1],
+                         max_new_tokens=late[2], tier=late[3],
+                         key=jax.random.PRNGKey(late[4])))
+    sched.run()
+    assert sched.results["t9"].pages_shared >= 1
+    assert int(sched.results["t9"].page_ids[0]) == shared_page
+    np.testing.assert_array_equal(
+        _reference(sc, sched.results, reqs=[late])["t9"],
+        sched.results["t9"].tokens)
+    # drain the prefix cache: every page returns to the free lists
+    while sched.pool.evict_prefix():
+        pass
+    assert sched.pool.shared_pages == 0
+    assert sched.pool.free_pages == 16
+
+
+def test_traces_flat_across_distinct_lengths_with_ttft():
+    """>= 4 distinct prompt lengths ride ONE compiled mixed step (no
+    per-length prefill program exists anymore), and time-to-first-token
+    is the chunk arithmetic: ceil(prompt_len / prefill_chunk) steps."""
+    reqs = [(f"L{ln}", _R.randint(0, CFG.vocab, (ln,)), 3, "cheap",
+             3 * ln) for ln in (3, 5, 9, 14, 17)]
+    sc = _sc("read", 0.0, _plan(0.88), method="word")
+    sched, res = _serve(sc, reqs=reqs)
+    assert len(sched.traces) == 1, sched.stats
+    for rid, toks, n, _, _ in reqs:
+        assert res[rid].tokens.shape == (1, n)
+        assert res[rid].ttft_steps == -(-len(toks) // sched.chunk), (
+            rid, res[rid].ttft_steps, sched.chunk)
+
+
+def test_overlong_prompts_rejected_at_submit():
+    sc = _sc("read", 0.0, _plan(0.88), method="word")
+    sched = ContinuousBatchingScheduler(
+        BUNDLE, CFG, PARAMS, sc, num_slots=2, num_pages=8, page_slots=8)
+    with pytest.raises(ValueError, match="max_len"):
+        sched.submit(Request("long", np.zeros(33, np.int32), 2, "cheap"))
+    with pytest.raises(ValueError, match="empty"):
+        sched.submit(Request("nil", np.zeros(0, np.int32), 2, "cheap"))
+    assert not sched.queue
