@@ -1,5 +1,6 @@
 """Serving at scale: a mixed-tier request stream with a shared system
-prompt through the continuous-batching scheduler.
+prompt through the continuous-batching scheduler -- on one device or
+sharded across a heterogeneous-voltage fleet.
 
 A stream of requests with different prompts, generation lengths and
 criticality tiers is pushed through one scheduler: strict-tier requests
@@ -14,20 +15,52 @@ tenant publishes it, later tenants map the cached prefix pages
 read-only (copy-on-write) instead of recomputing and re-storing it --
 watch ``pages_shared`` and the flat ``ttft`` of sharing tenants.
 
-  PYTHONPATH=src python examples/serve_many.py
-"""
-import jax
-import numpy as np
+With ``--devices N`` the scheduler shards over an N-way serve mesh:
+every shard draws its OWN fault map (independent weak-row draws --
+real HBM parts differ) and admits against its own governor setpoint,
+so the fleet runs heterogeneous voltages: strict shards stay shallow,
+tolerant shards undervolt deep, and the fleet report aggregates the
+power/reliability mix.  The decode step is still ONE compiled program
+with zero cross-shard traffic.
 
-from repro.core.domains import MemoryDomain
-from repro.core.hbm import VCU128
-from repro.models.base import get_arch, init_params
-from repro.serving.engine import ServeConfig
-from repro.serving.scheduler import ContinuousBatchingScheduler, Request
-from repro.training.undervolt import UndervoltPlan
+  PYTHONPATH=src python examples/serve_many.py
+  PYTHONPATH=src python examples/serve_many.py --devices 4
+"""
+import argparse
+import os
+import sys
+
+
+def _parse():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=1,
+                    help="serve-mesh shard count (forces that many "
+                    "host devices; must be set before jax imports)")
+    return ap.parse_args()
+
+
+ARGS = _parse()
+if ARGS.devices > 1 and "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") +
+        f" --xla_force_host_platform_device_count={ARGS.devices}")
+
+import jax                                            # noqa: E402
+import numpy as np                                    # noqa: E402
+
+from repro.core.domains import MemoryDomain           # noqa: E402
+from repro.core.hbm import VCU128                     # noqa: E402
+from repro.launch.mesh import make_serve_mesh         # noqa: E402
+from repro.models.base import get_arch, init_params   # noqa: E402
+from repro.serving.engine import ServeConfig          # noqa: E402
+from repro.serving.scheduler import (                 # noqa: E402
+    ContinuousBatchingScheduler, Request)
+from repro.training.undervolt import UndervoltPlan    # noqa: E402
 
 
 def main():
+    n_shards = ARGS.devices
     bundle = get_arch("llama3.2-3b")
     cfg = bundle.reduced
     params = init_params(bundle.module.param_specs(cfg),
@@ -43,19 +76,27 @@ def main():
                      governor=governor, kv_injection="read",
                      kv_method="bitwise", prefill_chunk=8,
                      share_prefix=True)
+    kw = {}
+    if n_shards > 1:
+        # heterogeneous rate setpoints: shard 0 is the strict end of
+        # the fleet (tight stuck-cell cap -> shallow undervolt), the
+        # last shard the tolerant end (deep undervolt, max savings)
+        setpoints = list(np.geomspace(1e-9, 1e-4, n_shards))
+        kw = dict(mesh=make_serve_mesh(n_shards),
+                  shard_setpoints=setpoints)
     sched = ContinuousBatchingScheduler(
-        bundle, cfg, params, sc, num_slots=4, num_pages=40, page_slots=8)
+        bundle, cfg, params, sc, num_slots=4 * n_shards,
+        num_pages=40 * n_shards, page_slots=8, **kw)
 
     rng = np.random.RandomState(0)
     system = rng.randint(0, cfg.vocab, (19,))   # shared system prompt
     tiers = ["cheap", "critical", "cheap", "hedged", "cheap", "cheap",
-             "critical", "cheap"]
-    print(f"pool: {sched.pool.free_pages} pages "
-          f"({len(sched.pool._weak)} weak, "
-          f"{len(sched.pool._strong)} weak-free), "
+             "critical", "cheap"] * n_shards
+    print(f"fleet: {sched.stats['n_shards']} shard(s), "
+          f"{sched.stats['free_pages']} pages total, "
           f"{sched.pool.n_logical_pages} pages/request")
     for i, tier in enumerate(tiers):
-        user = rng.randint(0, cfg.vocab, (4 + i,))
+        user = rng.randint(0, cfg.vocab, (4 + i % 8,))
         toks = np.concatenate([system, user]) if i % 2 else user
         sched.submit(Request(
             rid=f"req{i}", tokens=toks,
@@ -65,16 +106,35 @@ def main():
     results = sched.run()
     for i, tier in enumerate(tiers):
         r = results[f"req{i}"]
+        pool_k = sched._shards[r.shard].pool
         weak = sum(1 for p in r.page_ids
-                   if int(p) in sched.pool._weak_set)
-        print(f"req{i} [{tier:8s}] v={r.voltage:.2f} "
-              f"pages={r.page_ids.tolist()} ({weak} weak, "
+                   if int(p) in pool_k._weak_set)
+        print(f"req{i:<2d} [{tier:8s}] shard={r.shard} "
+              f"v={r.voltage:.2f} ({weak} weak, "
               f"{r.pages_shared} shared) ttft={r.ttft_steps} "
               f"tokens={r.tokens[0].tolist()}")
-    print("stats:", sched.stats)
-    assert sched.stats["decode_traces"] == 1
-    shared = [results[f"req{i}"].pages_shared for i in range(8) if i % 2]
+    st = sched.stats
+    for sh in st["shards"]:
+        sp = ("-" if sh["setpoint"] is None
+              else f"{sh['setpoint']:.1e}")
+        print(f"shard {sh['shard']}: seed={sh['map_seed']} "
+              f"setpoint={sp} v={sh['voltage']:.2f} "
+              f"weak_pages={sh['weak_pages']} "
+              f"free_pages={sh['free_pages']}")
+    if "fleet" in st:
+        fl = st["fleet"]
+        print(f"fleet: power_factor mean={fl['power_factor_mean']:.3f} "
+              f"max={fl['power_factor_max']:.3f} "
+              f"worst_rate={fl.get('worst_rate', 0):.2e}")
+    assert st["decode_traces"] == 1
+    shared = [results[f"req{i}"].pages_shared
+              for i in range(len(tiers)) if i % 2]
     assert any(s > 0 for s in shared[1:]), shared
+    if n_shards > 1:
+        vs = [sh["voltage"] for sh in st["shards"]]
+        assert len(set(f"{v:.3f}" for v in vs)) > 1, (
+            f"expected heterogeneous shard voltages, got {vs}")
+        assert vs[0] >= vs[-1], vs   # strict shard runs shallower
 
 
 if __name__ == "__main__":

@@ -58,13 +58,16 @@ class CapacityError(MemoryError):
     backwards compatibility with callers catching the old bare error)."""
 
     def __init__(self, domain: str, requested_bytes: int, free_bytes: int,
-                 note: str = ""):
+                 note: str = "", shard=None):
         self.domain = domain
         self.requested_bytes = int(requested_bytes)
         self.free_bytes = int(free_bytes)
+        self.shard = shard
         msg = (f"domain {domain!r} out of capacity: requested "
                f"{self.requested_bytes} B, remaining extent "
                f"{self.free_bytes} B")
+        if shard is not None:
+            msg += f" on shard {shard}"
         if note:
             msg += f" ({note})"
         super().__init__(msg)

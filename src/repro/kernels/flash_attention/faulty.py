@@ -434,6 +434,14 @@ def paged_decode_attention(q, k_pool, v_pool, pos_pool, page_table, *,
     s, sq, h, d = q.shape
     n, ps, kh, _ = k_pool.shape
     assert sq == 1, "paged kernel is decode-specialized (S == 1)"
+    if isinstance(seed, jax.core.Tracer):
+        raise TypeError(
+            "paged_decode_attention seed must be a static Python int: "
+            "the hash-stream draws are folded into the kernel body at "
+            "trace time (per-plane seeds included).  Per-shard fault "
+            "maps get distinct seeds by specializing one branch per "
+            "shard (lax.switch over shard index), never by tracing the "
+            "seed")
     n_lp = page_table.shape[1]
     length = n_lp * ps
     g = h // kh

@@ -12,9 +12,12 @@ any jax import, and importing this module must not lock device state.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
+import numpy as np
+
+SERVE_AXIS = "serve"
 
 
 def make_mesh_auto(shape, axes) -> jax.sharding.Mesh:
@@ -42,3 +45,26 @@ def batch_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
 def make_smoke_mesh() -> jax.sharding.Mesh:
     """1-device mesh with production axis names (CPU tests)."""
     return make_mesh_auto((1, 1), ("data", "model"))
+
+
+def make_serve_mesh(num_shards: Optional[int] = None,
+                    axis: str = SERVE_AXIS) -> jax.sharding.Mesh:
+    """1-D mesh for the sharded serving scheduler.
+
+    Each device along the ``serve`` axis owns one scheduler shard: its
+    own slot range, page-pool arena blocks, fault map and governor
+    setpoint.  ``num_shards`` defaults to every visible device.  CPU
+    smoke runs fan out with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    any jax import, like the production dry-runs).
+    """
+    devices = jax.devices()
+    if num_shards is None:
+        num_shards = len(devices)
+    if not 1 <= num_shards <= len(devices):
+        raise ValueError(
+            f"make_serve_mesh(num_shards={num_shards}): need 1 <= "
+            f"num_shards <= {len(devices)} visible devices (set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count before "
+            "importing jax to fan out on CPU)")
+    return jax.sharding.Mesh(np.asarray(devices[:num_shards]), (axis,))

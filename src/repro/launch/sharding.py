@@ -115,6 +115,16 @@ def tree_shardings(specs, rules: ShardingRules, mesh: jax.sharding.Mesh):
         specs, is_leaf=lambda x: isinstance(x, ParamSpec))
 
 
+def serve_sharding(mesh: jax.sharding.Mesh,
+                   axis: str = "serve") -> NamedSharding:
+    """Sharding for serving-scheduler state: leading axis split over the
+    1-D ``serve`` mesh, every other axis replicated.  Applied uniformly
+    to every leaf of the stacked ``(n_shards, ...)`` scheduler state, so
+    each shard's slots, page pool and page tables live wholly on its own
+    device."""
+    return NamedSharding(mesh, P(axis))
+
+
 def batch_sharding(mesh: jax.sharding.Mesh, rules: ShardingRules,
                    ndim: int, batch_dim_divisible: int):
     """NamedSharding for a batch-leading input array."""

@@ -103,6 +103,10 @@ class RequestPlacement:
     group: str
     domain: MemoryDomain
     leaves: Tuple[PagedLeafPlacement, ...]
+    # seed of the exporting pool's fault map: a sharded scheduler's
+    # shards draw distinct maps, and a replay against any other map
+    # would silently diverge -- readpath.build_ctx cross-checks it
+    map_seed: Optional[int] = None
 
     @property
     def total_words(self) -> int:
@@ -158,7 +162,7 @@ class PagePool:
     """
 
     def __init__(self, module, cfg, *, max_len: int, page_slots: int,
-                 num_pages: int, plan=None):
+                 num_pages: int, plan=None, shard=None):
         if not getattr(module, "SUPPORTS_PAGED", False):
             raise ValueError(
                 f"family module {getattr(module, '__name__', module)!r} "
@@ -178,6 +182,10 @@ class PagePool:
         self.total_pages = self.num_pages + 1
         self.scratch_id = self.num_pages      # trailing page, never issued
         self.plan = plan
+        # Shard index of a mesh-sharded scheduler owning this pool (None
+        # for single-device pools); CapacityErrors name it so fleet
+        # backpressure is attributable to the exhausted device.
+        self.shard = shard
 
         # The pool *is* a ring cache whose batch rows are pages.
         self.pool_specs = module.cache_specs(cfg, self.total_pages,
@@ -345,7 +353,8 @@ class PagePool:
                     name, n_pages * self.page_set_words * 4,
                     len(self._strong) * self.page_set_words * 4,
                     f"{n_pages} weak-free pages for tier {tier.name!r}; "
-                    f"{len(self._weak)} weak pages held back")
+                    f"{len(self._weak)} weak pages held back",
+                    shard=self.shard)
             taken = self._strong[:n_pages]
             del self._strong[:n_pages]
         else:
@@ -353,7 +362,8 @@ class PagePool:
                 raise CapacityError(
                     name, n_pages * self.page_set_words * 4,
                     self.free_pages * self.page_set_words * 4,
-                    f"{n_pages} pages for tier {tier.name!r}")
+                    f"{n_pages} pages for tier {tier.name!r}",
+                    shard=self.shard)
             taken = self._weak[:n_pages]
             del self._weak[:n_pages]
             need = n_pages - len(taken)
@@ -388,6 +398,12 @@ class PagePool:
         lst = self._weak if p in self._weak_set else self._strong
         keys = [(self._rate[q], q) for q in lst]
         lst.insert(bisect.bisect_left(keys, (self._rate[p], p)), p)
+
+    @property
+    def num_weak_pages(self) -> int:
+        """Pages whose backing arena blocks contain weak rows (a static
+        property of this pool's fault map, not of allocation state)."""
+        return len(self._weak_set)
 
     # ---- copy-on-write prefix sharing ------------------------------------
     @property
@@ -522,8 +538,10 @@ class PagePool:
                 page_words=leaf.page_words,
                 page_base=np.ascontiguousarray(base, np.uint32),
                 page_pc=np.ascontiguousarray(pc, np.int32)))
-        return RequestPlacement(group="kv_cache", domain=self.domain,
-                                leaves=tuple(leaves))
+        return RequestPlacement(
+            group="kv_cache", domain=self.domain, leaves=tuple(leaves),
+            map_seed=(self.faultmap.seed
+                      if self.faultmap is not None else None))
 
 
 # ---------------------------------------------------------------------------

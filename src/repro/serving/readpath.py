@@ -169,6 +169,15 @@ def build_ctx(placement: GroupPlacement, faultmap: FaultMap, cache_avals,
     is table-driven either way; a paged placement additionally pins the
     KV tile to one page so the numerics match the paged batch kernel.
     """
+    ms = getattr(placement, "map_seed", None)
+    if ms is not None and ms != faultmap.seed:
+        raise ValueError(
+            f"kv_placement was exported from a pool whose fault map "
+            f"has seed {ms}, but the replay plan's fault map has seed "
+            f"{faultmap.seed}: a sharded scheduler's shards draw "
+            "distinct maps, so replay a request against ITS shard's "
+            "plan (sched.shard_plan(result.shard)) or the tokens "
+            "would silently diverge")
     table = faultmap.threshold_table(voltage)
     tabs = arena.leaf_addr_tables(placement)
     by_path = _avals_by_path(cache_avals)

@@ -1,5 +1,5 @@
 """Continuous-batching serving scheduler over the reliability-aware
-paged KV cache.
+paged KV cache, optionally sharded across a 1-D ``serve`` device mesh.
 
 PR 3's serving path decodes one fixed, contiguously placed batch at a
 time: admission happens once, at ``generate()``, and capacity is
@@ -35,33 +35,55 @@ requests:
     capacity reclaimed by tolerating weak blocks -- and by not storing
     shared prefixes twice -- directly into extra concurrent traffic.
 
-Token-equivalence contract (asserted in tests/test_scheduler.py):
-every request's tokens are bit-identical to running it alone through
-PR 3's ``generate()`` with the request's page placement
-(:meth:`PagePool.request_placement`) -- greedy and sampled, read and
-write injection modes, with and without ECC, shared prefix or not.
-The mechanism behind sharing-compatible injection: shared pages store
-*clean* K/V in every mode and the decode kernel's read-path masks are
-applied at load in every mode -- the stuck-at masks and the ECC round
-are idempotent, so privately-stored-corrupt pages re-mask to
-themselves while clean shared pages corrupt to exactly the standalone
-stored values.  The one exclusion is a *governor-driven* run whose
-voltage actually moves mid-request: the domain rail is global, so a
-re-plan triggered by a later admission also retunes the in-flight
-requests' thresholds, and a standalone replay (one constant
-``kv_voltage``) cannot reproduce that trajectory --
-``RequestResult.voltage`` records the admission-time re-plan, not a
-promise that the whole lifetime ran there.  ``kv_injection='rewrite'``
-(the legacy full-cache oracle) cannot address pages and is rejected up
-front.  Prompts longer than ``max_len`` are rejected at submit:
-chunked prefill writes the prompt through the ring in place and
-cannot rotate it the way the standalone prefill's tail-keep does.
+Mesh sharding (``mesh=`` + ``launch.mesh.make_serve_mesh``): the slot
+array, page pool and page tables are partitioned over the mesh's
+``serve`` axis.  Each shard owns its own arena blocks, its own
+*independently seeded* :class:`~repro.core.faultmap.FaultMap` (the
+per-part margin variation real fleets exhibit: distinct weak-row draws
+AND distinct per-PC threshold calibrations), its own governor and its
+own voltage setpoint -- heterogeneous fleets undervolt some stacks
+deeper than others, aggregated by :func:`repro.training.governor.
+fleet_report`.  The donated decode step stays ONE jitted program: a
+``shard_map`` whose body switches on ``lax.axis_index('serve')`` into
+the shard's seed-specialized branch.  Kernel seeds are folded into the
+pallas bodies at trace time throughout the stack (hash streams,
+per-plane mask seeds), so per-shard maps are obtained by branch
+specialization, never by tracing a seed -- one trace
+(``decode_traces == 1``), one pallas launch per shard, and the
+compiled step contains **zero collectives**: prefill chunks, paged
+decode attention and COW prefix sharing are shard-local by
+construction; only the sampled token lanes return to the host.
+
+Token-equivalence contract (asserted in tests/test_scheduler.py and
+tests/test_sharded_scheduler.py): every request's tokens are
+bit-identical to running it alone through PR 3's ``generate()`` with
+the request's page placement (:meth:`PagePool.request_placement`) on
+*its shard's* fault map -- greedy and sampled, read and write injection
+modes, with and without ECC, shared prefix or not, at every shard
+count.  The mechanism behind sharing-compatible injection: shared
+pages store *clean* K/V in every mode and the decode kernel's
+read-path masks are applied at load in every mode -- the stuck-at
+masks and the ECC round are idempotent, so privately-stored-corrupt
+pages re-mask to themselves while clean shared pages corrupt to
+exactly the standalone stored values.  The one exclusion is a
+*governor-driven* run whose voltage actually moves mid-request: the
+domain rail is global per shard, so a re-plan triggered by a later
+admission also retunes the in-flight requests' thresholds, and a
+standalone replay (one constant ``kv_voltage``) cannot reproduce that
+trajectory -- ``RequestResult.voltage`` records the admission-time
+re-plan, not a promise that the whole lifetime ran there.
+``kv_injection='rewrite'`` (the legacy full-cache oracle) cannot
+address pages and is rejected up front.  Prompts longer than
+``max_len`` are rejected at submit: chunked prefill writes the prompt
+through the ring in place and cannot rotate it the way the standalone
+prefill's tail-keep does.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Dict, List, Optional
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,9 +92,69 @@ import numpy as np
 from repro.core.domains import CapacityError
 from repro.core.engine import _static_value, resolve_method
 from repro.core.faultmodel import V_MIN
+from repro.core.hbm import fleet_map_seeds
 from repro.models.base import ArchBundle, ArchConfig
 from repro.serving.engine import ServeConfig, sample_tokens
 from repro.serving.paged import PagedKVCache, PagePool, RequestPlacement
+
+
+class ShardLayoutError(ValueError):
+    """A shard layout that cannot partition the scheduler cleanly:
+    capacity or page pool not divisible by the shard count, a mesh
+    without the serve axis, or colliding per-shard fault-map seeds."""
+
+
+def validate_shard_layout(n_shards: int, num_slots: int, num_pages: int,
+                          *, base_seed: int = 0,
+                          seeds: Optional[Sequence[int]] = None,
+                          setpoints: Optional[Sequence[float]] = None,
+                          ) -> Tuple[Tuple[int, ...],
+                                     Tuple[Optional[float], ...]]:
+    """Check a serve-mesh layout and resolve per-shard seeds/setpoints.
+
+    Pure host logic (unit-testable without devices): slots and pages
+    must split evenly so every shard runs the same compiled shapes,
+    and per-shard fault-map seeds must be distinct -- two shards
+    sharing a seed would silently model one physical HBM part twice.
+    """
+    if n_shards < 1:
+        raise ShardLayoutError(f"n_shards={n_shards} must be >= 1")
+    if num_slots % n_shards:
+        raise ShardLayoutError(
+            f"ServeConfig capacity num_slots={num_slots} is not "
+            f"divisible by the shard count {n_shards}: every shard owns "
+            "an equal fixed-capacity slot range (pick num_slots = "
+            f"{n_shards} * slots_per_shard)")
+    if num_pages % n_shards:
+        raise ShardLayoutError(
+            f"num_pages={num_pages} is not divisible by the shard "
+            f"count {n_shards}: the page pool is partitioned into "
+            "equal per-shard arenas (pick num_pages = "
+            f"{n_shards} * pages_per_shard)")
+    if seeds is None:
+        seeds = fleet_map_seeds(base_seed, n_shards)
+    seeds = tuple(int(s) for s in seeds)
+    if len(seeds) != n_shards:
+        raise ShardLayoutError(
+            f"shard_seeds has {len(seeds)} entries for {n_shards} "
+            "shards: pass exactly one fault-map seed per shard")
+    dup = [s for s, c in collections.Counter(seeds).items() if c > 1]
+    if dup:
+        raise ShardLayoutError(
+            f"per-shard fault-map seed collision: seed(s) {sorted(dup)} "
+            "appear on more than one shard; every shard models an "
+            "independent physical HBM part and must draw its own map "
+            "(use core.hbm.fleet_map_seeds or pass distinct seeds)")
+    if setpoints is None:
+        sp: Tuple[Optional[float], ...] = (None,) * n_shards
+    else:
+        if len(setpoints) != n_shards:
+            raise ShardLayoutError(
+                f"shard_setpoints has {len(setpoints)} entries for "
+                f"{n_shards} shards: pass one governor setpoint per "
+                "shard (or None)")
+        sp = tuple(None if s is None else float(s) for s in setpoints)
+    return seeds, sp
 
 
 @dataclasses.dataclass
@@ -101,6 +183,7 @@ class RequestResult:
     voltage: Optional[float]          # KV-domain voltage at admission
     ttft_steps: Optional[int] = None  # steps from admission to token 0
     pages_shared: int = 0             # prefix pages mapped read-only
+    shard: int = 0                    # mesh shard that served the request
 
 
 @dataclasses.dataclass
@@ -119,6 +202,27 @@ class _AdmitPlan:
     wstart0: int                      # write floor (shared rows are r/o)
 
 
+@dataclasses.dataclass
+class _Shard:
+    """Per-shard runtime: the shard's own arena-backed page pool (its
+    fault map drawn from the shard's seed), paged-cache helper, voltage
+    governor + setpoint, injection method resolved against the shard's
+    map, and the donated admission-time jits specialized to the shard's
+    slice of the stacked pool state."""
+
+    index: int
+    seed: Optional[int]
+    plan: Any
+    pool: PagePool
+    kvc: PagedKVCache
+    governor: Any
+    setpoint: Optional[float]
+    method: str
+    voltage: float
+    admit_reset: Any = None
+    transition_pool: Any = None
+
+
 class ContinuousBatchingScheduler:
     """Serve overlapping requests through one compiled mixed
     prefill/decode step.
@@ -127,12 +231,24 @@ class ContinuousBatchingScheduler:
     width); ``num_pages`` x ``page_slots`` sizes the shared KV pool;
     ``max_active`` optionally throttles admissions below ``num_slots``
     (benchmarks use it to sweep concurrency on one compiled step).
+
+    With ``mesh`` (a 1-D serve mesh from ``make_serve_mesh``), slots
+    and pages are global totals split evenly across the mesh's shards;
+    each shard draws its own fault map from ``shard_seeds`` (default:
+    ``fleet_map_seeds`` of the plan's seed, so shard 0 reproduces the
+    single-device map) and, under a governor, admits against its own
+    ``shard_setpoints`` entry -- a heterogeneous-voltage fleet on one
+    compiled step.
     """
 
     def __init__(self, bundle: ArchBundle, cfg: ArchConfig, params,
                  sc: ServeConfig, *, num_slots: int, num_pages: int,
                  page_slots: int, max_active: Optional[int] = None,
-                 dist=None, interpret: Optional[bool] = None):
+                 dist=None, interpret: Optional[bool] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 mesh_axis: str = "serve",
+                 shard_seeds: Optional[Sequence[int]] = None,
+                 shard_setpoints: Optional[Sequence[float]] = None):
         if sc.kv_injection == "rewrite":
             raise ValueError(
                 "kv_injection='rewrite' re-injects whole contiguous "
@@ -148,6 +264,34 @@ class ContinuousBatchingScheduler:
         self.params = params
         self.sc = sc
         self.dist = dist
+        self.mesh = mesh
+        self._axis = mesh_axis
+        if mesh is not None:
+            if mesh_axis not in mesh.axis_names:
+                raise ShardLayoutError(
+                    f"mesh axis {mesh_axis!r} missing from mesh axes "
+                    f"{tuple(mesh.axis_names)}: build the serving mesh "
+                    "with launch.mesh.make_serve_mesh (1-D, axis "
+                    "'serve') or pass mesh_axis=<your axis>")
+            other = [a for a in mesh.axis_names
+                     if a != mesh_axis and mesh.shape[a] > 1]
+            if other:
+                raise ShardLayoutError(
+                    f"serve mesh must be 1-D: axes {other} have size > "
+                    "1 besides the serve axis (model-parallel axes are "
+                    "not supported by the sharded scheduler)")
+            if dist is not None:
+                raise ShardLayoutError(
+                    "mesh and dist are mutually exclusive: the serve "
+                    "mesh shards requests (data parallel); per-shard "
+                    "model parallelism is not supported")
+            self.n_shards = int(mesh.shape[mesh_axis])
+        else:
+            if shard_seeds is not None or shard_setpoints is not None:
+                raise ShardLayoutError(
+                    "shard_seeds/shard_setpoints require a serve mesh "
+                    "(pass mesh=make_serve_mesh(n))")
+            self.n_shards = 1
         self.num_slots = int(num_slots)
         self.max_active = int(num_slots if max_active is None
                               else max_active)
@@ -165,14 +309,25 @@ class ContinuousBatchingScheduler:
         plan = (sc.undervolt
                 if sc.undervolt is not None and sc.undervolt.enabled
                 else None)
-        self.pool = PagePool(bundle.module, cfg, max_len=sc.max_len,
-                             page_slots=page_slots, num_pages=num_pages,
-                             plan=plan)
-        self.kvc = PagedKVCache(self.pool, interpret=interpret)
+        base_seed = plan.map_seed if plan is not None else 0
+        seeds, setpoints = validate_shard_layout(
+            self.n_shards, self.num_slots, int(num_pages),
+            base_seed=base_seed, seeds=shard_seeds,
+            setpoints=shard_setpoints)
+        self.shard_seeds = seeds
+        self.slots_per_shard = self.num_slots // self.n_shards
+        self.pages_per_shard = int(num_pages) // self.n_shards
 
         # ---- voltage control / injection mode (mirrors generate()) ----
-        placed = self.pool.placement is not None
+        # Shard 0 carries the base plan exactly; the global checks below
+        # run against it, then each shard re-resolves what depends on
+        # its own fault map (method dispatch, governor frontier).
         self.governor = sc.governor
+        pool0 = PagePool(bundle.module, cfg, max_len=sc.max_len,
+                         page_slots=page_slots,
+                         num_pages=self.pages_per_shard, plan=plan,
+                         shard=(0 if mesh is not None else None))
+        placed = pool0.placement is not None
         if self.governor is not None:
             if sc.kv_voltage is not None:
                 raise ValueError(
@@ -188,13 +343,18 @@ class ContinuousBatchingScheduler:
                     "ServeConfig.governor is set but the undervolt plan "
                     "does not place 'kv_cache' (or is disabled): "
                     "admission governance would silently be a no-op")
-            if self.governor.config.domain != self.pool.domain.name:
+            if self.governor.config.domain != pool0.domain.name:
                 raise ValueError(
                     f"sc.governor governs domain "
                     f"{self.governor.config.domain!r} but the KV cache "
-                    f"is placed in domain {self.pool.domain.name!r}")
+                    f"is placed in domain {pool0.domain.name!r}")
+        if any(s is not None for s in setpoints) and self.governor is None:
+            raise ShardLayoutError(
+                "shard_setpoints need an admission governor "
+                "(ServeConfig.governor): setpoints are per-shard "
+                "governor walk targets")
         eff_v = sc.kv_voltage if sc.kv_voltage is not None else (
-            self.pool.domain.voltage if placed else None)
+            pool0.domain.voltage if placed else None)
         sv = _static_value(eff_v) if eff_v is not None else None
         self.active = placed and (
             self.governor is not None
@@ -205,8 +365,7 @@ class ContinuousBatchingScheduler:
         if mode == "auto":
             mode = "read"
         self.mode = mode
-        method = sc.kv_method
-        if self.active and method == "auto":
+        if self.active and sc.kv_method == "auto":
             if self.governor is not None:
                 raise ValueError(
                     "kv_method='auto' cannot dispatch under an admission "
@@ -219,14 +378,45 @@ class ContinuousBatchingScheduler:
                     "kv_voltage (method selection is static); pass "
                     "kv_method='word' or 'bitwise' explicitly for "
                     "traced voltage schedules")
-            method = ("word" if self.pool.domain.ecc
-                      else resolve_method(self.pool.faultmap,
-                                          self.pool.placement, sv))
-        self.method = method
-        self._voltage = float(sv) if sv is not None else (
+        volt0 = float(sv) if sv is not None else (
             eff_v if eff_v is not None else 0.0)
 
-        # ---- bookkeeping ----------------------------------------------
+        # ---- per-shard pools, fault maps, governors -------------------
+        self._shards: List[_Shard] = []
+        for k, seed in enumerate(seeds):
+            if plan is None:
+                plan_k = None
+            elif int(seed) == int(plan.map_seed):
+                plan_k = plan
+            else:
+                plan_k = dataclasses.replace(plan, map_seed=int(seed))
+            pool_k = pool0 if (k == 0 and plan_k is plan) else PagePool(
+                bundle.module, cfg, max_len=sc.max_len,
+                page_slots=page_slots, num_pages=self.pages_per_shard,
+                plan=plan_k, shard=(k if mesh is not None else None))
+            gov_k = None
+            if self.governor is not None:
+                if plan_k is plan:
+                    gov_k = self.governor
+                else:
+                    from repro.training.governor import VoltageGovernor
+                    gov_k = VoltageGovernor(plan_k, self.governor.config)
+            method_k = sc.kv_method
+            if self.active and method_k == "auto":
+                method_k = ("word" if pool_k.domain.ecc
+                            else resolve_method(pool_k.faultmap,
+                                                pool_k.placement, sv))
+            self._shards.append(_Shard(
+                index=k, seed=(int(seed) if plan is not None else None),
+                plan=plan_k, pool=pool_k,
+                kvc=PagedKVCache(pool_k, interpret=interpret),
+                governor=gov_k, setpoint=setpoints[k], method=method_k,
+                voltage=volt0))
+        self.pool = self._shards[0].pool       # single-device back-compat
+        self.kvc = self._shards[0].kvc
+        self.method = self._shards[0].method
+
+        # ---- bookkeeping (global slot id g = shard * S + slot) --------
         self.queue: collections.deque = collections.deque()
         self.results: Dict[Any, RequestResult] = {}
         s = self.num_slots
@@ -248,28 +438,47 @@ class ContinuousBatchingScheduler:
         self.traces: List[int] = []
 
         self.state = self._init_state()
-        self._step = jax.jit(self._step_fn, donate_argnums=(1,))
-        self._admit_reset = jax.jit(self._admit_reset_fn,
-                                    donate_argnums=(0,))
-        self._transition_pool = jax.jit(self._transition_pool_fn,
-                                        donate_argnums=(0,))
+        if mesh is not None:
+            from repro.launch.sharding import serve_sharding
+            self.state = jax.device_put(self.state,
+                                        serve_sharding(mesh, self._axis))
+            from jax.experimental.shard_map import shard_map
+            spec = jax.sharding.PartitionSpec(self._axis)
+            rep = jax.sharding.PartitionSpec()
+            self._step = jax.jit(
+                shard_map(self._shard_body, mesh=mesh,
+                          in_specs=(rep, spec, spec),
+                          out_specs=(spec, spec), check_rep=False),
+                donate_argnums=(1,))
+        else:
+            self._step = jax.jit(self._step_fn, donate_argnums=(1,))
+        for k, sh in enumerate(self._shards):
+            sh.admit_reset = jax.jit(
+                functools.partial(self._admit_reset_fn, k),
+                donate_argnums=(0,))
+            sh.transition_pool = jax.jit(
+                functools.partial(self._transition_pool_fn, k),
+                donate_argnums=(0,))
 
     # ---- compiled pieces --------------------------------------------------
     def _init_state(self):
-        s, c = self.num_slots, self.chunk
+        n, s, c = self.n_shards, self.slots_per_shard, self.chunk
+        pools = [sh.kvc.init_pool() for sh in self._shards]
+        p = self._shards[0].pool
         return {
-            "pool": self.kvc.init_pool(),
-            "ptab": jnp.full((s, self.pool.n_logical_pages),
-                             self.pool.scratch_id, jnp.int32),
-            "qpos": jnp.zeros((s,), jnp.int32),
-            "tok": jnp.zeros((s, c), jnp.int32),
-            "keys": jnp.zeros((s, 2), jnp.uint32),
-            "active": jnp.zeros((s,), bool),
+            "pool": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *pools),
+            "ptab": jnp.full((n, s, p.n_logical_pages),
+                             p.scratch_id, jnp.int32),
+            "qpos": jnp.zeros((n, s), jnp.int32),
+            "tok": jnp.zeros((n, s, c), jnp.int32),
+            "keys": jnp.zeros((n, s, 2), jnp.uint32),
+            "active": jnp.zeros((n, s), bool),
             # per-slot phase: decoding (True) vs chunked-prefilling
-            "dec": jnp.ones((s,), bool),
-            "cursor": jnp.zeros((s,), jnp.int32),
-            "plen": jnp.zeros((s,), jnp.int32),
-            "wstart": jnp.zeros((s,), jnp.int32),
+            "dec": jnp.ones((n, s), bool),
+            "cursor": jnp.zeros((n, s), jnp.int32),
+            "plen": jnp.zeros((n, s), jnp.int32),
+            "wstart": jnp.zeros((n, s), jnp.int32),
         }
 
     def _sample_one(self, logits, key):
@@ -278,10 +487,17 @@ class ContinuousBatchingScheduler:
         contract has a single sampling code path)."""
         return sample_tokens(logits, key, self.sc.temperature)
 
-    def _step_fn(self, params, state, v):
-        self.traces.append(1)
+    def _shard_step(self, k, params, state, v):
+        """One shard's mixed prefill/decode step on its local state
+        (leaves unstacked: pool (...), ptab (S, n_lp), ...).  Closes
+        over the shard's kvc -- its fault map's seed and calibration
+        constants fold into this branch at trace time, which is exactly
+        how distinct shards get distinct weak-row draws and threshold
+        tables inside ONE compiled program."""
+        sh = self._shards[k]
         module = self.bundle.module
         c = self.chunk
+        s = self.slots_per_shard
         act, dec = state["active"], state["dec"]
         cursor, plen = state["cursor"], state["plen"]
         cols = jnp.arange(c, dtype=jnp.int32)
@@ -297,8 +513,8 @@ class ContinuousBatchingScheduler:
         # Read-path masks run in EVERY mode: idempotent on privately
         # stored-corrupt pages, and the only way clean shared pages can
         # read as each tenant's standalone stored-corrupt values.
-        ctx = self.kvc.make_ctx(
-            state["ptab"], v, method=self.method, inject=self.active,
+        ctx = sh.kvc.make_ctx(
+            state["ptab"], v, method=sh.method, inject=self.active,
             dec=dec, wstart=state["wstart"], prefill_end=prefill_end)
         ks = jax.vmap(jax.random.split)(state["keys"])
         new_keys, ki = ks[:, 0], ks[:, 1]
@@ -309,10 +525,10 @@ class ContinuousBatchingScheduler:
             # write-path injection covers only decoding slots' writes;
             # prefill writes stay clean until the transition injection
             ptab_inj = jnp.where(dec[:, None], state["ptab"],
-                                 self.pool.scratch_id)
-            pool = self.kvc.post_step_inject(
+                                 sh.pool.scratch_id)
+            pool = sh.kvc.post_step_inject(
                 pool, ptab_inj, state["qpos"], v, mode=self.mode,
-                method=self.method)
+                method=sh.method)
         # sample column: decode lanes at 0, a finishing prefill at its
         # last prompt lane (the standalone post-prefill logits row)
         fin = act & ~dec & (plen - cursor <= c)
@@ -325,7 +541,7 @@ class ContinuousBatchingScheduler:
                                      axis=1)[:, 0]
         nt = jax.vmap(lambda l, kk: self._sample_one(l[None], kk)[0])(
             lg, ki)[:, None]
-        pad = jnp.zeros((self.num_slots, c - 1), jnp.int32)
+        pad = jnp.zeros((s, c - 1), jnp.int32)
         nt_row = jnp.concatenate([nt, pad], axis=1) if c > 1 else nt
         new_state = {
             "pool": pool,
@@ -344,12 +560,48 @@ class ContinuousBatchingScheduler:
         }
         return new_state, nt
 
-    def _admit_reset_fn(self, pool_tree, reset_ids, fork_src, fork_dst,
-                        fork_rows, fork_pos0):
-        return self.kvc.reset_and_fork(pool_tree, reset_ids, fork_src,
-                                       fork_dst, fork_rows, fork_pos0)
+    def _step_fn(self, params, state, v):
+        """Reference all-shard step on the stacked state (the mesh-less
+        execution path, and the jaxpr surface tests/benchmarks count
+        pallas launches on -- one launch per shard).  ``v`` may be a
+        scalar (broadcast: homogeneous fleet) or a (n_shards,) vector
+        of per-shard voltages."""
+        self.traces.append(1)
+        v = jnp.broadcast_to(jnp.asarray(v, jnp.float32),
+                             (self.n_shards,))
+        outs = [self._shard_step(
+                    k, params,
+                    jax.tree_util.tree_map(lambda x: x[k], state), v[k])
+                for k in range(self.n_shards)]
+        new_state = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[o[0] for o in outs])
+        return new_state, jnp.stack([o[1] for o in outs])
 
-    def _transition_pool_fn(self, pool_tree, priv, shared, v):
+    def _shard_body(self, params, state, v):
+        """shard_map body: every device runs its own shard's branch of
+        one switch on the serve-axis index.  Each branch is
+        seed-specialized (static fault-map constants), state slices are
+        shard-local, and nothing crosses the mesh -- the compiled step
+        has zero collectives."""
+        self.traces.append(1)
+        idx = jax.lax.axis_index(self._axis)
+        local = jax.tree_util.tree_map(lambda x: x[0], state)
+        branches = [functools.partial(self._shard_step, k)
+                    for k in range(self.n_shards)]
+        new_local, nt = jax.lax.switch(idx, branches, params, local, v[0])
+        return (jax.tree_util.tree_map(lambda x: x[None], new_local),
+                nt[None])
+
+    def _admit_reset_fn(self, k, pool_tree, reset_ids, fork_src,
+                        fork_dst, fork_rows, fork_pos0):
+        sh = self._shards[k]
+        sub = jax.tree_util.tree_map(lambda x: x[k], pool_tree)
+        sub = sh.kvc.reset_and_fork(sub, reset_ids, fork_src, fork_dst,
+                                    fork_rows, fork_pos0)
+        return jax.tree_util.tree_map(lambda x, y: x.at[k].set(y),
+                                      pool_tree, sub)
+
+    def _transition_pool_fn(self, k, pool_tree, priv, shared, v):
         """Prefill->decode transition injection: the paged twin of the
         standalone engine's post-prefill ``init_inject`` over the whole
         cache.  Private pages take the mode's full treatment; pages
@@ -358,11 +610,15 @@ class ContinuousBatchingScheduler:
         standalone stored corruption at load -- and only their ``pos``
         bookkeeping takes write-path faults (same physical words and
         values for every tenant, so replays agree)."""
-        tree = self.kvc.inject_pages(
-            pool_tree, priv, v, method=self.method,
+        sh = self._shards[k]
+        sub = jax.tree_util.tree_map(lambda x: x[k], pool_tree)
+        sub = sh.kvc.inject_pages(
+            sub, priv, v, method=sh.method,
             skip_kv=(self.mode == "read"))
-        return self.kvc.inject_pages(tree, shared, v, method=self.method,
-                                     skip_kv=True)
+        sub = sh.kvc.inject_pages(sub, shared, v, method=sh.method,
+                                  skip_kv=True)
+        return jax.tree_util.tree_map(lambda x, y: x.at[k].set(y),
+                                      pool_tree, sub)
 
     # ---- host loop --------------------------------------------------------
     def submit(self, request: Request) -> None:
@@ -390,21 +646,47 @@ class ContinuousBatchingScheduler:
     def n_active(self) -> int:
         return sum(1 for r in self._slots if r is not None)
 
-    def _free_slot(self) -> Optional[int]:
-        for i, r in enumerate(self._slots):
-            if r is None:
-                return i
+    def shard_active(self, k: int) -> int:
+        s = self.slots_per_shard
+        return sum(1 for r in self._slots[k * s:(k + 1) * s]
+                   if r is not None)
+
+    def shard_plan(self, k: int):
+        """Shard ``k``'s undervolt plan (its own fault-map seed) -- the
+        plan a standalone ``generate()`` replay of a request served on
+        shard ``k`` must run against."""
+        return self._shards[k].plan
+
+    @property
+    def _voltage(self) -> float:
+        return self._shards[0].voltage
+
+    @_voltage.setter
+    def _voltage(self, v: float) -> None:
+        # homogeneous override (benchmarks set a fleet-wide schedule)
+        for sh in self._shards:
+            sh.voltage = float(v)
+
+    def _volt_vec(self):
+        return jnp.asarray([sh.voltage for sh in self._shards],
+                           jnp.float32)
+
+    def _free_slot_in(self, k: int) -> Optional[int]:
+        s = self.slots_per_shard
+        for g in range(k * s, (k + 1) * s):
+            if self._slots[g] is None:
+                return g
         return None
 
-    def _plan_pages(self, req: Request, prompt: np.ndarray,
+    def _plan_pages(self, k: int, req: Request, prompt: np.ndarray,
                     n_new: int) -> _AdmitPlan:
-        """Match the prompt against the prefix cache, retain the shared
-        pages, and allocate the rest: prospective-shared pages (those
-        that will hold prompt rows and be published at the transition)
-        under the strictest ``shared_prefix`` tier, the remainder under
-        the request's own tier.  Raises CapacityError with every
-        side effect rolled back."""
-        p = self.pool
+        """Match the prompt against shard ``k``'s prefix cache, retain
+        the shared pages, and allocate the rest: prospective-shared
+        pages (those that will hold prompt rows and be published at the
+        transition) under the strictest ``shared_prefix`` tier, the
+        remainder under the request's own tier.  Raises CapacityError
+        with every side effect rolled back."""
+        p = self._shards[k].pool
         ps = p.page_slots
         plen = prompt.shape[0]
         holder = ("__req__", req.rid)
@@ -460,53 +742,74 @@ class ContinuousBatchingScheduler:
             cursor0=(matched if matched < plen else plen - 1),
             wstart0=(matched if matched < plen else plen))
 
-    def _rollback(self, plan: _AdmitPlan, rid) -> None:
+    def _rollback(self, k: int, plan: _AdmitPlan, rid) -> None:
+        p = self._shards[k].pool
         if plan.fs:
-            self.pool.release(plan.retained, ("__req__", rid))
-        self.pool.free(plan.row[plan.fs:])
+            p.release(plan.retained, ("__req__", rid))
+        p.free(plan.row[plan.fs:])
+
+    def _shard_order(self) -> List[int]:
+        """Admission routing: shards with a free slot, most free pages
+        first (ties to the lowest index) -- page-level load balancing
+        that also spreads tenants across fault maps."""
+        order = [k for k in range(self.n_shards)
+                 if self._free_slot_in(k) is not None]
+        order.sort(key=lambda k: (-self._shards[k].pool.free_pages, k))
+        return order
+
+    def _try_admit_on(self, k: int, req: Request, prompt: np.ndarray,
+                      n_new: int) -> bool:
+        """One shard's full admission attempt (pages, then governor),
+        rolled back and reported as False on backpressure."""
+        g = self._free_slot_in(k)
+        if g is None:
+            return False
+        plan = None
+        while plan is None:
+            try:
+                plan = self._plan_pages(k, req, prompt, n_new)
+            except CapacityError:
+                if not self._shards[k].pool.evict_prefix():
+                    return False               # backpressure on this shard
+        sh = self._shards[k]
+        if sh.governor is not None:
+            try:
+                # the governed domain must keep the WHOLE post-
+                # admission working set of ITS shard usable (the
+                # scheduler's analog of generate()'s whole-batch
+                # bytes), not just the new request's cache
+                sh.voltage = sh.governor.admit(
+                    (self.shard_active(k) + 1) * sh.pool.request_words * 4,
+                    setpoint=sh.setpoint)
+            except CapacityError:
+                self._rollback(k, plan, req.rid)
+                return False
+        self.queue.popleft()
+        self._admit(req, g, plan, prompt, n_new)
+        return True
 
     def admit_pending(self) -> int:
-        """Admit queued requests FIFO until a slot, the page pool, or
-        the governor pushes back (evicting idle prefix-cache entries
-        before giving up).  Returns the number admitted."""
+        """Admit queued requests FIFO until every shard's slots, page
+        pool, or governor pushes back (evicting idle prefix-cache
+        entries before giving up).  Returns the number admitted."""
         n = 0
         while self.queue and self.n_active < self.max_active:
-            slot = self._free_slot()
-            if slot is None:
-                break
             req = self.queue[0]
             prompt = np.asarray(req.tokens, np.int32).reshape(-1)
             n_new = int(req.max_new_tokens
                         if req.max_new_tokens is not None
                         else self.sc.max_new_tokens)
-            plan = None
-            while plan is None:
-                try:
-                    plan = self._plan_pages(req, prompt, n_new)
-                except CapacityError:
-                    if not self.pool.evict_prefix():
-                        break                  # backpressure: wait
-            if plan is None:
-                break
-            if self.governor is not None:
-                try:
-                    # the governed domain must keep the WHOLE post-
-                    # admission working set usable (the scheduler's
-                    # analog of generate()'s whole-batch bytes), not
-                    # just the new request's cache
-                    self._voltage = self.governor.admit(
-                        (self.n_active + 1) * self.pool.request_words * 4)
-                except CapacityError:
-                    self._rollback(plan, req.rid)
-                    break
-            self.queue.popleft()
-            self._admit(req, slot, plan, prompt, n_new)
+            if not any(self._try_admit_on(k, req, prompt, n_new)
+                       for k in self._shard_order()):
+                break                          # backpressure: wait
             n += 1
         return n
 
-    def _admit(self, req: Request, slot: int, plan: _AdmitPlan,
+    def _admit(self, req: Request, g: int, plan: _AdmitPlan,
                prompt: np.ndarray, n_new: int) -> None:
-        p = self.pool
+        k, s = divmod(g, self.slots_per_shard)
+        sh = self._shards[k]
+        p = sh.pool
         plen = prompt.shape[0]
         # scrub the freshly allocated pages (stale-tenant data) and COW-
         # copy the shared boundary page's clean prompt rows; retained
@@ -514,7 +817,7 @@ class ContinuousBatchingScheduler:
         reset_row = plan.row.copy()
         reset_row[:plan.fs] = p.scratch_id
         st = self.state
-        pool_tree = self._admit_reset(
+        pool_tree = sh.admit_reset(
             st["pool"], jnp.asarray(reset_row),
             jnp.int32(plan.fork_src),
             jnp.int32(plan.row[plan.fs] if plan.fork_rows
@@ -523,71 +826,73 @@ class ContinuousBatchingScheduler:
         key = req.key if req.key is not None else jax.random.PRNGKey(0)
         self.state = {
             "pool": pool_tree,
-            "ptab": st["ptab"].at[slot].set(jnp.asarray(plan.row)),
-            "qpos": st["qpos"].at[slot].set(plen),
+            "ptab": st["ptab"].at[k, s].set(jnp.asarray(plan.row)),
+            "qpos": st["qpos"].at[k, s].set(plen),
             "tok": st["tok"],
-            "keys": st["keys"].at[slot].set(key),
-            "active": st["active"].at[slot].set(True),
-            "dec": st["dec"].at[slot].set(False),
-            "cursor": st["cursor"].at[slot].set(plan.cursor0),
-            "plen": st["plen"].at[slot].set(plen),
-            "wstart": st["wstart"].at[slot].set(plan.wstart0),
+            "keys": st["keys"].at[k, s].set(key),
+            "active": st["active"].at[k, s].set(True),
+            "dec": st["dec"].at[k, s].set(False),
+            "cursor": st["cursor"].at[k, s].set(plan.cursor0),
+            "plen": st["plen"].at[k, s].set(plen),
+            "wstart": st["wstart"].at[k, s].set(plan.wstart0),
         }
-        self._slots[slot] = req.rid
-        self._slot_shared[slot] = plan.retained.copy()
-        self._slot_priv[slot] = plan.row[plan.fs:].copy()
-        self._slot_plan[slot] = plan
-        self._ptoks[slot] = prompt
-        self._dec_h[slot] = False
-        self._cursor_h[slot] = plan.cursor0
-        self._plen_h[slot] = plen
+        self._slots[g] = req.rid
+        self._slot_shared[g] = plan.retained.copy()
+        self._slot_priv[g] = plan.row[plan.fs:].copy()
+        self._slot_plan[g] = plan
+        self._ptoks[g] = prompt
+        self._dec_h[g] = False
+        self._cursor_h[g] = plan.cursor0
+        self._plen_h[g] = plen
         self._admit_step[req.rid] = self.steps
         self._out[req.rid] = []
         self._remaining[req.rid] = n_new
         self._meta[req.rid] = RequestResult(
             rid=req.rid, tokens=None, page_ids=plan.row.copy(),
             placement=p.request_placement(plan.row),
-            voltage=(self._voltage if p.placement is not None else None),
-            pages_shared=plan.fs)
+            voltage=(sh.voltage if p.placement is not None else None),
+            pages_shared=plan.fs, shard=k)
         self.admitted += 1
         self.peak_active = max(self.peak_active, self.n_active)
 
-    def _transition(self, slot: int) -> None:
+    def _transition(self, g: int) -> None:
         """Prefill finished this step: publish shareable pages, inject
         the request's pages (the standalone ``init_inject`` twin), and
         flip the slot to the decode phase."""
-        rid = self._slots[slot]
-        plan = self._slot_plan[slot]
-        p = self.pool
+        k, s = divmod(g, self.slots_per_shard)
+        rid = self._slots[g]
+        plan = self._slot_plan[g]
+        sh = self._shards[k]
+        p = sh.pool
         if plan.eligible:
             own = plan.row[plan.fs:plan.cover]
             if len(own):
                 p.share(own, ("__req__", rid))
-                self._slot_shared[slot] = np.concatenate(
-                    [self._slot_shared[slot], own])
-                self._slot_priv[slot] = plan.row[plan.cover:].copy()
-            prompt = self._ptoks[slot]
+                self._slot_shared[g] = np.concatenate(
+                    [self._slot_shared[g], own])
+                self._slot_priv[g] = plan.row[plan.cover:].copy()
+            prompt = self._ptoks[g]
             plen = prompt.shape[0]
             lengths = list(range(p.page_slots, plen, p.page_slots))
             for ln in lengths + [plen]:
                 p.register_prefix(prompt[:ln],
                                   plan.row[:-(-ln // p.page_slots)])
         st = self.state
-        new_state = {**st, "dec": st["dec"].at[slot].set(True)}
+        new_state = {**st, "dec": st["dec"].at[k, s].set(True)}
         if self.active:
             pad = np.full(p.n_logical_pages, p.scratch_id, np.int32)
             priv = pad.copy()
-            priv[:len(self._slot_priv[slot])] = self._slot_priv[slot]
+            priv[:len(self._slot_priv[g])] = self._slot_priv[g]
             shared = pad.copy()
             nsh = plan.cover if plan.eligible else 0
             shared[:nsh] = plan.row[:nsh]
-            new_state["pool"] = self._transition_pool(
+            new_state["pool"] = sh.transition_pool(
                 st["pool"], jnp.asarray(priv), jnp.asarray(shared),
-                jnp.float32(self._voltage))
+                jnp.float32(sh.voltage))
         self.state = new_state
-        self._dec_h[slot] = True
+        self._dec_h[g] = True
 
-    def _collect(self, slot: int, rid, token: int) -> None:
+    def _collect(self, g: int, rid, token: int) -> None:
         out = self._out[rid]
         if not out:
             self._meta[rid].ttft_steps = (self.steps
@@ -595,72 +900,77 @@ class ContinuousBatchingScheduler:
         out.append(int(token))
         self._remaining[rid] -= 1
         if self._remaining[rid] == 0:
-            self._retire(slot)
+            self._retire(g)
 
-    def _retire(self, slot: int) -> None:
-        rid = self._slots[slot]
+    def _retire(self, g: int) -> None:
+        k, s = divmod(g, self.slots_per_shard)
+        sh = self._shards[k]
+        rid = self._slots[g]
         res = self._meta.pop(rid)
         res.tokens = np.asarray(self._out.pop(rid), np.int32)[None, :]
         self.results[rid] = res
-        if len(self._slot_shared[slot]):
-            self.pool.release(self._slot_shared[slot], ("__req__", rid))
-        if len(self._slot_priv[slot]):
-            self.pool.free(self._slot_priv[slot])
+        if len(self._slot_shared[g]):
+            sh.pool.release(self._slot_shared[g], ("__req__", rid))
+        if len(self._slot_priv[g]):
+            sh.pool.free(self._slot_priv[g])
         del self._remaining[rid]
         del self._admit_step[rid]
-        self._slots[slot] = None
-        self._slot_priv[slot] = None
-        self._slot_shared[slot] = None
-        self._slot_plan[slot] = None
-        self._ptoks[slot] = None
-        self._dec_h[slot] = True
+        self._slots[g] = None
+        self._slot_priv[g] = None
+        self._slot_shared[g] = None
+        self._slot_plan[g] = None
+        self._ptoks[g] = None
+        self._dec_h[g] = True
         st = self.state
         self.state = {
             **st,
-            "ptab": st["ptab"].at[slot].set(self.pool.scratch_id),
-            "active": st["active"].at[slot].set(False),
-            "dec": st["dec"].at[slot].set(True),
+            "ptab": st["ptab"].at[k, s].set(sh.pool.scratch_id),
+            "active": st["active"].at[k, s].set(False),
+            "dec": st["dec"].at[k, s].set(True),
         }
 
     def _feed_chunks(self) -> None:
         """Host -> device refresh of the prompt-chunk token lanes of
         every prefilling slot (decoding slots keep their sampled
         token in lane 0)."""
-        idx = [i for i, r in enumerate(self._slots)
-               if r is not None and not self._dec_h[i]]
+        idx = [g for g, r in enumerate(self._slots)
+               if r is not None and not self._dec_h[g]]
         if not idx:
             return
         rows = np.zeros((len(idx), self.chunk), np.int32)
-        for j, i in enumerate(idx):
-            cur = self._cursor_h[i]
-            t = self._ptoks[i][cur:cur + self.chunk]
+        for j, g in enumerate(idx):
+            cur = self._cursor_h[g]
+            t = self._ptoks[g][cur:cur + self.chunk]
             rows[j, :len(t)] = t
-        self.state["tok"] = self.state["tok"].at[
-            np.asarray(idx)].set(jnp.asarray(rows))
+        ks = np.asarray([g // self.slots_per_shard for g in idx])
+        ss = np.asarray([g % self.slots_per_shard for g in idx])
+        self.state["tok"] = self.state["tok"].at[ks, ss].set(
+            jnp.asarray(rows))
 
     def step_once(self) -> None:
         """One mixed step: every prefilling slot consumes a prompt
-        chunk, every decoding slot one token (single compiled call);
-        then transition finished prefills, collect tokens, and retire
-        finished requests."""
+        chunk, every decoding slot one token (single compiled call
+        across all shards); then transition finished prefills, collect
+        tokens, and retire finished requests."""
         self._feed_chunks()
         self.state, nt = self._step(self.params, self.state,
-                                    jnp.float32(self._voltage))
-        toks = np.asarray(nt)[:, 0]
+                                    self._volt_vec())
+        # (n_shards, S, 1) -> global slot order g = shard * S + slot
+        toks = np.asarray(nt).reshape(-1)
         self.steps += 1
-        for slot, rid in enumerate(self._slots):
+        for g, rid in enumerate(self._slots):
             if rid is None:
                 continue
-            if self._dec_h[slot]:
-                self._collect(slot, rid, toks[slot])
+            if self._dec_h[g]:
+                self._collect(g, rid, toks[g])
                 continue
-            cur = self._cursor_h[slot]
-            fin = self._plen_h[slot] - cur <= self.chunk
-            self._cursor_h[slot] = min(cur + self.chunk,
-                                       self._plen_h[slot])
+            cur = self._cursor_h[g]
+            fin = self._plen_h[g] - cur <= self.chunk
+            self._cursor_h[g] = min(cur + self.chunk,
+                                    self._plen_h[g])
             if fin:
-                self._transition(slot)
-                self._collect(slot, rid, toks[slot])
+                self._transition(g)
+                self._collect(g, rid, toks[g])
 
     def run(self) -> Dict[Any, RequestResult]:
         """Drain the queue: admit / step / retire until every submitted
@@ -671,35 +981,62 @@ class ContinuousBatchingScheduler:
             if not self.n_active:
                 if not self.queue:
                     break
-                # Nothing running and the head request still cannot be
-                # admitted: it can never fit.  Re-run its admission
-                # checks so the capacity source raises its own error.
+                # Nothing running anywhere and the head request still
+                # cannot be admitted: it can never fit.  Re-run its
+                # admission checks on the best-provisioned shard so the
+                # capacity source raises its own error, naming the
+                # shard.
                 req = self.queue[0]
                 prompt = np.asarray(req.tokens, np.int32).reshape(-1)
                 n_new = int(req.max_new_tokens
                             if req.max_new_tokens is not None
                             else self.sc.max_new_tokens)
-                plan = self._plan_pages(req, prompt, n_new)
-                self._rollback(plan, req.rid)
-                if self.governor is not None:
-                    self.governor.admit(self.pool.request_words * 4)
+                k = max(range(self.n_shards),
+                        key=lambda i: self._shards[i].pool.free_pages)
+                sh = self._shards[k]
+                plan = self._plan_pages(k, req, prompt, n_new)
+                self._rollback(k, plan, req.rid)
+                if sh.governor is not None:
+                    sh.governor.admit(sh.pool.request_words * 4,
+                                      setpoint=sh.setpoint)
                 raise CapacityError(
-                    "scheduler", self.pool.request_words * 4,
-                    self.pool.free_pages * self.pool.page_set_words * 4,
-                    "admission stuck with an idle pool")
+                    "scheduler", sh.pool.request_words * 4,
+                    sh.pool.free_pages * sh.pool.page_set_words * 4,
+                    "admission stuck with an idle pool",
+                    shard=sh.pool.shard)
             self.step_once()
         return self.results
 
     @property
     def stats(self) -> Dict[str, Any]:
-        return {
+        shards = [{
+            "shard": sh.index,
+            "active": self.shard_active(sh.index),
+            "free_pages": sh.pool.free_pages,
+            "weak_pages": sh.pool.num_weak_pages,
+            "shared_pages": sh.pool.shared_pages,
+            "voltage": sh.voltage,
+            "setpoint": sh.setpoint,
+            "map_seed": sh.seed,
+        } for sh in self._shards]
+        out = {
             "steps": self.steps,
             "admitted": self.admitted,
             "peak_active": self.peak_active,
             "decode_traces": len(self.traces),
-            "free_pages": self.pool.free_pages,
+            "free_pages": sum(s["free_pages"] for s in shards),
             "voltage": self._voltage,
             "prefill_chunk": self.chunk,
-            "shared_pages": self.pool.shared_pages,
-            "prefix_entries": self.pool.prefix_entries,
+            "shared_pages": sum(s["shared_pages"] for s in shards),
+            "prefix_entries": sum(sh.pool.prefix_entries
+                                  for sh in self._shards),
+            "n_shards": self.n_shards,
+            "shards": shards,
         }
+        if any(sh.governor is not None for sh in self._shards):
+            from repro.training.governor import fleet_report
+            out["fleet"] = fleet_report(
+                [sh.governor for sh in self._shards],
+                [sh.voltage for sh in self._shards],
+                [sh.setpoint for sh in self._shards])
+        return out

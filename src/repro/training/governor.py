@@ -138,6 +138,19 @@ class VoltageGovernor:
         ``inject_groups`` targeting the governed domain."""
         return {self.config.domain: self.voltage_at(setpoint)}
 
+    # ---- host-side frontier lookups (fleet reporting) -------------------
+    def power_at(self, voltage: float) -> float:
+        """Normalized power factor of the governed domain at ``voltage``
+        (host-side interpolation on the precomputed frontier grid)."""
+        return float(np.interp(float(voltage), self._v_np, self._power_np))
+
+    def rate_at(self, voltage: float) -> float:
+        """Worst governed-PC stuck-cell rate at ``voltage`` (host-side,
+        log-domain interpolation on the frontier grid)."""
+        with np.errstate(divide="ignore"):
+            lr = np.log10(np.maximum(self._rate_np, 1e-300))
+        return float(10.0 ** np.interp(float(voltage), self._v_np, lr))
+
     # ---- admission-time re-plan (host-side, concrete) -------------------
     def admit(self, required_bytes: int,
               setpoint: Optional[float] = None) -> float:
@@ -166,3 +179,41 @@ class VoltageGovernor:
                 f"{self.config.v_hi}] at tolerable rate "
                 f"{self.config.tolerable_rate:g}")
         return float(self._v_np[hits[0]])       # ascending grid: deepest
+
+
+def fleet_report(governors, voltages, setpoints=None) -> Dict[str, object]:
+    """Aggregate heterogeneous per-shard operating points into one
+    fleet-level power/rate summary.
+
+    ``governors`` is one :class:`VoltageGovernor` per shard (entries may
+    be ``None`` for ungoverned shards -- they are skipped in the rate
+    aggregation and priced at their raw voltage); ``voltages`` is the
+    per-shard operating voltage.  The fleet's power factor is the mean
+    over shards (stacks draw independently, so the fleet's power is the
+    sum and the normalized factor is the mean) and the fleet's fault
+    exposure is the *worst* shard's worst-PC rate -- a fleet SLO is only
+    as good as its most aggressive shard.
+    """
+    per_shard = []
+    powers, rates = [], []
+    for k, (gov, v) in enumerate(zip(governors, voltages)):
+        entry = {"shard": k, "voltage": float(v)}
+        if setpoints is not None and setpoints[k] is not None:
+            entry["setpoint"] = float(setpoints[k])
+        if gov is not None:
+            entry["power_factor"] = gov.power_at(v)
+            entry["worst_rate"] = gov.rate_at(v)
+            rates.append(entry["worst_rate"])
+        else:
+            entry["power_factor"] = float(
+                DEFAULT_POWER_MODEL.power(float(v)))
+        powers.append(entry["power_factor"])
+        per_shard.append(entry)
+    out: Dict[str, object] = {
+        "shards": per_shard,
+        "power_factor_mean": float(np.mean(powers)),
+        "power_factor_max": float(np.max(powers)),
+    }
+    if rates:
+        out["worst_rate"] = float(np.max(rates))
+    return out

@@ -1,0 +1,317 @@
+"""Mesh-sharded continuous batching: the fleet acceptance contract.
+
+With a 1-D serve mesh, the scheduler's slots, page pool and page
+tables partition across shards; each shard owns an independently
+seeded fault map, its own governor setpoint, and its own traced
+voltage -- while the decode step stays ONE jitted donated program with
+one pallas launch per shard and ZERO collectives (requests never cross
+shards).  Every request served on shard k is bit-identical to
+replaying it alone through ``generate()`` against shard k's fault map.
+
+Single-device CI still exercises the whole surface: layout validation,
+seed derivation/independence (host-side fault-map checks), and the
+mesh(1) == unsharded equivalence.  Multi-shard cases skip unless the
+process was started with ``XLA_FLAGS=--xla_force_host_platform_
+device_count=8`` (the ci bench-smoke multi-device job does).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as arena
+from repro.core.domains import CapacityError, MemoryDomain
+from repro.core.hbm import VCU128, fleet_map_seeds
+from repro.launch.mesh import make_serve_mesh
+from repro.models.base import get_arch
+from repro.serving.engine import ServeConfig, generate
+from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
+                                     ShardLayoutError,
+                                     validate_shard_layout)
+from repro.training import trainer
+from repro.training.governor import GovernorConfig, VoltageGovernor
+from repro.training.undervolt import UndervoltPlan
+
+BUNDLE = get_arch("llama3.2-3b")
+CFG = BUNDLE.reduced
+PARAMS = trainer.init_state(BUNDLE, CFG, jax.random.PRNGKey(0))["params"]
+ALL_PCS = tuple(range(VCU128.num_pcs))
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+               "all-to-all", "collective-permute")
+
+needs2 = pytest.mark.skipif(len(jax.devices()) < 2,
+                            reason="needs >= 2 devices (set XLA_FLAGS="
+                            "--xla_force_host_platform_device_count)")
+needs4 = pytest.mark.skipif(len(jax.devices()) < 4,
+                            reason="needs >= 4 devices")
+
+
+def _plan(v=0.88, ecc=False):
+    return UndervoltPlan(
+        domains={"kv": MemoryDomain("kv", v, ALL_PCS, ecc=ecc)},
+        policy={"kv_cache": "kv"}, geometry=VCU128)
+
+
+def _sc(mode="read", temperature=0.0, plan=None, method="bitwise", **kw):
+    return ServeConfig(max_len=32, max_new_tokens=4,
+                       temperature=temperature, undervolt=plan,
+                       kv_injection=mode, kv_method=method, **kw)
+
+
+def _reqs(n, base_len=6):
+    r = np.random.RandomState(7)
+    return [(i, r.randint(0, CFG.vocab, (base_len + i,)), 4, "cheap",
+             100 + i) for i in range(n)]
+
+
+def _serve(sc, n_shards, reqs, **kw):
+    kw.setdefault("num_slots", 2 * n_shards)
+    kw.setdefault("num_pages", 8 * n_shards)
+    kw.setdefault("page_slots", 8)
+    if n_shards > 1 or kw.pop("force_mesh", False):
+        kw["mesh"] = make_serve_mesh(n_shards)
+    sched = ContinuousBatchingScheduler(BUNDLE, CFG, PARAMS, sc, **kw)
+    for rid, toks, n, tier, seed in reqs:
+        sched.submit(Request(rid=rid, tokens=toks, max_new_tokens=n,
+                             tier=tier, key=jax.random.PRNGKey(seed)))
+    res = sched.run()
+    return sched, res
+
+
+def _replay(sched, sc, res, reqs):
+    """Each request alone through generate() on ITS SHARD's fault map
+    and page placement."""
+    out = {}
+    for rid, toks, n, tier, seed in reqs:
+        sc_k = dataclasses.replace(
+            sc, undervolt=sched.shard_plan(res[rid].shard),
+            max_new_tokens=n)
+        out[rid] = np.asarray(generate(
+            BUNDLE, CFG, PARAMS, {"tokens": jnp.asarray(toks[None])},
+            sc_k, key=jax.random.PRNGKey(seed),
+            kv_placement=res[rid].placement))
+    return out
+
+
+# ---- layout validation (pure host, no devices needed) ---------------------
+
+def test_layout_rejects_indivisible_slots():
+    with pytest.raises(ShardLayoutError, match="num_slots=6 is not "
+                       "divisible by the shard count 4"):
+        validate_shard_layout(4, 6, 16)
+
+
+def test_layout_rejects_indivisible_pages():
+    with pytest.raises(ShardLayoutError, match="num_pages=18 is not "
+                       "divisible"):
+        validate_shard_layout(4, 8, 18)
+
+
+def test_layout_rejects_seed_collision():
+    with pytest.raises(ShardLayoutError, match="seed collision"):
+        validate_shard_layout(2, 4, 16, seeds=[7, 7])
+
+
+def test_layout_rejects_wrong_seed_count():
+    with pytest.raises(ShardLayoutError, match="exactly one fault-map "
+                       "seed per shard"):
+        validate_shard_layout(2, 4, 16, seeds=[1, 2, 3])
+
+
+def test_layout_rejects_wrong_setpoint_count():
+    with pytest.raises(ShardLayoutError, match="one governor setpoint "
+                       "per shard"):
+        validate_shard_layout(2, 4, 16, setpoints=[1.0])
+
+
+def test_mesh_axis_missing_is_loud():
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    with pytest.raises(ShardLayoutError, match="mesh axis 'serve' "
+                       "missing"):
+        ContinuousBatchingScheduler(
+            BUNDLE, CFG, PARAMS, _sc(plan=_plan()), num_slots=2,
+            num_pages=8, page_slots=8, mesh=mesh)
+
+
+def test_shard_kwargs_require_mesh():
+    with pytest.raises(ShardLayoutError, match="require a serve mesh"):
+        ContinuousBatchingScheduler(
+            BUNDLE, CFG, PARAMS, _sc(plan=_plan()), num_slots=2,
+            num_pages=8, page_slots=8, shard_seeds=[1, 2])
+
+
+def test_setpoints_require_governor():
+    with pytest.raises(ShardLayoutError, match="need an admission "
+                       "governor"):
+        ContinuousBatchingScheduler(
+            BUNDLE, CFG, PARAMS, _sc(plan=_plan()), num_slots=2,
+            num_pages=8, page_slots=8, mesh=make_serve_mesh(1),
+            shard_setpoints=[0.9])
+
+
+# ---- per-shard fault-map independence (host-side, any device count) -------
+
+def test_fleet_seeds_deterministic_and_distinct():
+    a = fleet_map_seeds(469, 8)
+    assert a == fleet_map_seeds(469, 8)          # reproducible
+    assert len(set(a)) == 8                      # distinct
+    assert a[0] == 469                           # shard 0 keeps the base
+
+
+def test_shard_fault_maps_draw_distinct_weak_rows():
+    plan = _plan()
+    sched = ContinuousBatchingScheduler(
+        BUNDLE, CFG, PARAMS, _sc(plan=plan), num_slots=2, num_pages=8,
+        page_slots=8, mesh=make_serve_mesh(1))
+    # shard 0 reproduces the single-device map exactly
+    assert sched.shard_plan(0).fault_map() is plan.fault_map()
+    # derived shard plans draw independent maps: distinct weak rows
+    # and distinct per-PC threshold calibrations, deterministically
+    seeds = fleet_map_seeds(plan.map_seed, 4)
+    maps = [dataclasses.replace(plan, map_seed=s).fault_map()
+            for s in seeds]
+    for a in range(4):
+        again = dataclasses.replace(plan, map_seed=seeds[a]).fault_map()
+        assert np.array_equal(again.weak_row_mask(0),
+                              maps[a].weak_row_mask(0))
+        for b in range(a + 1, 4):
+            assert not all(
+                np.array_equal(maps[a].weak_row_mask(pc),
+                               maps[b].weak_row_mask(pc))
+                for pc in range(VCU128.num_pcs))
+            assert not np.array_equal(
+                np.asarray(maps[a].threshold_table(0.88)),
+                np.asarray(maps[b].threshold_table(0.88)))
+
+
+# ---- mesh(1) == unsharded ------------------------------------------------
+
+def test_mesh1_matches_unsharded_bitwise():
+    reqs = _reqs(3)
+    sc = _sc(plan=_plan())
+    base, bres = _serve(sc, 1, reqs)
+    mesh, mres = _serve(sc, 1, reqs, force_mesh=True)
+    for rid, *_ in reqs:
+        assert np.array_equal(bres[rid].tokens, mres[rid].tokens)
+    assert mesh.stats["decode_traces"] == 1
+    assert mesh.stats["n_shards"] == 1
+
+
+def test_mesh1_step_donates_and_launches_once():
+    sc = _sc(plan=_plan())
+    sched, _ = _serve(sc, 1, _reqs(2), force_mesh=True)
+    hlo = sched._step.lower(PARAMS, sched.state,
+                            sched._volt_vec()).compile().as_text()
+    assert "input_output_alias" in hlo
+    assert not any(c in hlo for c in COLLECTIVES)
+    jaxpr = jax.make_jaxpr(sched._step_fn)(
+        PARAMS, sched.state, jnp.float32(0.88))
+    assert arena.count_pallas_calls(jaxpr) == 1
+    old = jax.tree_util.tree_leaves(sched.state)[0]
+    sched.step_once()
+    assert old.is_deleted()                      # cache donation held
+
+
+# ---- multi-shard contracts -----------------------------------------------
+
+@needs4
+@pytest.mark.parametrize("mode,temperature,ecc", [
+    ("read", 0.0, False), ("read", 0.7, False),
+    ("write", 0.0, False), ("read", 0.0, True),
+])
+def test_sharded_requests_match_solo_generate(mode, temperature, ecc):
+    reqs = _reqs(6)
+    sc = _sc(mode, temperature, _plan(ecc=ecc),
+             method=("word" if ecc else "bitwise"))
+    sched, res = _serve(sc, 4, reqs)
+    assert sched.stats["decode_traces"] == 1
+    assert {res[rid].shard for rid, *_ in reqs} == {0, 1, 2, 3}
+    refs = _replay(sched, sc, res, reqs)
+    for rid, *_ in reqs:
+        assert np.array_equal(refs[rid], res[rid].tokens), rid
+
+
+@needs4
+def test_sharded_step_is_one_program_no_collectives():
+    sc = _sc(plan=_plan())
+    sched, _ = _serve(sc, 4, _reqs(4))
+    assert sched.stats["decode_traces"] == 1
+    hlo = sched._step.lower(PARAMS, sched.state,
+                            sched._volt_vec()).compile().as_text()
+    assert "input_output_alias" in hlo           # donated on the jit
+    assert not any(c in hlo for c in COLLECTIVES)
+    # launch budget: flat per shard -- one pallas call per shard branch
+    # on the reference jaxpr surface
+    jaxpr = jax.make_jaxpr(sched._step_fn)(
+        PARAMS, sched.state, jnp.float32(0.88))
+    assert arena.count_pallas_calls(jaxpr) == 4
+    old = jax.tree_util.tree_leaves(sched.state)[0]
+    sched._feed_chunks()
+    sched.state, _ = sched._step(PARAMS, sched.state, sched._volt_vec())
+    assert old.is_deleted()
+
+
+@needs2
+def test_heterogeneous_setpoints_give_heterogeneous_voltages():
+    plan = _plan(0.91)
+    gov = VoltageGovernor(plan, GovernorConfig(
+        domain="kv", mode="rate", tolerable_rate=1e-3, v_lo=0.87))
+    sc = _sc(plan=plan, governor=gov)
+    setpoints = (1e-9, 1e-4)           # strict shard vs tolerant shard
+    sched, res = _serve(sc, 2, _reqs(4), shard_setpoints=setpoints)
+    st = sched.stats
+    vs = [s["voltage"] for s in st["shards"]]
+    assert vs[0] > vs[1]               # stricter rate cap -> higher V
+    assert [s["setpoint"] for s in st["shards"]] == list(setpoints)
+    fleet = st["fleet"]
+    assert len(fleet["shards"]) == 2
+    assert fleet["power_factor_max"] >= fleet["power_factor_mean"]
+    assert fleet["worst_rate"] <= 1e-4 * (1 + 1e-9)
+    assert {res[rid].shard for rid in res} == {0, 1}
+
+
+@needs2
+def test_replay_against_wrong_shard_map_is_rejected():
+    reqs = _reqs(4)
+    sc = _sc(plan=_plan())
+    sched, res = _serve(sc, 2, reqs)
+    rid = next(r for r, *_ in reqs if res[r].shard == 1)
+    toks = dict((r, t) for r, t, *_ in reqs)[rid]
+    # the placement is stamped with shard 1's map seed; replaying it
+    # against the base (shard 0) plan must refuse, not silently diverge
+    with pytest.raises(ValueError, match="ITS shard's plan"):
+        generate(BUNDLE, CFG, PARAMS, {"tokens": jnp.asarray(toks[None])},
+                 sc, key=jax.random.PRNGKey(0),
+                 kv_placement=res[rid].placement)
+
+
+@needs2
+def test_capacity_error_names_exhausted_shard():
+    sc = _sc(plan=_plan())
+    sched = ContinuousBatchingScheduler(
+        BUNDLE, CFG, PARAMS, sc, num_slots=4, num_pages=2, page_slots=8,
+        mesh=make_serve_mesh(2))            # 1 page/shard < 4-page need
+    sched.submit(Request(rid="big", tokens=np.arange(1, 9)))
+    with pytest.raises(CapacityError, match="on shard") as ei:
+        sched.run()
+    assert ei.value.shard in (0, 1)
+    assert ei.value.free_bytes >= 0
+
+
+@needs2
+def test_stats_report_per_shard_occupancy_and_weak_pages():
+    sc = _sc(plan=_plan())
+    sched, _ = _serve(sc, 2, _reqs(4))
+    st = sched.stats
+    assert st["n_shards"] == 2
+    assert [s["shard"] for s in st["shards"]] == [0, 1]
+    for s in st["shards"]:
+        assert s["active"] == 0                    # all retired
+        assert s["free_pages"] == 8
+        assert s["weak_pages"] >= 0
+        assert s["map_seed"] is not None
+    assert st["free_pages"] == 16
+    assert len({s["map_seed"] for s in st["shards"]}) == 2
