@@ -54,7 +54,8 @@ from repro.core.hbm import VCU128
 from repro.launch.mesh import make_serve_mesh
 from repro.models.base import get_arch
 from repro.serving.engine import ServeConfig
-from repro.serving.scheduler import ContinuousBatchingScheduler, Request
+from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
+                                     SelfHealConfig)
 from repro.training import trainer
 from repro.training.undervolt import UndervoltPlan
 
@@ -73,6 +74,19 @@ SHARD_COUNTS = (1, 2, 4, 8)    # counts above len(jax.devices()) skip
 SHARD_SLOTS = 2                # per-shard slot provision
 SHARD_PAGES = 2 * (MAX_LEN // PAGE_SLOTS)   # per-shard page provision
 SHARD_REPS = 2
+
+# ---- migration storm (self-healing recovery cost) -------------------
+V_STORM = 0.91                 # deep point where weak rows throw SECDED
+                               # corrections but strong rows stay clean
+STORM_PCS = (8, 15, 18, 29)    # least-reliable VCU128 pseudo-channels:
+                               # on the full-PC domain the reliability-
+                               # ordered pool parks every page on
+                               # channels whose weak rows stay silent
+STORM_AT = 8                   # decode step at which the rows flip weak
+STORM_ROWS = 2                 # distinct DRAM rows flipped mid-stream
+STORM_NEW_TOKENS = 33          # 32 decode steps: room to heal in-stream
+STORM_PAGES = N_REQUESTS * (MAX_LEN // PAGE_SLOTS) + 32  # mig headroom
+STORM_POINTS = ("clean", "guardband", "faulty")
 
 
 def _setup():
@@ -138,6 +152,93 @@ def _shared_requests(cfg):
                     max_new_tokens=NEW_TOKENS, tier="cheap",
                     key=jax.random.PRNGKey(100 + i))
             for i in range(N_REQUESTS)]
+
+
+def _storm_sched(bundle, cfg, params, point):
+    """One scheduler per storm point.  'clean' has no undervolt plan
+    (and therefore no self-healing loop -- the uninjected baseline);
+    'guardband' and 'faulty' share the SAME heal-enabled scheduler
+    shape with the worst-PC ECC plan, differing only in the runtime
+    voltage schedule: at V_GUARD the flipped rows stay silent, at
+    V_STORM they throw correctable SECDED events every read."""
+    if point == "clean":
+        plan, v, heal = None, 0.0, None
+    else:
+        plan = UndervoltPlan(
+            domains={"kv": MemoryDomain("kv", V_STORM, STORM_PCS,
+                                        ecc=True)},
+            policy={"kv_cache": "kv"}, geometry=VCU128)
+        v = V_GUARD if point == "guardband" else V_STORM
+        heal = SelfHealConfig()
+    sc = ServeConfig(max_len=MAX_LEN, max_new_tokens=STORM_NEW_TOKENS,
+                     undervolt=plan,
+                     kv_injection="auto" if plan is None else "read",
+                     kv_method="word")
+    s = ContinuousBatchingScheduler(
+        bundle, cfg, params, sc, num_slots=N_REQUESTS,
+        num_pages=STORM_PAGES, page_slots=PAGE_SLOTS, self_heal=heal)
+    if plan is not None:
+        s._voltage = v
+    return s
+
+
+def _storm_requests(cfg):
+    rng = np.random.RandomState(5)
+    return [Request(rid=f"m{i}",
+                    tokens=rng.randint(0, cfg.vocab, (PROMPT,)),
+                    max_new_tokens=STORM_NEW_TOKENS, tier="cheap",
+                    key=jax.random.PRNGKey(200 + i))
+            for i in range(N_REQUESTS)]
+
+
+def _flip_rows(s):
+    """Flip STORM_ROWS distinct live DRAM rows weak at runtime; returns
+    the set of affected page ids."""
+    hit, seen = set(), set()
+    for pid in sorted(s.pool._owned):
+        pc, row = s.pool.page_rows(pid)[0]
+        if (pc, row) in seen:
+            continue
+        seen.add((pc, row))
+        hit.update(int(p) for p in s.weaken_row(0, pc, row))
+        if len(seen) == STORM_ROWS:
+            break
+    return hit
+
+
+def _storm_drain(s, cfg, chaos):
+    """Step the full request stream manually, wall-timing every decode
+    step; at step STORM_AT (``chaos`` on) flip STORM_ROWS live rows
+    weak.  Returns (per-step seconds, flipped page ids, index of the
+    last step that performed a migration, migrations THIS drain ran
+    before the flip -- static weak pages are healed and quarantined
+    during the warm-up drain, so a nonzero pre-storm delta means the
+    steady state never converged).
+    """
+    for r in _storm_requests(cfg):
+        s.submit(r)
+    times, flipped, last_heal = [], set(), None
+
+    def _migs():
+        return sum(sh.migrations for sh in s._shards)
+
+    base = _migs()
+    mig_pre = 0
+    while s.queue or s.n_active:
+        s.admit_pending()
+        if not s.n_active:
+            break
+        if chaos and len(times) == STORM_AT:
+            mig_pre = _migs() - base
+            flipped = _flip_rows(s)
+        m0 = _migs()
+        t0 = time.perf_counter()
+        s.step_once()
+        times.append(time.perf_counter() - t0)
+        if _migs() > m0:
+            last_heal = len(times) - 1
+    s.results.clear()
+    return times, flipped, last_heal, mig_pre
 
 
 def _drain_collect(sched, cfg):
@@ -379,6 +480,70 @@ def run():
             f"launches={'/'.join(str(shard_launches[n]) for n in counts)};"
             "linear_capacity=pass;decode_traces=1;collectives=0")})
 
+    # ---- migration storm: rows flip weak mid-stream at c=8 -----------
+    # The self-healing contract's perf half: after the posterior
+    # accuses the flipped rows and the in-step migration drains their
+    # pages into quarantine, the steady-state decode step must return
+    # to its pre-storm cost -- post-recovery median step time within
+    # 10% of pre-storm.  At V_GUARD the same flip is silent (no
+    # corrections -> no migrations); 'clean' is the no-plan baseline.
+    storm = {}
+    for point in STORM_POINTS:
+        s = _storm_sched(bundle, cfg, params, point)
+        _storm_drain(s, cfg, chaos=False)        # warm-up: compiles step
+        times, flipped, last_heal, mig_pre = _storm_drain(
+            s, cfg, chaos=(point != "clean"))
+        st = s.stats
+        pre = float(np.median(times[2:STORM_AT]))
+        rec = (0 if last_heal is None
+               else max(0, last_heal - STORM_AT + 1))
+        post_w = times[STORM_AT + rec + 1:-1] or times[STORM_AT + rec:]
+        post = float(np.median(post_w))
+        storm[point] = dict(
+            s=s, pre=pre, post=post, rec=rec, flipped=flipped,
+            mig_pre=mig_pre,
+            migrations=st.get("migrations", 0),
+            quarantined=st.get("quarantined_pages", 0),
+            corrected=int(st.get("corrected", 0)),
+            uncorrectable=int(st.get("uncorrectable", 0)))
+        rows.append({
+            "name": f"sched_migration_storm_{point}_c{N_REQUESTS}",
+            "us_per_call": post * 1e6,
+            "derived": (
+                f"pre_storm_step_us={pre * 1e6:.0f};"
+                f"post_recovery_step_us={post * 1e6:.0f};"
+                f"tokens_per_sec_pre={N_REQUESTS / pre:.1f};"
+                f"tokens_per_sec_post={N_REQUESTS / post:.1f};"
+                f"post_over_pre_x={post / pre:.2f};"
+                f"storm_rows={0 if point == 'clean' else STORM_ROWS};"
+                f"storm_pages={len(flipped)};"
+                f"recovery_steps={rec};"
+                f"migrations={storm[point]['migrations']};"
+                f"quarantined_pages={storm[point]['quarantined']};"
+                f"corrected={storm[point]['corrected']};"
+                f"uncorrectable={storm[point]['uncorrectable']};"
+                f"concurrency={N_REQUESTS};decode_traces="
+                f"{len(s.traces)}")})
+
+    # ---- migration-storm acceptance asserts --------------------------
+    for point in STORM_POINTS:
+        assert len(storm[point]["s"].traces) == 1, (
+            point, len(storm[point]["s"].traces))
+    f, g = storm["faulty"], storm["guardband"]
+    assert f["mig_pre"] == 0, (
+        f"{f['mig_pre']} migrations before the storm: static weak "
+        "pages are driving the healing loop, not the flipped rows")
+    assert f["migrations"] >= 1 and f["quarantined"] >= 1, f
+    assert f["rec"] >= 1, (
+        "the storm never triggered an in-stream migration", f)
+    assert f["corrected"] > 0 and f["uncorrectable"] == 0, f
+    assert g["migrations"] == 0 and g["corrected"] == 0, (
+        "the flipped rows must stay silent at V_GUARD", g)
+    slow_storm = f["post"] / f["pre"]
+    assert slow_storm <= 1.10, (
+        f"post-recovery step time {slow_storm:.2f}x pre-storm "
+        f"(budget 1.10x): self-healing did not restore throughput")
+
     rows.append({
         "name": "sched_scaling_summary",
         "us_per_call": 0.0,
@@ -400,8 +565,14 @@ if __name__ == "__main__":
     # devices, and its shard-scaling rows must land in the same file
     # benchmarks/run.py writes).
     out_rows = run()
+    from benchmarks.run import _attach_telemetry
+    totals = {}
+    _attach_telemetry(out_rows, totals)
     for r in out_rows:
         print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
+    if totals:
+        print("# telemetry_counter_totals: " + ";".join(
+            f"{k}={v}" for k, v in sorted(totals.items())))
     if "--merge-json" in sys.argv:
         path = os.path.join("results", "benchmarks.json")
         all_rows = {}

@@ -23,8 +23,16 @@ tolerant shards undervolt deep, and the fleet report aggregates the
 power/reliability mix.  The decode step is still ONE compiled program
 with zero cross-shard traffic.
 
+With ``--chaos`` the stream runs on an ECC'd worst-channel domain and
+a live DRAM row is flipped weak mid-stream: the fused read path's
+SECDED correction counters feed the fault-map posterior, the accused
+row's pages migrate inside the decode step, and the row is
+quarantined -- watch the printed migration/quarantine counters while
+every request still finishes (and ``decode_traces`` still stays 1).
+
   PYTHONPATH=src python examples/serve_many.py
   PYTHONPATH=src python examples/serve_many.py --devices 4
+  PYTHONPATH=src python examples/serve_many.py --chaos
 """
 import argparse
 import os
@@ -36,6 +44,11 @@ def _parse():
     ap.add_argument("--devices", type=int, default=1,
                     help="serve-mesh shard count (forces that many "
                     "host devices; must be set before jax imports)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="flip a live DRAM row weak mid-stream and "
+                    "watch the self-healing loop detect it from the "
+                    "SECDED counters, migrate its pages and "
+                    "quarantine the row")
     return ap.parse_args()
 
 
@@ -55,7 +68,7 @@ from repro.launch.mesh import make_serve_mesh         # noqa: E402
 from repro.models.base import get_arch, init_params   # noqa: E402
 from repro.serving.engine import ServeConfig          # noqa: E402
 from repro.serving.scheduler import (                 # noqa: E402
-    ContinuousBatchingScheduler, Request)
+    ContinuousBatchingScheduler, Request, SelfHealConfig)
 from repro.training.undervolt import UndervoltPlan    # noqa: E402
 
 
@@ -66,24 +79,42 @@ def main():
     params = init_params(bundle.module.param_specs(cfg),
                          jax.random.PRNGKey(0))
 
-    plan = UndervoltPlan(
-        domains={"kv": MemoryDomain("kv", 0.90,
-                                    tuple(range(VCU128.num_pcs)))},
-        policy={"kv_cache": "kv"}, geometry=VCU128)
-    governor = plan.make_governor("kv", mode="rate",
-                                  tolerable_rate=1e-3, v_lo=0.87)
-    sc = ServeConfig(max_len=64, max_new_tokens=8, undervolt=plan,
-                     governor=governor, kv_injection="read",
-                     kv_method="bitwise", prefill_chunk=8,
-                     share_prefix=True)
     kw = {}
-    if n_shards > 1:
-        # heterogeneous rate setpoints: shard 0 is the strict end of
-        # the fleet (tight stuck-cell cap -> shallow undervolt), the
-        # last shard the tolerant end (deep undervolt, max savings)
-        setpoints = list(np.geomspace(1e-9, 1e-4, n_shards))
-        kw = dict(mesh=make_serve_mesh(n_shards),
-                  shard_setpoints=setpoints)
+    if ARGS.chaos:
+        # Self-healing demo: an ECC'd domain on the four least-
+        # reliable pseudo-channels, where a weak row at 0.91 V throws
+        # correctable SECDED events on every read -- the telemetry the
+        # healing loop feeds on.  (SelfHealConfig needs the fused ECC
+        # read path: kv_injection='read', kv_method='word'.)
+        plan = UndervoltPlan(
+            domains={"kv": MemoryDomain("kv", 0.91, (8, 15, 18, 29),
+                                        ecc=True)},
+            policy={"kv_cache": "kv"}, geometry=VCU128)
+        sc = ServeConfig(max_len=64, max_new_tokens=8, undervolt=plan,
+                         kv_injection="read", kv_method="word",
+                         prefill_chunk=8, share_prefix=True)
+        kw["self_heal"] = SelfHealConfig()
+        if n_shards > 1:
+            kw["mesh"] = make_serve_mesh(n_shards)
+    else:
+        plan = UndervoltPlan(
+            domains={"kv": MemoryDomain("kv", 0.90,
+                                        tuple(range(VCU128.num_pcs)))},
+            policy={"kv_cache": "kv"}, geometry=VCU128)
+        governor = plan.make_governor("kv", mode="rate",
+                                      tolerable_rate=1e-3, v_lo=0.87)
+        sc = ServeConfig(max_len=64, max_new_tokens=8, undervolt=plan,
+                         governor=governor, kv_injection="read",
+                         kv_method="bitwise", prefill_chunk=8,
+                         share_prefix=True)
+        if n_shards > 1:
+            # heterogeneous rate setpoints: shard 0 is the strict end
+            # of the fleet (tight stuck-cell cap -> shallow
+            # undervolt), the last shard the tolerant end (deep
+            # undervolt, max savings)
+            setpoints = list(np.geomspace(1e-9, 1e-4, n_shards))
+            kw = dict(mesh=make_serve_mesh(n_shards),
+                      shard_setpoints=setpoints)
     sched = ContinuousBatchingScheduler(
         bundle, cfg, params, sc, num_slots=4 * n_shards,
         num_pages=40 * n_shards, page_slots=8, **kw)
@@ -103,7 +134,27 @@ def main():
             max_new_tokens=4 + 2 * (i % 3), tier=tier,
             key=jax.random.PRNGKey(i)))
 
-    results = sched.run()
+    if ARGS.chaos:
+        # drain manually so the chaos hook fires mid-stream: after two
+        # steps, flip the DRAM row under the oldest live page weak
+        weakened = None
+        step_i = 0
+        while sched.queue or sched.n_active:
+            sched.admit_pending()
+            if not sched.n_active:
+                break
+            if weakened is None and step_i == 2:
+                owned = sorted(sched.pool._owned)
+                pc, row = sched.pool.page_rows(owned[0])[0]
+                pids = sched.weaken_row(0, pc, row)
+                weakened = (pc, row)
+                print(f"CHAOS @step {step_i}: pc{pc} row {row} went "
+                      f"weak ({len(pids)} live pages affected)")
+            sched.step_once()
+            step_i += 1
+        results = sched.results
+    else:
+        results = sched.run()
     for i, tier in enumerate(tiers):
         r = results[f"req{i}"]
         pool_k = sched._shards[r.shard].pool
@@ -126,11 +177,27 @@ def main():
         print(f"fleet: power_factor mean={fl['power_factor_mean']:.3f} "
               f"max={fl['power_factor_max']:.3f} "
               f"worst_rate={fl.get('worst_rate', 0):.2e}")
+    if ARGS.chaos:
+        sh0 = st["shards"][0]
+        print(f"self-heal: corrected={st['corrected']} "
+              f"uncorrectable={st['uncorrectable']} "
+              f"suspect_rows={sh0['suspect_rows']} "
+              f"migrations={st['migrations']} "
+              f"quarantined_pages={st['quarantined_pages']} "
+              f"quarantined_blocks={st['quarantined_blocks']}")
+        assert st["corrected"] > 0, "chaos row never produced telemetry"
+        assert st["uncorrectable"] == 0, st
+        assert st["migrations"] >= 1 and st["quarantined_pages"] >= 1, st
     assert st["decode_traces"] == 1
     shared = [results[f"req{i}"].pages_shared
               for i in range(len(tiers)) if i % 2]
-    assert any(s > 0 for s in shared[1:]), shared
-    if n_shards > 1:
+    if not ARGS.chaos:
+        # (under --chaos the reliability pin keeps the prefix cache
+        # from publishing on the deep worst-PC domain, so sharing is
+        # legitimately absent)
+        assert any(s > 0 for s in shared[1:]), shared
+    if n_shards > 1 and not ARGS.chaos:
+        # (--chaos runs the fleet at one deep voltage, no governor)
         vs = [sh["voltage"] for sh in st["shards"]]
         assert len(set(f"{v:.3f}" for v in vs)) > 1, (
             f"expected heterogeneous shard voltages, got {vs}")

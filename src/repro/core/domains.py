@@ -29,6 +29,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import functools
+import weakref
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -300,6 +301,8 @@ class DomainAllocator:
         self._owned: set = set()         # (pc, blk) currently allocated
         self._free_blocks = self._total_blocks
         self._weak_cache: Dict[int, object] = {}
+        self._quarantined: set = set()   # (pc, blk) retired for good
+        self._pools: List[object] = []   # live-page guards (weakrefs)
 
     @property
     def free_words(self) -> int:
@@ -343,6 +346,8 @@ class DomainAllocator:
         while len(taken) < n_blocks and cursor < self._total_blocks:
             pc, blk = self._block_at(cursor)
             cursor += 1
+            if (pc, blk) in self._quarantined:
+                continue                 # retired: never re-issued
             if avoid_weak_rows and self._is_weak(pc, blk):
                 spares.append((pc, blk))
                 continue
@@ -389,16 +394,8 @@ class DomainAllocator:
                     phys_base_word=base))
         return tuple(segments)
 
-    def free(self, segments: Tuple[Segment, ...]) -> None:
-        """Return the blocks backing ``segments`` to the allocator.
-
-        Blocks must have been handed out by :meth:`alloc` and not freed
-        since; anything else (double-free, a foreign segment, a block
-        outside this domain) raises a ``ValueError`` before any state
-        changes.  Freed blocks go back into the reliability-ordered
-        recycling list, so reallocating the same footprint reproduces
-        the same physical blocks in the same order.
-        """
+    def _segment_blocks(self, segments) -> List[Tuple[int, int]]:
+        """Validated (pc, block) pairs backing ``segments``."""
         blocks: List[Tuple[int, int]] = []
         for seg in segments:
             if seg.pc not in self._rank:
@@ -414,18 +411,107 @@ class DomainAllocator:
             blk0 = rel // ALIGN_WORDS
             for b in range(blk0, blk0 + -(-seg.n_words // ALIGN_WORDS)):
                 blocks.append((seg.pc, b))
+        return blocks
+
+    def _check_owned(self, blocks: List[Tuple[int, int]], verb: str):
         dup = sorted(set(b for b in blocks if b not in self._owned))
         if len(set(blocks)) != len(blocks):
             dup = sorted(set(b for b in blocks if blocks.count(b) > 1))
         if dup:
             raise ValueError(
-                f"double free in domain {self.domain.name!r}: "
+                f"double {verb} in domain {self.domain.name!r}: "
                 f"(pc, block) {dup[:4]} not currently allocated "
                 "(freed twice, or never handed out by this allocator)")
+
+    def register_pool(self, pool) -> None:
+        """Attach a :class:`~repro.serving.paged.PagePool` whose live
+        pages guard :meth:`free`: freeing a block that still backs a
+        live page in any registered pool is rejected (it would silently
+        alias two tenants onto one physical block)."""
+        self._pools.append(weakref.ref(pool))
+
+    def _live_guard(self, blocks: List[Tuple[int, int]], verb: str):
+        for ref in self._pools:
+            pool = ref()
+            if pool is None:
+                continue
+            live = pool.live_blocks() & set(blocks)
+            if live:
+                raise ValueError(
+                    f"cannot {verb} (pc, block) {sorted(live)[:4]} in "
+                    f"domain {self.domain.name!r}: still backing live "
+                    "pages of a registered PagePool (retire or migrate "
+                    "the pages first, or two tenants would alias one "
+                    "physical block)")
+
+    def free(self, segments: Tuple[Segment, ...]) -> None:
+        """Return the blocks backing ``segments`` to the allocator.
+
+        Blocks must have been handed out by :meth:`alloc` and not freed
+        since; anything else (double-free, a foreign segment, a block
+        outside this domain, a block still backing live pages of a
+        registered pool) raises a ``ValueError`` before any state
+        changes.  Freed blocks go back into the reliability-ordered
+        recycling list, so reallocating the same footprint reproduces
+        the same physical blocks in the same order.
+        """
+        blocks = self._segment_blocks(segments)
+        self._check_owned(blocks, "free")
+        self._live_guard(blocks, "free")
         for pc, blk in blocks:
             self._owned.discard((pc, blk))
             bisect.insort(self._freed, (self._rank[pc], blk, pc))
             self._free_blocks += 1
+
+    def quarantine(self, segments: Tuple[Segment, ...]) -> None:
+        """Permanently retire the blocks backing ``segments``.
+
+        The self-healing path: a block whose row turned weak is pulled
+        out of circulation -- removed from the owned set but *not*
+        returned to the recycling list, so reliability-ordered recycling
+        can never re-issue it.  Blocks must be currently allocated and
+        page-free (same guards as :meth:`free`).  Irreversible by
+        design; capacity shrinks accordingly.
+        """
+        blocks = self._segment_blocks(segments)
+        self._check_owned(blocks, "quarantine")
+        self._live_guard(blocks, "quarantine")
+        for pc, blk in blocks:
+            self._owned.discard((pc, blk))
+            self._quarantined.add((pc, blk))
+
+    @property
+    def quarantined_blocks(self) -> Tuple[Tuple[int, int], ...]:
+        return tuple(sorted(self._quarantined))
+
+    def adopt(self, placement: "GroupPlacement") -> None:
+        """Take ownership of an existing placement's blocks.
+
+        ``place_groups`` / ``place_groups_tiered`` build their
+        allocators internally and discard them; a long-lived owner (the
+        serving scheduler retiring and recycling page blocks online)
+        reconstructs ownership here: the placement's blocks become
+        owned, everything else in the domain is recycling-eligible in
+        reliability order, and the bump cursor is exhausted so
+        :meth:`free` / :meth:`quarantine` / re-:meth:`alloc` behave as
+        if this allocator had handed the placement out itself.  Only
+        valid on a fresh allocator.
+        """
+        if self._owned or self._cursor or self._freed or self._spares:
+            raise ValueError("adopt() requires a fresh allocator")
+        blocks: List[Tuple[int, int]] = []
+        for leaf in placement.leaves:
+            blocks.extend(self._segment_blocks(leaf.segments))
+        owned = set(blocks)
+        if len(owned) != len(blocks):
+            raise ValueError("placement maps one block twice")
+        self._owned = owned
+        for i in range(self._total_blocks):
+            pc, blk = self._block_at(i)
+            if (pc, blk) not in owned:
+                bisect.insort(self._freed, (self._rank[pc], blk, pc))
+        self._cursor = self._total_blocks
+        self._free_blocks = self._total_blocks - len(owned)
 
 
 def _sorted_leaves(tree):

@@ -42,7 +42,8 @@ from repro.kernels.bitflip import ops as bitflip_ops
 from repro.kernels.bitflip.bitflip import (BLOCK_LANES, BLOCK_WORDS,
                                            BLOCK_WORDS_LOG2, apply_masks,
                                            arena_bitflip_pallas, arena_masks)
-from repro.kernels.ecc.ecc import arena_ecc_codewords, arena_ecc_pallas
+from repro.kernels.ecc.ecc import (arena_ecc_codewords, arena_ecc_events,
+                                   arena_ecc_pallas)
 
 assert BLOCK_WORDS == ALIGN_WORDS, "arena blocks must match allocation slots"
 
@@ -139,29 +140,35 @@ def unpack_arena(arena2d, pack_meta):
 
 def _arena_oracle(arena2d, block_base, block_thr, *, seed: int, method: str,
                   words_per_row_log2: int, ecc: bool):
-    """Table-driven pure-jnp oracle: same operands, same mask math."""
+    """Table-driven pure-jnp oracle: same operands, same mask math.
+
+    Returns (out, uncorrectable count, corrected count) -- counts are
+    zero without ECC.
+    """
     num_blocks = block_base.shape[0]
     x = arena2d.reshape(num_blocks, BLOCK_WORDS)
     wid = (block_base[:, None]
            + jnp.arange(BLOCK_WORDS, dtype=jnp.uint32)[None, :])
     thr_row = tuple(block_thr[:, c][:, None] for c in range(NUM_THR_COLS))
     if ecc:
-        out, bad = arena_ecc_codewords(
+        out, corr, bad = arena_ecc_events(
             x, wid, thr_row, seed=seed,
             words_per_row_log2=words_per_row_log2)
         return (out.reshape(arena2d.shape),
-                jnp.sum(bad.astype(jnp.int32)))
+                jnp.sum(bad.astype(jnp.int32)),
+                jnp.sum(corr.astype(jnp.int32)))
     mask01, mask10 = arena_masks(wid, thr_row, seed=seed, method=method,
                                  words_per_row_log2=words_per_row_log2)
     mask10 = mask10 & ~mask01
     out = (x | mask01) & ~mask10
-    return out.reshape(arena2d.shape), jnp.zeros((), jnp.int32)
+    return (out.reshape(arena2d.shape), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32))
 
 
 def inject_placement(tree, placement: GroupPlacement, faultmap: FaultMap,
                      *, voltage=None, method: str = "auto",
                      interpret: Optional[bool] = None,
-                     use_ref: bool = False):
+                     use_ref: bool = False, with_corrected: bool = False):
     """Inject a whole group through one fused arena pass.
 
     ``voltage``: optional override of the domain's configured voltage.
@@ -172,16 +179,20 @@ def inject_placement(tree, placement: GroupPlacement, faultmap: FaultMap,
     numerical no-op (the threshold table gates itself to zero).
 
     Returns (faulted tree, uncorrectable-fault count) -- the count is
-    zero unless the domain has ECC.
+    zero unless the domain has ECC.  With ``with_corrected`` a third
+    value is appended: the corrected-codeword count (ECC telemetry),
+    computed from outputs the fused kernel already produces, so the
+    launch budget is unchanged.
     """
     domain = placement.domain
+    zero = jnp.zeros((), jnp.int32)
     if not placement.leaves:  # empty group: nothing placed, nothing to do
-        return tree, jnp.zeros((), jnp.int32)
+        return (tree, zero, zero) if with_corrected else (tree, zero)
     if voltage is None:
         voltage = domain.voltage
     sv = _static_value(voltage)
     if sv is not None and sv >= V_MIN - 1e-9:
-        return tree, jnp.zeros((), jnp.int32)
+        return (tree, zero, zero) if with_corrected else (tree, zero)
     if method == "auto":
         # ECC is word-path-only by design; don't resolve (or warn).
         method = "word" if domain.ecc else resolve_method(
@@ -196,21 +207,23 @@ def inject_placement(tree, placement: GroupPlacement, faultmap: FaultMap,
     wprl2 = faultmap.words_per_row_log2
 
     if use_ref:
-        out2d, bad = _arena_oracle(
+        out2d, bad, corr = _arena_oracle(
             arena2d, block_base, block_thr, seed=faultmap.seed,
             method=method, words_per_row_log2=wprl2, ecc=domain.ecc)
     elif domain.ecc:
-        out2d, bad_blocks = arena_ecc_pallas(
+        out2d, bad_blocks, corr_blocks = arena_ecc_pallas(
             arena2d, block_base, block_thr, seed=faultmap.seed,
             words_per_row_log2=wprl2, interpret=bool(interpret))
         bad = jnp.sum(bad_blocks)
+        corr = jnp.sum(corr_blocks)
     else:
         out2d = arena_bitflip_pallas(
             arena2d, block_base, block_thr, seed=faultmap.seed,
             method=method, words_per_row_log2=wprl2,
             interpret=bool(interpret))
-        bad = jnp.zeros((), jnp.int32)
-    return unpack_arena(out2d, pack_meta), bad
+        bad = corr = zero
+    out = unpack_arena(out2d, pack_meta)
+    return (out, bad, corr) if with_corrected else (out, bad)
 
 
 @functools.lru_cache(maxsize=256)
@@ -303,6 +316,30 @@ def corrupt_words(u32, off, block_base, block_thr, *, seed: int,
     out = apply_masks(u32, wid, thr, seed=seed, method=method,
                       words_per_row_log2=words_per_row_log2)
     return out, jnp.zeros((), jnp.int32)
+
+
+def ecc_event_counts(u32, off, block_base, block_thr, *, seed: int,
+                     words_per_row_log2: int,
+                     words_log2: int = BLOCK_WORDS_LOG2):
+    """Per-codeword ECC event flags for arbitrary leaf words.
+
+    The telemetry twin of :func:`corrupt_words`: identical table-driven
+    addressing and mask math, but instead of mutating data it returns
+    ``(corrected_bool, uncorrectable_bool)`` per codeword (last axis of
+    ``u32`` halved).  Because stuck-at masks are deterministic in the
+    physical word id, evaluating this on *clean* stored data yields
+    exactly the events the fused read-path kernel observed when it
+    loaded the same words this step -- a zero-extra-launch scrub.
+    """
+    off = off.astype(jnp.uint32)
+    jvec = (off >> np.uint32(words_log2)).astype(jnp.int32)
+    wid = (jnp.take(jnp.asarray(block_base), jvec)
+           + (off & np.uint32((1 << words_log2) - 1)))
+    rows = jnp.take(jnp.asarray(block_thr), jvec, axis=0)
+    thr = tuple(rows[..., c] for c in range(NUM_THR_COLS))
+    _, corrected, uncorrectable = arena_ecc_events(
+        u32, wid, thr, seed=seed, words_per_row_log2=words_per_row_log2)
+    return corrected, uncorrectable
 
 
 def _corrupt_full_leaf(leaf, block_base, block_thr, *, seed, method,
@@ -452,7 +489,8 @@ def count_pallas_calls(jaxpr) -> int:
 def inject_groups(groups: Dict[str, object],
                   placements: Dict[str, GroupPlacement],
                   faultmap: FaultMap, *, voltage=None, method: str = "auto",
-                  interpret: Optional[bool] = None, use_ref: bool = False):
+                  interpret: Optional[bool] = None, use_ref: bool = False,
+                  with_corrected: bool = False):
     """Arena-inject every group: one fused pass per domain.
 
     ``voltage`` as a scalar (possibly traced) overrides only domains
@@ -462,7 +500,9 @@ def inject_groups(groups: Dict[str, object],
     ``{domain name: scalar}`` dict to target domains explicitly,
     including safe ones.
 
-    Returns (faulted groups dict, total uncorrectable count).
+    Returns (faulted groups dict, total uncorrectable count); with
+    ``with_corrected`` also the total corrected-codeword count (ECC
+    telemetry for the training hot path -- same launches either way).
     """
     if isinstance(voltage, dict):
         # Validate against every provided placement (callers sharing one
@@ -476,6 +516,7 @@ def inject_groups(groups: Dict[str, object],
                 f"placements cover {sorted(known)}")
     out: Dict[str, object] = {}
     total_bad = jnp.zeros((), jnp.int32)
+    total_corr = jnp.zeros((), jnp.int32)
     for name, tree in groups.items():
         placement = placements[name]
         if isinstance(voltage, dict):
@@ -485,9 +526,13 @@ def inject_groups(groups: Dict[str, object],
             v = voltage
         else:
             v = None
-        faulted, bad = inject_placement(
+        faulted, bad, corr = inject_placement(
             tree, placement, faultmap, voltage=v,
-            method=method, interpret=interpret, use_ref=use_ref)
+            method=method, interpret=interpret, use_ref=use_ref,
+            with_corrected=True)
         out[name] = faulted
         total_bad = total_bad + bad
+        total_corr = total_corr + corr
+    if with_corrected:
+        return out, total_bad, total_corr
     return out, total_bad

@@ -1,0 +1,193 @@
+"""Online fault-map posterior: fold ECC telemetry into row beliefs.
+
+The paper's fault map is measured *offline*; Voltron-style runtime
+profiling and MoRS-style approximate models argue the loop should close
+online.  This module maintains, per (pseudo-channel, DRAM row), the
+posterior probability that the row behaves *weak* at the current
+operating point, updated from the SECDED correction counters the fused
+read path exports every step.
+
+Model (MoRS-approximate on purpose -- two row classes, not per-cell):
+
+  * prior: the static :class:`~repro.core.faultmap.FaultMap` draw.  A
+    row the map marks weak starts near-certainly weak; a strong row
+    carries a small "turned weak at runtime" prior (aging, sensing
+    drift, voltage-regulator tolerance -- the effects an offline map
+    cannot see).
+  * likelihood: reading ``n`` SECDED(72,64) codewords from a row at
+    voltage ``v`` yields ``c`` corrected events.  Corrections are
+    ~Binomial(n, p_class(v)) with p_weak >> p_strong in the exponential
+    regime, so each step adds a binomial log-likelihood ratio to the
+    row's accumulated evidence.
+
+The update is exact Bayes on the two-class model and costs O(observed
+rows); the LLR arithmetic (:func:`binomial_llr`) is pure jnp and safe
+to trace, though the scheduler folds counters host-side at the existing
+token-gather sync, so no extra device round-trips are introduced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.faultmap import FaultMap
+
+# Floor rates so log-ratios stay finite in the guardband (both
+# hypotheses predict ~zero corrections there -> LLR ~0, as it should).
+_RATE_FLOOR = 1e-12
+# A codeword correction needs >= 1 hit among 64 data bits + 8 parity
+# bits; for small per-bit rates p the per-codeword probability is
+# ~72 p (capped well below 1 to keep the binomial well-posed).
+_CW_BITS = 72.0
+_P_CAP = 0.5
+
+# Default prior that a statically-strong row has drifted weak at
+# runtime.  ~8 corrected codewords of weak-rate evidence overturn it.
+TURN_WEAK_PRIOR = 1e-3
+# Statically-weak rows: near-certain, but not literally 1.0 so the
+# posterior stays invertible by contrary evidence.
+STATIC_WEAK_PRIOR = 1.0 - 1e-4
+
+
+def binomial_llr(corrected, codewords, p_weak, p_strong):
+    """log P(c | weak) - log P(c | strong) for c ~ Binomial(n, p).
+
+    Pure jnp (traceable); the binomial coefficient cancels in the
+    ratio.  ``p_weak`` / ``p_strong`` are per-codeword correction
+    probabilities, already floored/capped by the caller.
+    """
+    c = jnp.asarray(corrected, jnp.float32)
+    n = jnp.asarray(codewords, jnp.float32)
+    pw = jnp.asarray(p_weak, jnp.float32)
+    ps = jnp.asarray(p_strong, jnp.float32)
+    return (c * (jnp.log(pw) - jnp.log(ps))
+            + (n - c) * (jnp.log1p(-pw) - jnp.log1p(-ps)))
+
+
+@dataclasses.dataclass
+class _RowBelief:
+    llr: float = 0.0          # accumulated evidence (log-odds delta)
+    corrected: int = 0        # lifetime corrected codewords observed
+    uncorrectable: int = 0
+    codewords: int = 0        # lifetime codewords read
+
+
+class FaultMapPosterior:
+    """Per-row weak-probability posterior over a static map prior.
+
+    Sparse: only rows with observed telemetry are tracked (the pool
+    places hot state on statically-strong rows, so the interesting set
+    is small).  Deterministic in (map, observation stream).
+    """
+
+    def __init__(self, faultmap: FaultMap, *,
+                 turn_weak_prior: float = TURN_WEAK_PRIOR,
+                 static_weak_prior: float = STATIC_WEAK_PRIOR):
+        self.faultmap = faultmap
+        self.turn_weak_prior = float(turn_weak_prior)
+        self.static_weak_prior = float(static_weak_prior)
+        self._rows: Dict[Tuple[int, int], _RowBelief] = {}
+        self.total_corrected = 0
+        self.total_uncorrectable = 0
+
+    # ---- priors ---------------------------------------------------------
+    def _prior_logodds(self, pc: int, row: int) -> float:
+        p = (self.static_weak_prior
+             if bool(self.faultmap.weak_row_mask(pc)[row])
+             else self.turn_weak_prior)
+        return math.log(p / (1.0 - p))
+
+    def _cw_probs(self, pc: int, voltage: float) -> Tuple[float, float]:
+        """Per-codeword correction probability under (weak, strong)."""
+        weak_r, strong_r = self.faultmap.row_rates(float(voltage))
+        pw = min(_P_CAP, max(_RATE_FLOOR, _CW_BITS * float(weak_r[pc])))
+        ps = min(_P_CAP, max(_RATE_FLOOR, _CW_BITS * float(strong_r[pc])))
+        return pw, ps
+
+    # ---- updates --------------------------------------------------------
+    def observe(self, pc: int, row: int, *, corrected: int, codewords: int,
+                voltage: float, uncorrectable: int = 0) -> None:
+        """Fold one step's counters for one row into its belief.
+
+        ``codewords``: how many SECDED codewords of this row the read
+        path touched this step; ``corrected``: how many reported a
+        (single-fault) correction.  Uncorrectable events are evidence
+        too -- a multi-fault codeword implies at least the weak regime,
+        so they count as corrections for the likelihood and are also
+        tallied separately.
+        """
+        if codewords <= 0:
+            return
+        hits = int(corrected) + int(uncorrectable)
+        b = self._rows.setdefault((int(pc), int(row)), _RowBelief())
+        pw, ps = self._cw_probs(int(pc), voltage)
+        b.llr += float(binomial_llr(min(hits, codewords), codewords, pw, ps))
+        b.corrected += int(corrected)
+        b.uncorrectable += int(uncorrectable)
+        b.codewords += int(codewords)
+        self.total_corrected += int(corrected)
+        self.total_uncorrectable += int(uncorrectable)
+
+    # ---- queries --------------------------------------------------------
+    def p_weak(self, pc: int, row: int) -> float:
+        b = self._rows.get((pc, row))
+        logodds = self._prior_logodds(pc, row) + (b.llr if b else 0.0)
+        # Stable sigmoid.
+        if logodds >= 0:
+            return 1.0 / (1.0 + math.exp(-logodds))
+        e = math.exp(logodds)
+        return e / (1.0 + e)
+
+    def suspect_rows(self, setpoint: float,
+                     threshold: float = 0.9) -> List[Tuple[int, int]]:
+        """Rows believed weak where weakness *matters* at ``setpoint``.
+
+        ``setpoint`` is the shard's operating voltage: in the guardband
+        (or wherever weak and strong rates coincide) no row is suspect
+        -- there is nothing to migrate away from.  Returns observed
+        rows with posterior weak-probability >= ``threshold``, sorted.
+        """
+        weak_r, strong_r = self.faultmap.row_rates(float(setpoint))
+        out = []
+        for (pc, row) in self._rows:
+            if weak_r[pc] <= strong_r[pc] + _RATE_FLOOR:
+                continue
+            if self.p_weak(pc, row) >= threshold:
+                out.append((pc, row))
+        return sorted(out)
+
+    def predicted_rates(self, v: float) -> np.ndarray:
+        """Per-PC expected stuck-cell rate under the posterior.
+
+        The prior blend (:meth:`FaultMap.pc_total_rate`) plus, for each
+        tracked row, the shift between its posterior and prior weak
+        probability, weighted by the row's 1/rows_per_pc share of the
+        channel -- the adaptive governor re-plans from this instead of
+        the static map.
+        """
+        base = self.faultmap.pc_total_rate(float(v)).astype(np.float64)
+        weak_r, strong_r = self.faultmap.row_rates(float(v))
+        rpp = float(self.faultmap.rows_per_pc)
+        for (pc, row) in self._rows:
+            prior = (self.static_weak_prior
+                     if bool(self.faultmap.weak_row_mask(pc)[row])
+                     else self.turn_weak_prior)
+            delta = self.p_weak(pc, row) - prior
+            base[pc] += delta * (weak_r[pc] - strong_r[pc]) / rpp
+        return np.clip(base, 0.0, 1.0)
+
+    # ---- reporting ------------------------------------------------------
+    @property
+    def tracked_rows(self) -> Iterable[Tuple[int, int]]:
+        return tuple(sorted(self._rows))
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "tracked_rows": len(self._rows),
+            "corrected": int(self.total_corrected),
+            "uncorrectable": int(self.total_uncorrectable),
+        }

@@ -59,14 +59,13 @@ def ecc_pallas(data2d: jax.Array, *, thresholds, seed: int, base_word: int,
     )(data2d)
 
 
-def arena_ecc_codewords(x, wid, thr_row, *, seed: int,
-                        words_per_row_log2: int):
-    """Fused inject+correct for one block from a traced threshold row.
-
-    Shared by the arena ECC kernel and the arena oracle (same contract
-    as :func:`repro.kernels.bitflip.bitflip.arena_masks`).
-    """
-    return _ref.ecc_codewords_vals(
+def arena_ecc_events(x, wid, thr_row, *, seed: int,
+                     words_per_row_log2: int):
+    """Fused inject+correct+telemetry for one block from a traced
+    threshold row: returns (out, corrected_bool, uncorrectable_bool)
+    per codeword.  Shared by the arena ECC kernel, the paged decode
+    kernel's telemetry path, and the scrub oracle."""
+    return _ref.ecc_codeword_events(
         x, wid, seed,
         q01_weak=thr_row[fm.COL_Q01_WEAK],
         q01_strong=thr_row[fm.COL_Q01_STRONG],
@@ -78,16 +77,29 @@ def arena_ecc_codewords(x, wid, thr_row, *, seed: int,
         words_per_row_log2=words_per_row_log2)
 
 
-def _arena_kernel(base_ref, thr_ref, x_ref, o_ref, bad_ref, *, seed,
-                  words_per_row_log2):
+def arena_ecc_codewords(x, wid, thr_row, *, seed: int,
+                        words_per_row_log2: int):
+    """Fused inject+correct for one block from a traced threshold row.
+
+    Shared by the arena ECC kernel and the arena oracle (same contract
+    as :func:`repro.kernels.bitflip.bitflip.arena_masks`).
+    """
+    out, _, uncorrectable = arena_ecc_events(
+        x, wid, thr_row, seed=seed, words_per_row_log2=words_per_row_log2)
+    return out, uncorrectable
+
+
+def _arena_kernel(base_ref, thr_ref, x_ref, o_ref, bad_ref, corr_ref, *,
+                  seed, words_per_row_log2):
     i = pl.program_id(0)
     x = x_ref[...]
     wid = block_word_ids(base_ref[i], x.shape)
     thr_row = tuple(thr_ref[i, c] for c in range(fm.NUM_THR_COLS))
-    out, bad = arena_ecc_codewords(x, wid, thr_row, seed=seed,
-                                   words_per_row_log2=words_per_row_log2)
+    out, corr, bad = arena_ecc_events(x, wid, thr_row, seed=seed,
+                                      words_per_row_log2=words_per_row_log2)
     o_ref[...] = out
     bad_ref[0, 0] = jnp.sum(bad.astype(jnp.int32))
+    corr_ref[0, 0] = jnp.sum(corr.astype(jnp.int32))
 
 
 def arena_ecc_pallas(arena2d: jax.Array, block_base: jax.Array,
@@ -95,8 +107,9 @@ def arena_ecc_pallas(arena2d: jax.Array, block_base: jax.Array,
                      words_per_row_log2: int, interpret: bool):
     """Fused inject+SECDED over a whole domain arena in one pass.
 
-    Same operand contract as ``arena_bitflip_pallas`` plus a per-block
-    uncorrectable-codeword count output.
+    Same operand contract as ``arena_bitflip_pallas`` plus per-block
+    uncorrectable- and corrected-codeword count outputs (the corrected
+    counts are the telemetry stream the self-healing loop consumes).
     """
     m, n = arena2d.shape
     assert n == BLOCK_LANES and m % BLOCK_SUBLANES == 0, (m, n)
@@ -112,11 +125,13 @@ def arena_ecc_pallas(arena2d: jax.Array, block_base: jax.Array,
                                lambda i, *_: (i, 0))],
         out_specs=(pl.BlockSpec((BLOCK_SUBLANES, BLOCK_LANES),
                                 lambda i, *_: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i, *_: (i, 0)),
                    pl.BlockSpec((1, 1), lambda i, *_: (i, 0))),
     )
     return pl.pallas_call(
         body,
         out_shape=(jax.ShapeDtypeStruct((m, n), jnp.uint32),
+                   jax.ShapeDtypeStruct((num_blocks, 1), jnp.int32),
                    jax.ShapeDtypeStruct((num_blocks, 1), jnp.int32)),
         grid_spec=grid_spec,
         interpret=interpret,

@@ -42,10 +42,15 @@ def popcount32(v):
     return (v * np.uint32(0x01010101)) >> np.uint32(24)
 
 
-def ecc_codewords_vals(data_u32, wid, seed: int, *, q01_weak, q01_strong,
-                       q10_weak, q10_strong, weak_row_q,
-                       par_q_weak, par_q_strong, words_per_row_log2: int):
-    """Returns (corrected_u32, uncorrectable_bool_per_codeword).
+def ecc_codeword_events(data_u32, wid, seed: int, *, q01_weak, q01_strong,
+                        q10_weak, q10_strong, weak_row_q,
+                        par_q_weak, par_q_strong, words_per_row_log2: int):
+    """Returns (corrected_u32, corrected_bool, uncorrectable_bool).
+
+    Per-codeword event flags: ``corrected`` marks single-fault codewords
+    the SECDED logic silently repaired (the telemetry signal -- these
+    cost nothing today but witness a row drifting weak), ``uncorrectable``
+    marks multi-fault codewords whose faulted data passes through.
 
     ``data_u32``/``wid`` must have an even number of elements along the
     last axis (codewords are adjacent word pairs).  Threshold operands
@@ -74,9 +79,23 @@ def ecc_codewords_vals(data_u32, wid, seed: int, *, q01_weak, q01_strong,
     par_hit = H.hash_stream(seed, STREAM_PARITY, cw_id) < q
     counts = counts + par_hit.astype(jnp.uint32)
 
+    corrected = counts == 1
     uncorrectable = counts >= 2
     keep_faulty = jnp.repeat(uncorrectable[..., None], 2, axis=-1).reshape(shape)
     out = jnp.where(keep_faulty, faulted, data_u32)
+    return out, corrected, uncorrectable
+
+
+def ecc_codewords_vals(data_u32, wid, seed: int, *, q01_weak, q01_strong,
+                       q10_weak, q10_strong, weak_row_q,
+                       par_q_weak, par_q_strong, words_per_row_log2: int):
+    """Returns (corrected_u32, uncorrectable_bool_per_codeword)."""
+    out, _, uncorrectable = ecc_codeword_events(
+        data_u32, wid, seed,
+        q01_weak=q01_weak, q01_strong=q01_strong,
+        q10_weak=q10_weak, q10_strong=q10_strong,
+        weak_row_q=weak_row_q, par_q_weak=par_q_weak,
+        par_q_strong=par_q_strong, words_per_row_log2=words_per_row_log2)
     return out, uncorrectable
 
 

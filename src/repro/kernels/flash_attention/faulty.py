@@ -44,7 +44,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import faultmap as fm
 from repro.kernels.bitflip.bitflip import (BLOCK_WORDS, BLOCK_WORDS_LOG2,
                                            apply_masks, select_block_tables)
-from repro.kernels.ecc.ecc import arena_ecc_codewords
+from repro.kernels.ecc.ecc import arena_ecc_codewords, arena_ecc_events
 
 NEG_INF = -1e30
 
@@ -326,7 +326,7 @@ def faulty_decode_attention(q, k, v, pos, *, q_pos, k_tables, v_tables,
 
 def corrupt_page_tile(x, base, thr_row, *, seed: int, method: str,
                       words_per_row_log2: int, ecc: bool, slot_ids=None,
-                      clean_slot=None):
+                      clean_slot=None, with_counts: bool = False):
     """Read-path corruption of one (rows, elems) K/V tile that is a
     single physical page: every word shares one threshold row and the
     physical ids are ``base`` plus the word's offset inside the page.
@@ -335,30 +335,50 @@ def corrupt_page_tile(x, base, thr_row, *, seed: int, method: str,
     base/row through the candidate selects), so a paged tile corrupts
     bit-identically to the contiguous kernel reading the same physical
     words.
+
+    ``with_counts`` (ECC only) additionally returns the tile's
+    corrected-codeword count -- the SECDED events the hardware would
+    report for free while the read happens; the clean slot's codewords
+    are excluded exactly like its corruption is.
     """
     u = _tile_to_u32(x)
     wid = (jnp.asarray(base, jnp.uint32)
            + jax.lax.broadcasted_iota(jnp.uint32, u.shape, 0)
            * np.uint32(u.shape[1])
            + jax.lax.broadcasted_iota(jnp.uint32, u.shape, 1))
+    corr_count = None
     if ecc:
         assert u.shape[1] % 2 == 0, "ECC tiles need an even word count"
-        out, _ = arena_ecc_codewords(u, wid, thr_row, seed=seed,
-                                     words_per_row_log2=words_per_row_log2)
+        out, corr, _ = arena_ecc_events(
+            u, wid, thr_row, seed=seed,
+            words_per_row_log2=words_per_row_log2)
+        if with_counts:
+            corr = corr.astype(jnp.int32)
+            if clean_slot is not None:
+                corr = jnp.where((slot_ids == clean_slot)[:, None], 0, corr)
+            corr_count = jnp.sum(corr)
     else:
+        assert not with_counts, "telemetry counts require ECC"
         out = apply_masks(u, wid, thr_row, seed=seed, method=method,
                           words_per_row_log2=words_per_row_log2)
     if clean_slot is not None:
         keep = (slot_ids == clean_slot)[:, None]
         out = jnp.where(keep, u, out)
-    return _tile_from_u32(out, x.dtype, x.shape)
+    tile = _tile_from_u32(out, x.dtype, x.shape)
+    if with_counts:
+        return tile, corr_count
+    return tile
 
 
 def _paged_kernel(ptab_ref, qpos_ref, kbase_ref, kthr_ref, vbase_ref,
                   vthr_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
-                  acc_ref, m_ref, l_ref, *, scale, causal, window, ps,
-                  kh, g, d, seed, method, words_per_row_log2, ecc,
-                  inject, length):
+                  *rest, scale, causal, window, ps, kh, g, d, seed,
+                  method, words_per_row_log2, ecc, inject, length,
+                  telemetry):
+    if telemetry:
+        telem_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        telem_ref, (acc_ref, m_ref, l_ref) = None, rest
     si = pl.program_id(0)
     pi = pl.program_id(1)
     npg = pl.num_programs(1)
@@ -383,14 +403,21 @@ def _paged_kernel(ptab_ref, qpos_ref, kbase_ref, kthr_ref, vbase_ref,
                     + jax.lax.broadcasted_iota(jnp.int32, (ps,), 0))
         k_thr = tuple(kthr_ref[pid, c] for c in range(fm.NUM_THR_COLS))
         v_thr = tuple(vthr_ref[pid, c] for c in range(fm.NUM_THR_COLS))
-        k_t = corrupt_page_tile(
-            k_t.reshape(ps, kh * d), kbase_ref[pid], k_thr, seed=seed,
-            method=method, words_per_row_log2=words_per_row_log2, ecc=ecc,
-            slot_ids=slot_ids, clean_slot=clean).reshape(ps, kh, d)
-        v_t = corrupt_page_tile(
-            v_t.reshape(ps, kh * d), vbase_ref[pid], v_thr, seed=seed,
-            method=method, words_per_row_log2=words_per_row_log2, ecc=ecc,
-            slot_ids=slot_ids, clean_slot=clean).reshape(ps, kh, d)
+        kw = dict(seed=seed, method=method,
+                  words_per_row_log2=words_per_row_log2, ecc=ecc,
+                  slot_ids=slot_ids, clean_slot=clean,
+                  with_counts=telemetry)
+        k_t = corrupt_page_tile(k_t.reshape(ps, kh * d), kbase_ref[pid],
+                                k_thr, **kw)
+        v_t = corrupt_page_tile(v_t.reshape(ps, kh * d), vbase_ref[pid],
+                                v_thr, **kw)
+        if telemetry:
+            (k_t, k_corr), (v_t, v_corr) = k_t, v_t
+            telem_ref[0, 0] = k_corr + v_corr
+        k_t = k_t.reshape(ps, kh, d)
+        v_t = v_t.reshape(ps, kh, d)
+    elif telemetry:
+        telem_ref[0, 0] = jnp.zeros((), jnp.int32)
 
     acc, l_new = _flash_tile_update(
         q_ref, k_t, v_t, pos_t, q_pos, acc_ref, m_ref, l_ref,
@@ -407,7 +434,8 @@ def paged_decode_attention(q, k_pool, v_pool, pos_pool, page_table, *,
                            q_pos, k_tables, v_tables, causal: bool = True,
                            window: int = 0, scale=None, seed: int,
                            method: str, words_per_row_log2: int,
-                           ecc: bool, inject: bool, interpret=None):
+                           ecc: bool, inject: bool, telemetry: bool = False,
+                           interpret=None):
     """Batched decode attention over a *paged* ring cache.
 
     The continuous-batching scheduler's kernel: every serving slot
@@ -429,8 +457,17 @@ def paged_decode_attention(q, k_pool, v_pool, pos_pool, page_table, *,
     slice, thresholds gathered at the current (possibly traced)
     voltage.
 
-    Returns (S, 1, H, D) in v.dtype.
+    ``telemetry`` (ECC read path only) appends an (S, n_lp) int32
+    output: corrected-codeword counts per (slot, logical page) -- the
+    SECDED correction events the memory controller reports for free on
+    real hardware.  Still one launch: the counts are a second output
+    tile of the same kernel, never an extra pass.
+
+    Returns (S, 1, H, D) in v.dtype; with ``telemetry`` a tuple of
+    (out, counts).
     """
+    if telemetry and not (ecc and inject):
+        raise ValueError("telemetry output requires ecc=True, inject=True")
     s, sq, h, d = q.shape
     n, ps, kh, _ = k_pool.shape
     assert sq == 1, "paged kernel is decode-specialized (S == 1)"
@@ -455,7 +492,14 @@ def paged_decode_attention(q, k_pool, v_pool, pos_pool, page_table, *,
         _paged_kernel, scale=scale, causal=causal, window=window, ps=ps,
         kh=kh, g=g, d=d, seed=seed, method=method,
         words_per_row_log2=words_per_row_log2, ecc=ecc, inject=inject,
-        length=length)
+        length=length, telemetry=telemetry)
+    out_specs = pl.BlockSpec((1, 1, h, d), lambda s_, p_, *_: (s_, 0, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((s, 1, h, d), v_pool.dtype)
+    if telemetry:
+        out_specs = (out_specs,
+                     pl.BlockSpec((1, 1), lambda s_, p_, *_: (s_, p_)))
+        out_shape = (out_shape,
+                     jax.ShapeDtypeStruct((s, n_lp), jnp.int32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=6,
         grid=(s, n_lp),
@@ -468,8 +512,7 @@ def paged_decode_attention(q, k_pool, v_pool, pos_pool, page_table, *,
             pl.BlockSpec((1, ps),
                          lambda s_, p_, ptab, *_: (ptab[s_, p_], 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, h, d),
-                               lambda s_, p_, *_: (s_, 0, 0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((h, d), jnp.float32),
             pltpu.VMEM((h, 1), jnp.float32),
@@ -478,7 +521,7 @@ def paged_decode_attention(q, k_pool, v_pool, pos_pool, page_table, *,
     )
     return pl.pallas_call(
         body,
-        out_shape=jax.ShapeDtypeStruct((s, 1, h, d), v_pool.dtype),
+        out_shape=out_shape,
         grid_spec=grid_spec,
         interpret=bool(interpret),
     )(page_table, jnp.asarray(q_pos, jnp.int32), k_base, k_thr,

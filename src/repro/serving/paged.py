@@ -46,11 +46,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine as arena
-from repro.core.domains import CapacityError, MemoryDomain, resolve_tier
+from repro.core import faultmap as fm
+from repro.core.domains import (ALIGN_WORDS, CapacityError, MemoryDomain,
+                                Segment, resolve_tier)
 from repro.core.faultmap import NUM_THR_COLS, FaultMap
 from repro.kernels.bitflip.bitflip import BLOCK_WORDS
+from repro.kernels.ecc.ecc import arena_ecc_events
 from repro.kernels.flash_attention import faulty
 from repro.models.base import cache_slot_axes, spec_avals
+
+# Chaos-injection column remap: a "row went weak at runtime" fault is
+# synthesized by overriding a page's *strong* thresholds with its weak
+# ones (every voltage-dependent pair), so all rows under the page start
+# drawing faults at the weak rate -- same compiled graph, the override
+# is a jnp.where over gathered threshold rows.
+_WEAKEN_COLS = np.asarray(
+    [fm.COL_Q01_WEAK, fm.COL_Q01_WEAK, fm.COL_Q10_WEAK, fm.COL_Q10_WEAK,
+     fm.COL_WEAK_ROW_Q, fm.COL_T01_WEAK, fm.COL_T01_WEAK, fm.COL_T10_WEAK,
+     fm.COL_T10_WEAK, fm.COL_PAR_Q_WEAK, fm.COL_PAR_Q_WEAK], np.int32)
+assert _WEAKEN_COLS.shape[0] == NUM_THR_COLS
 
 # Pool-cache leaves: the shared attention-cache layout (stack containers
 # x ring k/v/pos leaves).
@@ -223,6 +237,9 @@ class PagePool:
         # eviction under capacity pressure).
         self._shared: Dict[int, set] = {}
         self._prefix: Dict[bytes, np.ndarray] = {}
+        # Self-healing: pages retired for good (suspect rows); never
+        # reinserted into the free lists, monotonically growing.
+        self._quarantined: set = set()
 
     # ---- static layout ---------------------------------------------------
     def _build_leaves(self) -> Tuple[_PoolLeaf, ...]:
@@ -404,6 +421,157 @@ class PagePool:
         """Pages whose backing arena blocks contain weak rows (a static
         property of this pool's fault map, not of allocation state)."""
         return len(self._weak_set)
+
+    # ---- self-healing: quarantine + migration accounting ----------------
+    @property
+    def quarantined_pages(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._quarantined))
+
+    def is_owned(self, pid) -> bool:
+        return int(pid) in self._owned
+
+    def is_quarantined(self, pid) -> bool:
+        return int(pid) in self._quarantined
+
+    def quarantine(self, page_ids) -> None:
+        """Permanently retire pages whose backing rows turned suspect.
+
+        Free pages leave the free lists; owned *private* pages leave the
+        owned set (their tenant must already have been migrated off --
+        the device-side copy is :meth:`PagedKVCache.migrate_pages`).
+        Shared pages raise :class:`PageSharingError` (migrate the
+        sharing holders first via :meth:`migrate`).  Already-quarantined
+        pages are skipped, so quarantine grows monotonically and the
+        call is idempotent under replayed suspect reports.
+        """
+        ids = sorted({int(q) for q in np.asarray(page_ids).reshape(-1)})
+        held = [p for p in ids if p in self._shared]
+        if held:
+            raise PageSharingError(
+                f"quarantine of shared pages {held[:4]}: pages with live "
+                "holders must be migrated (migrate()) before retiring")
+        for p in ids:
+            if p in self._quarantined:
+                continue
+            if not (0 <= p < self.num_pages):
+                raise ValueError(f"quarantine of invalid page id {p}")
+            if p in self._owned:
+                self._owned.discard(p)
+            elif p in self._strong:
+                self._strong.remove(p)
+            elif p in self._weak:
+                self._weak.remove(p)
+            self._quarantined.add(p)
+
+    def migrate(self, src, dst) -> None:
+        """Host accounting of one page migration: ``dst`` (freshly
+        allocated, private) takes over ``src``'s role and ``src`` is
+        quarantined.  A shared ``src`` hands its holder set and prefix-
+        cache entries to ``dst``, so sharing tenants keep their pages
+        without ever observing the move (their page tables were
+        rewritten inside the step)."""
+        src, dst = int(src), int(dst)
+        if dst not in self._owned or dst in self._shared:
+            raise PageSharingError(
+                f"migrate target {dst} must be a freshly allocated "
+                "private page")
+        if src not in self._owned:
+            raise ValueError(f"migrate source {src} is not allocated")
+        if src in self._shared:
+            self._shared[dst] = self._shared.pop(src)
+            for pids in self._prefix.values():
+                pids[pids == src] = dst
+        self._owned.discard(src)
+        self._quarantined.add(src)
+
+    def page_rows(self, pid: int) -> Tuple[Tuple[int, int], ...]:
+        """(pc, DRAM row) pairs the K/V payload of page ``pid`` overlaps
+        -- the telemetry fold's page -> row map (same row math as
+        :meth:`_page_classes`, ``pos`` excluded)."""
+        if self.placement is None:
+            return ()
+        fmap = self.faultmap
+        wpc = fmap.geometry.bytes_per_pc // 4
+        wpr = 1 << fmap.words_per_row_log2
+        out = set()
+        for leaf in self.leaves:
+            if leaf.which not in ("k", "v"):
+                continue
+            for l in range(leaf.n_layers):
+                base = int(leaf.page_base[l, pid])
+                pc = int(leaf.page_pc[l, pid])
+                in_pc = base - pc * wpc
+                for r in range(in_pc // wpr,
+                               (in_pc + leaf.page_words - 1) // wpr + 1):
+                    out.add((pc, r))
+        return tuple(sorted(out))
+
+    def pages_on_row(self, pc: int, row: int) -> np.ndarray:
+        """Usable page ids whose K/V payload overlaps DRAM row ``row``
+        of pseudo-channel ``pc`` -- the suspect-row -> victim-pages map
+        the migration planner walks."""
+        hits = np.zeros(self.num_pages, bool)
+        if self.placement is None:
+            return np.zeros((0,), np.int32)
+        fmap = self.faultmap
+        wpc = fmap.geometry.bytes_per_pc // 4
+        wpr = 1 << fmap.words_per_row_log2
+        for leaf in self.leaves:
+            if leaf.which not in ("k", "v"):
+                continue
+            base = leaf.page_base[:, :self.num_pages].astype(np.int64)
+            pcs = leaf.page_pc[:, :self.num_pages]
+            for l in range(leaf.n_layers):
+                in_pc = base[l] - pcs[l].astype(np.int64) * wpc
+                r0 = in_pc // wpr
+                r1 = (in_pc + leaf.page_words - 1) // wpr
+                hits |= (pcs[l] == pc) & (r0 <= row) & (row <= r1)
+        return np.flatnonzero(hits).astype(np.int32)
+
+    def page_codewords(self) -> int:
+        """SECDED codewords one page's K/V payload spans across every
+        leaf and layer (the per-step observation size of a fully-read
+        page, for the posterior's binomial update)."""
+        return sum(l.n_layers * l.page_words // 2
+                   for l in self.leaves if l.which in ("k", "v"))
+
+    def page_blocks(self, page_ids) -> set:
+        """(pc, arena block) pairs backing ``page_ids`` over every leaf
+        and layer."""
+        out: set = set()
+        if self.placement is None:
+            return out
+        wpc = self.faultmap.geometry.bytes_per_pc // 4
+        for leaf in self.leaves:
+            for l in range(leaf.n_layers):
+                for p in (int(q) for q in
+                          np.asarray(page_ids).reshape(-1)):
+                    base = int(leaf.page_base[l, p])
+                    pc = int(leaf.page_pc[l, p])
+                    out.add((pc, (base - pc * wpc) // ALIGN_WORDS))
+        return out
+
+    def live_blocks(self) -> set:
+        """(pc, arena block) pairs that still back live (owned or
+        shared) pages -- the :meth:`DomainAllocator.free` guard's view
+        of this pool."""
+        return self.page_blocks(sorted(self._owned))
+
+    def retirable_blocks(self) -> Tuple[Segment, ...]:
+        """Quarantined-page blocks with no live pages left on them, as
+        block-aligned segments ready for ``DomainAllocator.quarantine``
+        (a block only retires once every tenant sharing it is gone --
+        pages are much smaller than allocation blocks)."""
+        if self.placement is None or not self._quarantined:
+            return ()
+        dead = self.page_blocks(sorted(self._quarantined))
+        live = self.live_blocks()
+        free = self.page_blocks(self._strong + self._weak)
+        wpc = self.faultmap.geometry.bytes_per_pc // 4
+        return tuple(
+            Segment(leaf_start_word=0, n_words=ALIGN_WORDS, pc=pc,
+                    phys_base_word=pc * wpc + blk * ALIGN_WORDS)
+            for pc, blk in sorted(dead - live - free))
 
     # ---- copy-on-write prefix sharing ------------------------------------
     @property
@@ -706,10 +874,21 @@ class PagedKVCache:
     # ---- context ---------------------------------------------------------
     def make_ctx(self, page_table, voltage, *, method: str,
                  inject: bool, dec=None, wstart=None,
-                 prefill_end=None) -> PagedServingCtx:
+                 prefill_end=None, chaos=None) -> PagedServingCtx:
         """Decode-step context; passing the per-slot phase arrays
         (``dec``/``wstart``/``prefill_end``) returns the mixed
-        chunked-prefill/decode variant instead."""
+        chunked-prefill/decode variant instead.
+
+        ``chaos`` is the fault-injection hook for self-healing tests: a
+        traced ``(total_pages,)`` bool mask of pages whose rows "went
+        weak at runtime" -- their K/V *read* thresholds are overridden
+        column-wise to the weak rates (:data:`_WEAKEN_COLS`), so the
+        fused kernel starts drawing weak-rate faults (and ECC
+        corrections) from them without retracing.  Only the read path is
+        chaoticized: stored data stays governed by the static map, so a
+        migrated page's payload remains bit-identical to what a clean
+        replay on the final placement reads back.
+        """
         p = self.pool
         entries: Dict[str, Dict[str, _PagedLeafEntry]] = {}
         if p.placement is not None:
@@ -719,12 +898,17 @@ class PagedKVCache:
         else:
             table = seed = None
             wprl2, ecc, inject = 0, False, False
+        wtab = (table[:, jnp.asarray(_WEAKEN_COLS)]
+                if table is not None and chaos is not None else None)
         for leaf in p.leaves:
             if leaf.which not in ("k", "v"):
                 continue
             if table is not None:
                 pb, pc, _, _ = self._tables[leaf.path]
-                e = _PagedLeafEntry(base=pb, thr=table[pc])
+                thr = table[pc]
+                if wtab is not None:
+                    thr = jnp.where(chaos[None, :, None], wtab[pc], thr)
+                e = _PagedLeafEntry(base=pb, thr=thr)
             else:
                 nl, tp = leaf.n_layers, p.total_pages
                 e = _PagedLeafEntry(
@@ -743,6 +927,84 @@ class PagedKVCache:
                                    prefill_end=prefill_end,
                                    scratch_id=p.scratch_id, **kw)
         return PagedServingCtx(**kw)
+
+    # ---- self-healing: in-step migration + telemetry scrub ---------------
+    def migrate_pages(self, tree, mig_src, mig_dst):
+        """Copy page ``mig_src[i]`` -> ``mig_dst[i]`` in every leaf and
+        layer -- the device half of a page migration, run *inside* the
+        donated step before the decode read.  Disabled migration slots
+        carry the scratch id in both arrays: copying scratch onto
+        itself (including several times -- identical values per
+        duplicate index) is the traced-shape no-op.  In read mode the
+        buffer holds clean data, so the copy lands the exact payload a
+        replay on the destination placement prefills -- the
+        bit-identity contract's load-bearing property."""
+        p = self.pool
+        tree = self._tree_copy(tree)
+        src = jnp.asarray(mig_src, jnp.int32)
+        dst = jnp.asarray(mig_dst, jnp.int32)
+        for leaf in p.leaves:
+            arr_l = self._leaf_arrays(tree, leaf)
+            vals = arr_l[:, src]                  # (nl, M, ps, ...)
+            self._store(tree, leaf, arr_l.at[:, dst].set(vals))
+        return tree
+
+    def scrub_telemetry(self, tree, page_table, voltage, *, chaos=None):
+        """Per-page SECDED event counts over the K/V payload of every
+        page ``page_table`` references: (corrected, uncorrectable),
+        each ``(total_pages,)`` int32.
+
+        Pure jnp on the stored (clean, read-mode) buffers using the
+        same deterministic mask math as the fused kernel
+        (:func:`repro.kernels.ecc.ecc.arena_ecc_events` on identical
+        physical word ids and thresholds), so the counts match what the
+        attention read path corrects without adding a single pallas
+        launch.  Patrol-scrub semantics: the whole page is scanned,
+        including ring slots no request has filled yet -- a fault on a
+        still-clean slot counts (slightly over the tokens actually
+        attended), which is fine for telemetry whose job is detecting
+        weak rows, not billing exact reads.  Pages only reachable from
+        the scratch sink report zero.  ``chaos`` applies the same
+        weak-column threshold override as :meth:`make_ctx`, so the
+        scrub sees the synthetic row-goes-weak fault the kernel sees.
+        """
+        p = self.pool
+        zero = jnp.zeros((p.total_pages,), jnp.int32)
+        if p.placement is None or not p.domain.ecc:
+            return zero, zero
+        table = p.faultmap.threshold_table(voltage)
+        wtab = (table[:, jnp.asarray(_WEAKEN_COLS)]
+                if chaos is not None else None)
+        corrected, uncorrectable = zero, zero
+        for leaf in p.leaves:
+            if leaf.which not in ("k", "v"):
+                continue
+            pb, pc, _, _ = self._tables[leaf.path]
+            thr = table[pc]                 # (nl, tp, NUM_THR_COLS)
+            if wtab is not None:
+                thr = jnp.where(chaos[None, :, None], wtab[pc], thr)
+            arr_l = self._leaf_arrays(tree, leaf)
+            u32 = faulty._tile_to_u32(
+                arr_l.reshape(leaf.n_layers * p.total_pages, -1))
+            u32 = u32.reshape(leaf.n_layers, p.total_pages,
+                              leaf.page_words)
+            wid = (pb[:, :, None]
+                   + jnp.arange(leaf.page_words, dtype=jnp.uint32)[None,
+                                                                   None, :])
+            thr_row = tuple(thr[:, :, c][:, :, None]
+                            for c in range(NUM_THR_COLS))
+            _, corr, bad = arena_ecc_events(
+                u32, wid, thr_row, seed=p.faultmap.seed,
+                words_per_row_log2=p.faultmap.words_per_row_log2)
+            corrected = corrected + jnp.sum(
+                corr.astype(jnp.int32), axis=(0, 2))
+            uncorrectable = uncorrectable + jnp.sum(
+                bad.astype(jnp.int32), axis=(0, 2))
+        read = jnp.zeros((p.total_pages,), bool)
+        read = read.at[page_table.reshape(-1)].set(True)
+        read = read.at[p.scratch_id].set(False)
+        return (jnp.where(read, corrected, 0),
+                jnp.where(read, uncorrectable, 0))
 
     # ---- admission -------------------------------------------------------
     def scatter_request(self, tree, cache, page_ids):

@@ -89,7 +89,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.domains import CapacityError
+from repro.core.domains import ALIGN_WORDS, CapacityError, DomainAllocator
 from repro.core.engine import _static_value, resolve_method
 from repro.core.faultmodel import V_MIN
 from repro.core.hbm import fleet_map_seeds
@@ -186,6 +186,35 @@ class RequestResult:
     shard: int = 0                    # mesh shard that served the request
 
 
+@dataclasses.dataclass(frozen=True)
+class SelfHealConfig:
+    """Policy of the self-healing loop: online ECC telemetry -> live
+    fault-map posterior -> in-step page migration -> block quarantine.
+
+    Requires an ECC'd KV domain in ``kv_injection='read'`` mode: the
+    SECDED correction counters *are* the telemetry signal, and read-mode
+    storage (clean buffers, corruption applied at load) is what makes a
+    migrated page's payload bit-identical to a standalone replay on its
+    final placement.
+
+    ``max_migrations`` sizes the per-shard in-step migration slots (the
+    donated step always carries that many src/dst lanes; idle lanes
+    point at the scratch page).  ``migrate_tier`` places migration
+    targets (strictest first -- a page is being moved *because* its row
+    went bad); ``fallback_tier`` is tried when the strict tier is
+    exhausted.  ``setpoint_cap`` bounds the graceful-degradation
+    escalation: when admission fails under quarantine pressure, the
+    shard's rate setpoint is raised x10 (up to the cap) instead of
+    crashing the loop.
+    """
+
+    suspect_threshold: float = 0.9
+    max_migrations: int = 4
+    migrate_tier: Any = "shared_prefix"
+    fallback_tier: Any = "cheap"
+    setpoint_cap: float = 1.0
+
+
 @dataclasses.dataclass
 class _AdmitPlan:
     """Host-side page plan of one admission."""
@@ -221,6 +250,14 @@ class _Shard:
     voltage: float
     admit_reset: Any = None
     transition_pool: Any = None
+    # Self-healing runtime (None unless SelfHealConfig is passed):
+    posterior: Any = None             # FaultMapPosterior over this map
+    allocator: Any = None             # adopted DomainAllocator (quarantine)
+    suspects: Any = None              # current suspect (pc, row) set
+    retired_blocks: Any = None        # (pc, blk) already quarantined
+    migrations: int = 0
+    migration_stalls: int = 0
+    setpoint_escalations: int = 0
 
 
 class ContinuousBatchingScheduler:
@@ -248,7 +285,8 @@ class ContinuousBatchingScheduler:
                  mesh: Optional[jax.sharding.Mesh] = None,
                  mesh_axis: str = "serve",
                  shard_seeds: Optional[Sequence[int]] = None,
-                 shard_setpoints: Optional[Sequence[float]] = None):
+                 shard_setpoints: Optional[Sequence[float]] = None,
+                 self_heal: Optional[SelfHealConfig] = None):
         if sc.kv_injection == "rewrite":
             raise ValueError(
                 "kv_injection='rewrite' re-injects whole contiguous "
@@ -416,6 +454,47 @@ class ContinuousBatchingScheduler:
         self.kvc = self._shards[0].kvc
         self.method = self._shards[0].method
 
+        # ---- self-healing loop (telemetry -> posterior -> migration) --
+        self._heal = self_heal
+        self._mig_slots = (self_heal.max_migrations
+                           if self_heal is not None else 0)
+        if self_heal is not None:
+            if not placed or not pool0.domain.ecc:
+                raise ValueError(
+                    "self_heal needs an ECC'd KV-cache placement: the "
+                    "SECDED correction counters are the telemetry "
+                    "signal (place kv_cache in a domain with ecc=True)")
+            if self.mode != "read":
+                raise ValueError(
+                    f"self_heal needs kv_injection='read' (got "
+                    f"{self.mode!r}): read-mode pages store clean data, "
+                    "which is what makes an in-step page copy land the "
+                    "exact payload a replay on the final placement "
+                    "prefills")
+            if self_heal.max_migrations < 1:
+                raise ValueError(
+                    f"self_heal.max_migrations="
+                    f"{self_heal.max_migrations} must be >= 1")
+            from repro.core.faultmap_posterior import FaultMapPosterior
+            for sh in self._shards:
+                sh.posterior = FaultMapPosterior(sh.pool.faultmap)
+                sh.suspects = set()
+                sh.retired_blocks = set()
+                # Long-lived ownership of the pool's arena blocks:
+                # place() discards its internal allocators, so block
+                # retirement adopts the placement into a fresh one and
+                # registers the pool as the free()/quarantine() guard.
+                alloc = DomainAllocator(sh.pool.faultmap.geometry,
+                                        sh.pool.domain, sh.pool.faultmap)
+                alloc.adopt(sh.pool.placement)
+                alloc.register_pool(sh.pool)
+                sh.allocator = alloc
+        self._pending_mig: List[List[Tuple[int, int]]] = [
+            [] for _ in range(self.n_shards)]
+        self._telem_last = np.zeros(
+            (self.n_shards, self._shards[0].pool.total_pages), np.int64)
+        self._telem_u_last = self._telem_last.copy()
+
         # ---- bookkeeping (global slot id g = shard * S + slot) --------
         self.queue: collections.deque = collections.deque()
         self.results: Dict[Any, RequestResult] = {}
@@ -479,6 +558,18 @@ class ContinuousBatchingScheduler:
             "cursor": jnp.zeros((n, s), jnp.int32),
             "plen": jnp.zeros((n, s), jnp.int32),
             "wstart": jnp.zeros((n, s), jnp.int32),
+            # Self-healing lanes (all donated with the step; idle
+            # migration slots carry the scratch sentinel).  "telem" /
+            # "telem_u" accumulate per-page SECDED corrected /
+            # uncorrectable counts; "chaos" is the row-goes-weak fault-
+            # injection mask (per page, host-set, read-path only).
+            "telem": jnp.zeros((n, p.total_pages), jnp.int32),
+            "telem_u": jnp.zeros((n, p.total_pages), jnp.int32),
+            "chaos": jnp.zeros((n, p.total_pages), bool),
+            "mig_src": jnp.full((n, self._mig_slots), p.scratch_id,
+                                jnp.int32),
+            "mig_dst": jnp.full((n, self._mig_slots), p.scratch_id,
+                                jnp.int32),
         }
 
     def _sample_one(self, logits, key):
@@ -500,6 +591,23 @@ class ContinuousBatchingScheduler:
         s = self.slots_per_shard
         act, dec = state["active"], state["dec"]
         cursor, plen = state["cursor"], state["plen"]
+        ptab, pool_in = state["ptab"], state["pool"]
+        chaos = state["chaos"] if self._heal is not None else None
+        if self._heal is not None:
+            # In-step page migration: copy suspect pages to their
+            # healthy targets, then rewrite every page-table entry
+            # naming a source -- BEFORE the decode read, so this step
+            # already attends (and writes) through the new placement.
+            # Idle lanes are scratch->scratch copies; the sentinel must
+            # be excluded from the rewrite match because inactive page-
+            # table rows legitimately hold the scratch id.
+            src, dst = state["mig_src"], state["mig_dst"]
+            pool_in = sh.kvc.migrate_pages(pool_in, src, dst)
+            moving = (src != sh.pool.scratch_id)
+            eq = ((ptab[:, :, None] == src[None, None, :])
+                  & moving[None, None, :])
+            repl = jnp.where(eq, dst[None, None, :], 0).sum(-1)
+            ptab = jnp.where(eq.any(-1), repl.astype(ptab.dtype), ptab)
         cols = jnp.arange(c, dtype=jnp.int32)
         # Token-lane positions: decode lanes use column 0 only, prefill
         # lanes are this step's prompt chunk; -1 lanes are causally
@@ -514,17 +622,18 @@ class ContinuousBatchingScheduler:
         # stored-corrupt pages, and the only way clean shared pages can
         # read as each tenant's standalone stored-corrupt values.
         ctx = sh.kvc.make_ctx(
-            state["ptab"], v, method=sh.method, inject=self.active,
-            dec=dec, wstart=state["wstart"], prefill_end=prefill_end)
+            ptab, v, method=sh.method, inject=self.active,
+            dec=dec, wstart=state["wstart"], prefill_end=prefill_end,
+            chaos=chaos)
         ks = jax.vmap(jax.random.split)(state["keys"])
         new_keys, ki = ks[:, 0], ks[:, 1]
         logits, pool = module.decode_step(
-            params, state["pool"], {"tokens": state["tok"]}, pos,
+            params, pool_in, {"tokens": state["tok"]}, pos,
             self.cfg, self.dist, fault_ctx=ctx)
         if self.active and self.mode in ("read", "write"):
             # write-path injection covers only decoding slots' writes;
             # prefill writes stay clean until the transition injection
-            ptab_inj = jnp.where(dec[:, None], state["ptab"],
+            ptab_inj = jnp.where(dec[:, None], ptab,
                                  sh.pool.scratch_id)
             pool = sh.kvc.post_step_inject(
                 pool, ptab_inj, state["qpos"], v, mode=self.mode,
@@ -543,9 +652,20 @@ class ContinuousBatchingScheduler:
             lg, ki)[:, None]
         pad = jnp.zeros((s, c - 1), jnp.int32)
         nt_row = jnp.concatenate([nt, pad], axis=1) if c > 1 else nt
+        telem, telem_u = state["telem"], state["telem_u"]
+        if self._heal is not None:
+            # Telemetry scrub: per-page SECDED event counts over every
+            # referenced page, accumulated into the donated counters
+            # (pure jnp on the stored buffers -- same mask math as the
+            # kernel, zero extra pallas launches, read on host at the
+            # existing token gather).
+            corr, bad = sh.kvc.scrub_telemetry(pool, ptab, v,
+                                               chaos=chaos)
+            telem = telem + corr
+            telem_u = telem_u + bad
         new_state = {
             "pool": pool,
-            "ptab": state["ptab"],
+            "ptab": ptab,
             "qpos": state["qpos"] + (act & dec).astype(jnp.int32),
             "tok": jnp.where(sampling[:, None], nt_row, state["tok"]),
             # keys advance only where a token was sampled, so a
@@ -557,6 +677,11 @@ class ContinuousBatchingScheduler:
                                 jnp.minimum(cursor + c, plen), cursor),
             "plen": plen,
             "wstart": state["wstart"],
+            "telem": telem,
+            "telem_u": telem_u,
+            "chaos": state["chaos"],
+            "mig_src": state["mig_src"],
+            "mig_dst": state["mig_dst"],
         }
         return new_state, nt
 
@@ -773,17 +898,27 @@ class ContinuousBatchingScheduler:
                     return False               # backpressure on this shard
         sh = self._shards[k]
         if sh.governor is not None:
+            # the governed domain must keep the WHOLE post-admission
+            # working set of ITS shard usable (the scheduler's analog
+            # of generate()'s whole-batch bytes), not just the new
+            # request's cache
+            need = (self.shard_active(k) + 1) * sh.pool.request_words * 4
             try:
-                # the governed domain must keep the WHOLE post-
-                # admission working set of ITS shard usable (the
-                # scheduler's analog of generate()'s whole-batch
-                # bytes), not just the new request's cache
-                sh.voltage = sh.governor.admit(
-                    (self.shard_active(k) + 1) * sh.pool.request_words * 4,
-                    setpoint=sh.setpoint)
+                sh.voltage = sh.governor.admit(need,
+                                               setpoint=sh.setpoint)
             except CapacityError:
-                self._rollback(k, plan, req.rid)
-                return False
+                # Graceful degradation under quarantine pressure: relax
+                # the shard's rate setpoint one decade and retry before
+                # reporting backpressure.
+                if not self._escalate_setpoint(k):
+                    self._rollback(k, plan, req.rid)
+                    return False
+                try:
+                    sh.voltage = sh.governor.admit(need,
+                                                   setpoint=sh.setpoint)
+                except CapacityError:
+                    self._rollback(k, plan, req.rid)
+                    return False
         self.queue.popleft()
         self._admit(req, g, plan, prompt, n_new)
         return True
@@ -825,10 +960,10 @@ class ContinuousBatchingScheduler:
             jnp.int32(plan.fork_rows), jnp.int32(plan.fs * p.page_slots))
         key = req.key if req.key is not None else jax.random.PRNGKey(0)
         self.state = {
+            **st,
             "pool": pool_tree,
             "ptab": st["ptab"].at[k, s].set(jnp.asarray(plan.row)),
             "qpos": st["qpos"].at[k, s].set(plen),
-            "tok": st["tok"],
             "keys": st["keys"].at[k, s].set(key),
             "active": st["active"].at[k, s].set(True),
             "dec": st["dec"].at[k, s].set(False),
@@ -947,17 +1082,212 @@ class ContinuousBatchingScheduler:
         self.state["tok"] = self.state["tok"].at[ks, ss].set(
             jnp.asarray(rows))
 
+    # ---- self-healing loop ------------------------------------------------
+    def _escalate_setpoint(self, k: int) -> bool:
+        """Raise shard ``k``'s governor rate setpoint one decade (up to
+        the configured cap) -- the graceful-degradation response to
+        admission CapacityError once quarantine has eaten into the
+        frontier.  Returns False when escalation does not apply (no
+        self-healing, no setpoint, nothing quarantined, power-mode
+        governor, or already at the cap)."""
+        sh = self._shards[k]
+        if (self._heal is None or sh.governor is None
+                or sh.setpoint is None
+                or sh.governor.config.mode not in ("rate", "adaptive")
+                or not sh.pool.quarantined_pages):
+            return False
+        cap = float(self._heal.setpoint_cap)
+        if sh.setpoint >= cap:
+            return False
+        sh.setpoint = min(sh.setpoint * 10.0, cap)
+        sh.setpoint_escalations += 1
+        return True
+
+    def weaken_row(self, k: int, pc: int, row: int) -> np.ndarray:
+        """Chaos hook: make DRAM row ``row`` of shard ``k``'s pseudo-
+        channel ``pc`` go weak *at runtime* -- every pool page whose
+        K/V payload overlaps the row starts reading through weak-rate
+        thresholds (read path only; stored data stays clean, so replay
+        bit-identity is preserved).  Returns the affected page ids.
+        The compiled step is untouched: the mask is a donated state
+        leaf, not a trace-time constant."""
+        if self._heal is None:
+            raise ValueError(
+                "weaken_row needs self_heal=SelfHealConfig(...): the "
+                "chaos mask and telemetry lanes only exist under the "
+                "self-healing loop")
+        pids = self._shards[k].pool.pages_on_row(int(pc), int(row))
+        if len(pids):
+            self.state["chaos"] = self.state["chaos"].at[
+                k, jnp.asarray(pids)].set(True)
+        return pids
+
+    def _plan_self_heal(self) -> None:
+        """Host half, before the step: walk each shard's suspect rows,
+        quarantine free victim pages outright, and stage up to
+        ``max_migrations`` live-page migrations into the step's
+        src/dst lanes (targets freshly allocated off suspect rows)."""
+        heal = self._heal
+        M = self._mig_slots
+        for k, sh in enumerate(self._shards):
+            if not sh.suspects or self._pending_mig[k]:
+                continue
+            p = sh.pool
+            suspect_pages: List[int] = []
+            seen = set()
+            for (pc, row) in sorted(sh.suspects):
+                for pid in p.pages_on_row(pc, row):
+                    pid = int(pid)
+                    if pid not in seen:
+                        seen.add(pid)
+                        suspect_pages.append(pid)
+            free_victims = [pid for pid in suspect_pages
+                            if not p.is_owned(pid)
+                            and not p.is_quarantined(pid)]
+            if free_victims:
+                p.quarantine(free_victims)
+            victims = [pid for pid in suspect_pages if p.is_owned(pid)]
+            pairs: List[Tuple[int, int]] = []
+            rejects: List[int] = []
+            for src in victims[:M]:
+                dst = None
+                while dst is None:
+                    try:
+                        cand = int(p.alloc(1, heal.migrate_tier)[0])
+                    except CapacityError:
+                        try:
+                            cand = int(p.alloc(1, heal.fallback_tier)[0])
+                        except CapacityError:
+                            # quarantine pressure: keep serving on the
+                            # suspect page, retry next step
+                            sh.migration_stalls += 1
+                            break
+                    if cand in seen:
+                        rejects.append(cand)    # target itself suspect
+                        continue
+                    dst = cand
+                if dst is None:
+                    break
+                pairs.append((src, dst))
+            if rejects:
+                p.quarantine(rejects)
+            if not pairs:
+                continue
+            row_src = np.full(M, p.scratch_id, np.int32)
+            row_dst = np.full(M, p.scratch_id, np.int32)
+            for i, (s_, d_) in enumerate(pairs):
+                row_src[i], row_dst[i] = s_, d_
+            self.state["mig_src"] = self.state["mig_src"].at[k].set(
+                jnp.asarray(row_src))
+            self.state["mig_dst"] = self.state["mig_dst"].at[k].set(
+                jnp.asarray(row_dst))
+            self._pending_mig[k] = pairs
+
+    def _finalize_self_heal(self) -> None:
+        """Host half, after the step: the staged migrations have been
+        applied on device (page copy + page-table rewrite), so commit
+        the host accounting -- pool ownership and holder transfer,
+        every host-side page-id array, each affected request's replay
+        placement -- then retire fully-drained quarantined blocks
+        through the adopted allocator."""
+        for k, sh in enumerate(self._shards):
+            p = sh.pool
+            pairs = self._pending_mig[k]
+            if pairs:
+                for src, dst in pairs:
+                    p.migrate(src, dst)
+                sh.migrations += len(pairs)
+
+                def rewrite(arr):
+                    if arr is None or not len(arr):
+                        return
+                    for src, dst in pairs:
+                        arr[arr == src] = dst
+
+                s0 = k * self.slots_per_shard
+                for g in range(s0, s0 + self.slots_per_shard):
+                    if self._slots[g] is None:
+                        continue
+                    rewrite(self._slot_priv[g])
+                    rewrite(self._slot_shared[g])
+                    rewrite(self._slot_plan[g].row)
+                    rewrite(self._slot_plan[g].retained)
+                # Only LIVE requests move: a retired request's recorded
+                # placement is its decode-time history, and its freed
+                # pages may since back a different tenant entirely.
+                live = {self._slots[g]
+                        for g in range(s0, s0 + self.slots_per_shard)
+                        if self._slots[g] is not None}
+                for rid in live:
+                    meta = self._meta[rid]
+                    rewrite(meta.page_ids)
+                    meta.placement = p.request_placement(meta.page_ids)
+                pad = jnp.full((self._mig_slots,), p.scratch_id,
+                               jnp.int32)
+                self.state["mig_src"] = (
+                    self.state["mig_src"].at[k].set(pad))
+                self.state["mig_dst"] = (
+                    self.state["mig_dst"].at[k].set(pad))
+                self._pending_mig[k] = []
+            # Block retirement: quarantined-page blocks with no live or
+            # free pages left can never serve again -- pull them out of
+            # the allocator's recycling for good.
+            wpc = p.faultmap.geometry.bytes_per_pc // 4
+            segs = [
+                s for s in p.retirable_blocks()
+                if (s.pc, (s.phys_base_word - s.pc * wpc) // ALIGN_WORDS)
+                not in sh.retired_blocks]
+            if segs:
+                sh.allocator.quarantine(tuple(segs))
+                sh.retired_blocks.update(
+                    (s.pc,
+                     (s.phys_base_word - s.pc * wpc) // ALIGN_WORDS)
+                    for s in segs)
+
+    def _fold_telemetry(self) -> None:
+        """Diff the donated correction counters (read host-side at the
+        existing token-gather sync) and fold each changed page's counts
+        into its shard's per-row posterior; refresh the suspect set and
+        re-plan adaptive governors when it moves."""
+        corr = np.asarray(self.state["telem"], np.int64)
+        bad = np.asarray(self.state["telem_u"], np.int64)
+        d_corr = corr - self._telem_last
+        d_bad = bad - self._telem_u_last
+        self._telem_last, self._telem_u_last = corr, bad
+        for k, sh in enumerate(self._shards):
+            hits = np.flatnonzero((d_corr[k] > 0) | (d_bad[k] > 0))
+            if len(hits):
+                cw = sh.pool.page_codewords()
+                for pid in hits:
+                    for (pc, row) in sh.pool.page_rows(int(pid)):
+                        sh.posterior.observe(
+                            pc, row, corrected=int(d_corr[k, pid]),
+                            codewords=cw, voltage=sh.voltage,
+                            uncorrectable=int(d_bad[k, pid]))
+            new = set(sh.posterior.suspect_rows(
+                sh.voltage, self._heal.suspect_threshold))
+            if new != sh.suspects:
+                sh.suspects = new
+                if (sh.governor is not None
+                        and sh.governor.config.mode == "adaptive"):
+                    sh.governor.replan(sh.posterior)
+
     def step_once(self) -> None:
         """One mixed step: every prefilling slot consumes a prompt
         chunk, every decoding slot one token (single compiled call
         across all shards); then transition finished prefills, collect
         tokens, and retire finished requests."""
         self._feed_chunks()
+        if self._heal is not None:
+            self._plan_self_heal()
         self.state, nt = self._step(self.params, self.state,
                                     self._volt_vec())
         # (n_shards, S, 1) -> global slot order g = shard * S + slot
         toks = np.asarray(nt).reshape(-1)
         self.steps += 1
+        if self._heal is not None:
+            self._finalize_self_heal()
+            self._fold_telemetry()
         for g, rid in enumerate(self._slots):
             if rid is None:
                 continue
@@ -1019,6 +1349,24 @@ class ContinuousBatchingScheduler:
             "setpoint": sh.setpoint,
             "map_seed": sh.seed,
         } for sh in self._shards]
+        if self._heal is not None:
+            for row, sh in zip(shards, self._shards):
+                ps = sh.posterior.stats()
+                row.update({
+                    "corrected": ps["corrected"],
+                    "uncorrectable": ps["uncorrectable"],
+                    "tracked_rows": ps["tracked_rows"],
+                    "suspect_rows": len(sh.suspects),
+                    "migrations": sh.migrations,
+                    "migration_stalls": sh.migration_stalls,
+                    "quarantined_pages": len(sh.pool.quarantined_pages),
+                    "quarantined_blocks": len(
+                        sh.allocator.quarantined_blocks),
+                    "setpoint_escalations": sh.setpoint_escalations,
+                    "governor_replans": (sh.governor.replans
+                                         if sh.governor is not None
+                                         else 0),
+                })
         out = {
             "steps": self.steps,
             "admitted": self.admitted,
@@ -1033,6 +1381,11 @@ class ContinuousBatchingScheduler:
             "n_shards": self.n_shards,
             "shards": shards,
         }
+        if self._heal is not None:
+            for key in ("corrected", "uncorrectable", "migrations",
+                        "quarantined_pages", "quarantined_blocks",
+                        "setpoint_escalations"):
+                out[key] = sum(s[key] for s in shards)
         if any(sh.governor is not None for sh in self._shards):
             from repro.training.governor import fleet_report
             out["fleet"] = fleet_report(

@@ -54,7 +54,7 @@ class GovernorConfig:
     """
 
     domain: str
-    mode: str = "power"              # 'power' | 'rate'
+    mode: str = "power"              # 'power' | 'rate' | 'adaptive'
     tolerable_rate: float = 1e-6
     required_bytes: int = 0
     setpoint: float = 1.0
@@ -73,7 +73,7 @@ class VoltageGovernor:
 
     def __init__(self, plan, config: GovernorConfig,
                  power_model: PowerModel = DEFAULT_POWER_MODEL):
-        if config.mode not in ("power", "rate"):
+        if config.mode not in ("power", "rate", "adaptive"):
             raise ValueError(f"unknown governor mode {config.mode!r}")
         if config.domain not in plan.domains:
             raise ValueError(
@@ -112,6 +112,40 @@ class VoltageGovernor:
         self._power = jnp.asarray(power[feasible], jnp.float32)
         self._rate_rev = jnp.asarray(worst[feasible][::-1], jnp.float32)
         self._n = int(feasible.sum())
+        self._feasible = feasible
+        self._dom_pcs = dom_pcs
+        self.replans = 0
+
+    # ---- online re-plan (mode='adaptive') -------------------------------
+    def replan(self, posterior) -> None:
+        """Refresh the rate frontier from a live fault-map posterior.
+
+        ``mode='adaptive'`` walks the same rate frontier as
+        ``mode='rate'`` but lets telemetry move it: worst-PC rates are
+        recomputed from ``posterior.predicted_rates(v)`` over the
+        precomputed voltage grid, so a channel whose rows drifted weak
+        shows a higher rate and the same setpoint now resolves to a
+        shallower (safer) voltage.  MoRS-approximate on purpose: the
+        *capacity* arrays stay prior-based (usable-PC census is a
+        placement-time property), only the rate walk adapts.  Host-side
+        and cheap -- O(grid x PCs) numpy; the per-step walk stays a
+        searchsorted over captured constants.
+        """
+        if self.config.mode != "adaptive":
+            raise ValueError(
+                f"replan() requires mode='adaptive', got "
+                f"{self.config.mode!r}")
+        worst = np.asarray(
+            [posterior.predicted_rates(float(v))[self._dom_pcs].max()
+             for v in self._v_np])
+        # Keep the frontier walkable: rates must be non-increasing in
+        # voltage (posterior deltas preserve this analytically; enforce
+        # against float dust).
+        worst = np.maximum.accumulate(worst[::-1])[::-1]
+        self._rate_np = worst
+        self._rate_rev = jnp.asarray(worst[self._feasible][::-1],
+                                     jnp.float32)
+        self.replans += 1
 
     # ---- per-step walk (traced-setpoint capable) ------------------------
     def voltage_at(self, setpoint=None):
@@ -166,7 +200,7 @@ class VoltageGovernor:
         """
         ok = self._cap_np >= max(int(required_bytes), 0)
         if setpoint is not None:
-            if self.config.mode == "rate":
+            if self.config.mode in ("rate", "adaptive"):
                 ok &= self._rate_np <= float(setpoint)
             else:
                 ok &= self._power_np <= float(setpoint)

@@ -109,11 +109,13 @@ class UndervoltPlan:
                     f"{sorted(unknown)}; plan has {sorted(self.domains)}")
             present = {placements[name].domain.name for name in groups}
             voltage = {k: v for k, v in voltage.items() if k in present}
-        out, total_bad = inject_groups(groups, placements, self.fault_map(),
-                                       voltage=voltage, method=method)
+        out, total_bad, total_corr = inject_groups(
+            groups, placements, self.fault_map(), voltage=voltage,
+            method=method, with_corrected=True)
         if self.mitigation == "clamp":
             out = {name: clamp_nonfinite(tree) for name, tree in out.items()}
-        return out, {"uncorrectable_faults": total_bad}
+        return out, {"uncorrectable_faults": total_bad,
+                     "corrected_faults": total_corr}
 
     def power_report(self, utilization: float = 1.0) -> Dict[str, Any]:
         """Per-domain and blended power factors vs. nominal."""

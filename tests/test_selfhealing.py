@@ -1,0 +1,420 @@
+"""Self-healing undervolted serving: the acceptance contract.
+
+A DRAM row that turns weak *at runtime* (chaos hook) is detected from
+the SECDED correction counters the fused read path exports, accused by
+the live fault-map posterior, and healed by an in-step page migration
+-- while every affected request stays bit-identical to a solo
+``generate()`` replay on its *final* placement, the decode step keeps
+compiling exactly once, and the pallas-launch budget stays flat with
+telemetry + migration enabled.  Quarantine is monotone; fully-drained
+blocks retire through the long-lived ``DomainAllocator``, whose
+free/quarantine guards reject blocks still backing live pages; under
+quarantine pressure an adaptive governor's admission CapacityError
+degrades into a setpoint escalation instead of a crash.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as arena
+from repro.core.domains import DomainAllocator, MemoryDomain
+from repro.core.faultmap_posterior import FaultMapPosterior
+from repro.core.hbm import VCU128
+from repro.launch.mesh import make_serve_mesh
+from repro.models.base import get_arch
+from repro.serving.engine import ServeConfig, generate
+from repro.serving.paged import PagePool
+from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
+                                     SelfHealConfig)
+from repro.training import trainer
+from repro.training.undervolt import UndervoltPlan
+
+BUNDLE = get_arch("llama3.2-3b")
+CFG = BUNDLE.reduced
+PARAMS = trainer.init_state(BUNDLE, CFG, jax.random.PRNGKey(0))["params"]
+
+# The four statistically least-reliable VCU128 pseudo-channels: weak
+# rows there throw correctable SECDED events at 0.91 V (~2-3 stuck
+# bits per 64-word page) while strong rows stay clean -- the telemetry
+# regime the self-healing loop is built for.  (On the full-PC domain
+# the reliability-ordered pool would park every page on channels whose
+# weak rows are still silent at test-sized pools.)
+WORST_PCS = (8, 15, 18, 29)
+
+_R = np.random.RandomState(7)
+REQS = [
+    ("a", _R.randint(0, CFG.vocab, (5,)), 8, "cheap", 11),
+    ("b", _R.randint(0, CFG.vocab, (9,)), 10, "critical", 22),
+    ("c", _R.randint(0, CFG.vocab, (12,)), 12, "cheap", 33),
+]
+
+
+def _plan(v=0.91):
+    return UndervoltPlan(
+        domains={"kv": MemoryDomain("kv", v, WORST_PCS, ecc=True)},
+        policy={"kv_cache": "kv"}, geometry=VCU128)
+
+
+def _sc(plan=None, **kw):
+    kw.setdefault("max_len", 32)
+    kw.setdefault("max_new_tokens", 8)
+    return ServeConfig(temperature=0.0,
+                       undervolt=(plan if plan is not None else _plan()),
+                       kv_injection="read", kv_method="word", **kw)
+
+
+def _sched(sc, **kw):
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("num_pages", 16)
+    kw.setdefault("page_slots", 8)
+    kw.setdefault("self_heal", SelfHealConfig())
+    return ContinuousBatchingScheduler(BUNDLE, CFG, PARAMS, sc, **kw)
+
+
+def _submit(sched, reqs):
+    for rid, toks, n, tier, seed in reqs:
+        sched.submit(Request(rid=rid, tokens=toks, max_new_tokens=n,
+                             tier=tier, key=jax.random.PRNGKey(seed)))
+
+
+def _replay(sc, res, reqs):
+    """Each request alone through generate() on its FINAL placement."""
+    out = {}
+    for rid, toks, n, tier, seed in reqs:
+        out[rid] = np.asarray(generate(
+            BUNDLE, CFG, PARAMS, {"tokens": jnp.asarray(toks[None])},
+            dataclasses.replace(sc, max_new_tokens=n),
+            key=jax.random.PRNGKey(seed),
+            kv_placement=res[rid].placement))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the tentpole contract: detect -> migrate -> continue, bit-exact
+# ---------------------------------------------------------------------------
+
+def test_chaos_row_goes_weak_detect_migrate_bit_exact():
+    """Mid-serve, a row under live pages turns weak.  Telemetry picks
+    it up, the posterior accuses it, the donated step migrates the
+    pages and host accounting quarantines the sources -- with ZERO
+    request failures, ONE compiled decode step, and every request
+    bit-identical to its solo replay on the final placement."""
+    sc = _sc()
+    sched = _sched(sc)
+    _submit(sched, REQS)
+    sched.admit_pending()
+    for _ in range(2):
+        sched.step_once()
+    # quiet before the chaos: strong pages throw no ECC events
+    assert int(np.asarray(sched.state["telem"]).sum()) == 0
+    assert int(np.asarray(sched.state["telem_u"]).sum()) == 0
+
+    owned = sorted(sched.pool._owned)
+    pc, row = sched.pool.page_rows(owned[0])[0]
+    pids = sched.weaken_row(0, pc, row)
+    assert len(pids) >= 1
+
+    res = sched.run()
+    assert len(res) == len(REQS)            # zero request failures
+    assert len(sched.traces) == 1, sched.stats
+
+    st = sched.stats
+    sh = st["shards"][0]
+    assert sh["corrected"] > 0              # telemetry really flowed
+    assert sh["uncorrectable"] == 0         # single-fault regime
+    assert sh["suspect_rows"] >= 1          # posterior accused the row
+    assert sh["migrations"] >= 1            # live pages moved
+    assert sh["quarantined_pages"] >= 1     # sources retired
+    assert (pc, row) in sched._shards[0].posterior.tracked_rows
+    # top-level sums mirror the per-shard counters
+    assert st["corrected"] == sh["corrected"]
+    assert st["migrations"] == sh["migrations"]
+
+    # quarantined pages can never serve again
+    quarantined = set(sched.pool.quarantined_pages)
+    assert quarantined & set(int(p) for p in pids)
+    for rid, *_ in REQS:
+        assert not (set(int(p) for p in res[rid].page_ids) & quarantined)
+
+    refs = _replay(sc, res, REQS)
+    for rid, *_ in REQS:
+        np.testing.assert_array_equal(refs[rid], res[rid].tokens,
+                                      err_msg=rid)
+
+
+def test_randomized_chaos_under_churn_monotone_and_bit_exact():
+    """Property run: rows go weak at random times while six requests
+    churn through two slots.  No replay divergence, no request
+    failures, and the quarantine set only ever grows."""
+    rng = np.random.RandomState(3)
+    reqs = [(i, rng.randint(0, CFG.vocab, (4 + i,)), 3 + (i % 3),
+             "cheap", 7 * i + 1) for i in range(6)]
+    sc = _sc(max_new_tokens=5)
+    sched = _sched(sc, num_slots=2, num_pages=24)
+    _submit(sched, reqs)
+
+    weaken_at = {2, 5}
+    quar_prev: set = set()
+    weakened = 0
+    while sched.queue or sched.n_active:
+        sched.admit_pending()
+        if not sched.n_active:
+            break
+        if sched.steps in weaken_at:
+            owned = sorted(sched.pool._owned)
+            if owned:
+                pid = owned[rng.randint(len(owned))]
+                pc, row = sched.pool.page_rows(pid)[0]
+                sched.weaken_row(0, pc, row)
+                weakened += 1
+        sched.step_once()
+        quar = set(sched.pool.quarantined_pages)
+        assert quar >= quar_prev, "quarantine must be monotone"
+        quar_prev = quar
+
+    res = sched.results
+    assert len(res) == 6 and weakened == 2
+    assert len(sched.traces) == 1, sched.stats
+    assert sched.stats["quarantined_pages"] >= 1
+    assert sched.stats["shards"][0]["uncorrectable"] == 0
+    refs = _replay(sc, res, reqs)
+    for rid, *_ in reqs:
+        np.testing.assert_array_equal(refs[rid], res[rid].tokens,
+                                      err_msg=str(rid))
+
+
+def test_weak_block_retires_through_allocator():
+    """With block-sized pages (page_slots=512 -> one 4096-word block
+    per layer per page), migrating away from a weakened row drains its
+    blocks completely: they retire through the adopted DomainAllocator
+    and drop out of reliability-ordered recycling for good."""
+    sc = _sc(max_len=512, max_new_tokens=10)
+    sched = _sched(sc, num_slots=2, num_pages=10, page_slots=512)
+    rng = np.random.RandomState(7)
+    reqs = [("x", rng.randint(0, CFG.vocab, (6,)), 10, "cheap", 1),
+            ("y", rng.randint(0, CFG.vocab, (7,)), 10, "cheap", 2)]
+    _submit(sched, reqs)
+    sched.admit_pending()
+    for _ in range(2):
+        sched.step_once()
+    owned = sorted(sched.pool._owned)
+    pc, row = sched.pool.page_rows(owned[0])[0]
+    sched.weaken_row(0, pc, row)
+    res = sched.run()
+
+    sh = sched.stats["shards"][0]
+    assert len(res) == 2 and len(sched.traces) == 1
+    assert sh["migrations"] >= 1
+    assert sh["quarantined_blocks"] >= 1
+    alloc = sched._shards[0].allocator
+    retired = set(alloc.quarantined_blocks)
+    assert retired and all(b[0] in WORST_PCS for b in retired)
+    # retired blocks are exactly the quarantined pages' fully-drained
+    # blocks, and none of them back a live or free page
+    live_or_free = sched.pool.live_blocks() | sched.pool.page_blocks(
+        [p for p in range(sched.pool.num_pages)
+         if not sched.pool.is_quarantined(p)
+         and not sched.pool.is_owned(p)])
+    assert not (retired & live_or_free)
+
+
+def test_launch_budget_flat_with_telemetry_and_migration():
+    """Telemetry accumulation, the chaos threshold swap, and the
+    in-step page copy are pure jnp on donated leaves: the healing
+    scheduler's step carries exactly as many pallas launches as the
+    plain one (the single fused paged-attention call)."""
+    counts = {}
+    for heal in (None, SelfHealConfig()):
+        sched = _sched(_sc(), num_slots=2, num_pages=8, self_heal=heal)
+        jaxpr = jax.make_jaxpr(sched._step_fn)(
+            PARAMS, sched.state, sched._volt_vec())
+        counts[heal is not None] = arena.count_pallas_calls(jaxpr.jaxpr)
+    assert counts[True] == counts[False] == 1, counts
+
+
+# ---------------------------------------------------------------------------
+# allocator guards (satellite: free()/quarantine() vs live pages)
+# ---------------------------------------------------------------------------
+
+def test_allocator_rejects_freeing_blocks_backing_live_pages():
+    pool = PagePool(BUNDLE.module, CFG, max_len=32, page_slots=8,
+                    num_pages=8, plan=_plan())
+    alloc = DomainAllocator(VCU128, pool.domain, pool.faultmap)
+    alloc.adopt(pool.placement)
+    alloc.register_pool(pool)
+    pids = pool.alloc(2, "cheap")
+    segs = pool.placement.leaves[0].segments
+    with pytest.raises(ValueError, match="live pages"):
+        alloc.free(segs)
+    with pytest.raises(ValueError, match="live pages"):
+        alloc.quarantine(segs)
+    # after the pool releases the pages, quarantine goes through -- and
+    # the blocks can never be freed or quarantined again
+    pool.free(pids)
+    alloc.quarantine(segs)
+    assert alloc.quarantined_blocks
+    with pytest.raises(ValueError, match="not currently allocated"):
+        alloc.free(segs)
+    with pytest.raises(ValueError, match="not currently allocated"):
+        alloc.quarantine(segs)
+    # adopt() is a fresh-allocator-only operation
+    with pytest.raises(ValueError, match="fresh allocator"):
+        alloc.adopt(pool.placement)
+
+
+# ---------------------------------------------------------------------------
+# posterior unit contract
+# ---------------------------------------------------------------------------
+
+def test_posterior_accuses_and_absolves_rows():
+    fmap = _plan().fault_map()
+    post = FaultMapPosterior(fmap)
+    pc = WORST_PCS[-1]
+    weak_rows = np.flatnonzero(fmap.weak_row_mask(pc))
+    strong_rows = np.flatnonzero(~fmap.weak_row_mask(pc))
+    wr, sr = int(weak_rows[0]), int(strong_rows[0])
+
+    # priors: the static map's draw
+    assert post.p_weak(pc, sr) == pytest.approx(1e-3, rel=0.01)
+    assert post.p_weak(pc, wr) == pytest.approx(1.0, abs=1e-3)
+
+    # corrected events at an unsafe voltage overturn a strong prior
+    for _ in range(3):
+        post.observe(pc, sr, corrected=4, codewords=128, voltage=0.91)
+    assert post.p_weak(pc, sr) > 0.9
+    assert (pc, sr) in post.suspect_rows(0.91)
+    # ...but weakness does not matter in the guardband
+    assert post.suspect_rows(0.98) == []
+
+    # a statically-weak row that reads clean is absolved
+    post.observe(pc, wr, corrected=0, codewords=5000, voltage=0.91)
+    assert post.p_weak(pc, wr) < 0.9
+
+    # uncorrectable events are (strong) evidence too
+    post.observe(pc, sr + 1, corrected=0, uncorrectable=4,
+                 codewords=128, voltage=0.91)
+    post.observe(pc, sr + 1, corrected=0, uncorrectable=4,
+                 codewords=128, voltage=0.91)
+    assert post.p_weak(pc, sr + 1) > 0.9
+
+    # accused rows raise the PC's predicted rate; zero-codeword
+    # observations are no-ops
+    base = fmap.pc_total_rate(0.91)
+    pred = post.predicted_rates(0.91)
+    assert pred[pc] > base[pc]
+    n_rows = len(post.tracked_rows)
+    post.observe(pc, sr + 2, corrected=9, codewords=0, voltage=0.91)
+    assert len(post.tracked_rows) == n_rows
+    s = post.stats()
+    assert s["tracked_rows"] == n_rows and s["corrected"] == 12
+
+
+# ---------------------------------------------------------------------------
+# adaptive governor: posterior-driven re-planning
+# ---------------------------------------------------------------------------
+
+def test_adaptive_governor_replans_from_posterior():
+    plan = _plan()
+    gov = plan.make_governor("kv", mode="adaptive", tolerable_rate=1.0,
+                             v_hi=0.93, v_lo=0.91)
+    post = FaultMapPosterior(plan.fault_map())
+    # just above the deep frontier edge (rate_at interpolates in the
+    # log domain, so the exact edge value rounds either way in f32)
+    s = gov.rate_at(0.91) * 1.00002
+    assert float(gov.voltage_at(s)) == pytest.approx(0.91)
+
+    # eight rows of the domain's worst PC turn weak
+    for row in range(200, 208):
+        for _ in range(3):
+            post.observe(29, row, corrected=4, codewords=128,
+                         voltage=0.91)
+    gov.replan(post)
+    assert gov.replans == 1
+    # the rate frontier moved up, so the same setpoint now resolves to
+    # a shallower (safer) voltage
+    assert gov.rate_at(0.91) > s
+    assert float(gov.voltage_at(s)) > 0.91
+
+    # replan is an adaptive-mode-only verb
+    gov_rate = plan.make_governor("kv", mode="rate", tolerable_rate=1.0,
+                                  v_hi=0.93, v_lo=0.91)
+    with pytest.raises(ValueError, match="adaptive"):
+        gov_rate.replan(post)
+
+
+def test_setpoint_escalation_degrades_gracefully():
+    """After the posterior-driven replan pushes every grid voltage
+    above a frontier-edge rate setpoint, admission escalates the
+    shard's setpoint one decade (quarantine pressure is real: pages
+    are retired) instead of raising CapacityError.
+
+    Single-PC domain on purpose: the governor's worst-rate walk is a
+    max over domain PCs, so the accused PC must BE the worst one for
+    the replan to move the frontier."""
+    plan = UndervoltPlan(
+        domains={"kv": MemoryDomain("kv", 0.91, WORST_PCS[:1], ecc=True)},
+        policy={"kv_cache": "kv"}, geometry=VCU128)
+    gov = plan.make_governor("kv", mode="adaptive", tolerable_rate=1.0,
+                             v_hi=0.91, v_lo=0.89)
+    s0 = gov.rate_at(0.91) * 1.00002        # feasible ONLY pre-replan
+    sc = _sc(plan=plan, max_new_tokens=16, governor=gov)
+    sched = _sched(sc, mesh=make_serve_mesh(1), shard_setpoints=[s0])
+    sched.submit(Request(rid="r1", tokens=_R.randint(0, CFG.vocab, (6,)),
+                         max_new_tokens=16, tier="cheap",
+                         key=jax.random.PRNGKey(5)))
+    sched.admit_pending()
+    assert sched.n_active == 1              # edge setpoint admits
+    for _ in range(2):
+        sched.step_once()
+    owned = sorted(sched.pool._owned)
+    pc, row = sched.pool.page_rows(owned[0])[0]
+    sched.weaken_row(0, pc, row)
+    for _ in range(10):
+        sched.step_once()
+        sh = sched.stats["shards"][0]
+        if sh["governor_replans"] >= 1 and sh["quarantined_pages"] >= 1:
+            break
+    sh = sched.stats["shards"][0]
+    assert sh["governor_replans"] >= 1, sh
+    assert sh["quarantined_pages"] >= 1, sh
+
+    # the next admission would fail the (now-raised) rate frontier at
+    # the old setpoint: it escalates and admits instead of crashing
+    sched.submit(Request(rid="r2", tokens=_R.randint(0, CFG.vocab, (7,)),
+                         max_new_tokens=4, tier="cheap",
+                         key=jax.random.PRNGKey(6)))
+    assert sched.admit_pending() == 1
+    sh = sched.stats["shards"][0]
+    assert sh["setpoint_escalations"] >= 1, sh
+    assert sched._shards[0].setpoint > s0
+    res = sched.run()
+    assert len(res) == 2                    # both requests completed
+    assert len(sched.traces) == 1, sched.stats
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+
+def test_self_heal_config_validation():
+    # no ECC -> no telemetry signal
+    plan = UndervoltPlan(
+        domains={"kv": MemoryDomain("kv", 0.91, WORST_PCS, ecc=False)},
+        policy={"kv_cache": "kv"}, geometry=VCU128)
+    with pytest.raises(ValueError, match="ECC"):
+        _sched(_sc(plan=plan))
+    # write-path injection stores faulted payloads: migration could
+    # not be replay-exact
+    with pytest.raises(ValueError, match="read"):
+        _sched(ServeConfig(max_len=32, max_new_tokens=8,
+                           undervolt=_plan(), kv_injection="write",
+                           kv_method="word"))
+    with pytest.raises(ValueError, match="max_migrations"):
+        _sched(_sc(), self_heal=SelfHealConfig(max_migrations=0))
+    # the chaos hook needs the healing lanes
+    sched = _sched(_sc(), self_heal=None)
+    with pytest.raises(ValueError, match="self_heal"):
+        sched.weaken_row(0, WORST_PCS[0], 0)
