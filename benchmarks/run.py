@@ -35,6 +35,12 @@ def _skip_row(name: str, exc: Exception):
 TELEMETRY_KEYS = ("corrected", "uncorrectable", "migrations",
                   "quarantined_pages", "quarantined_blocks")
 
+# Energy-accounting fields the observability rows pack the same way;
+# lifted as floats (they are continuous, not counters) and NOT summed
+# into run-level totals -- joules/token is a ratio, not additive.
+ENERGY_KEYS = ("joules_per_token", "usd_per_mtok", "tokens_per_joule",
+               "kv_bytes_moved")
+
 
 def _attach_telemetry(rows, totals) -> None:
     for r in rows:
@@ -43,15 +49,23 @@ def _attach_telemetry(rows, totals) -> None:
         telem = {}
         for field in str(r["derived"]).split(";"):
             k, eq, v = field.partition("=")
-            if eq and k in TELEMETRY_KEYS:
+            if not eq:
+                continue
+            if k in TELEMETRY_KEYS:
                 try:
                     telem[k] = int(float(v))
+                except ValueError:
+                    pass
+            elif k in ENERGY_KEYS:
+                try:
+                    telem[k] = float(v)
                 except ValueError:
                     pass
         if telem:
             r["telemetry"] = telem
             for k, v in telem.items():
-                totals[k] = totals.get(k, 0) + v
+                if k in TELEMETRY_KEYS:
+                    totals[k] = totals.get(k, 0) + v
 
 
 def _print_rows(rows) -> None:

@@ -49,6 +49,11 @@ def _parse():
                     "watch the self-healing loop detect it from the "
                     "SECDED counters, migrate its pages and "
                     "quarantine the row")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the observability plane after the "
+                    "drain: the Prometheus text exposition (in-step "
+                    "counters, step-latency quantiles, joules/token) "
+                    "and the structured event trace as JSONL")
     return ap.parse_args()
 
 
@@ -202,6 +207,34 @@ def main():
         assert len(set(f"{v:.3f}" for v in vs)) > 1, (
             f"expected heterogeneous shard voltages, got {vs}")
         assert vs[0] >= vs[-1], vs   # strict shard runs shallower
+
+    if ARGS.metrics:
+        from repro.obs import export
+        print("\n---- prometheus exposition " + "-" * 38)
+        print(export.prometheus_text(sched), end="")
+        print("---- event trace (JSONL tail) " + "-" * 35)
+        tail = sched.trace.events()[-8:]
+        for ev in tail:
+            import json
+            print(json.dumps(ev.to_dict()))
+        # Cross-check the donated counters against what the drain
+        # provably did: every request spends n_new-1 decode steps (the
+        # first token samples at the prefill transition) and consumes
+        # its whole prompt through chunked prefill.
+        tot = st["obs"]["totals"]
+        want_dec = sum(r.tokens.shape[1] - 1 for r in results.values())
+        assert tot["tokens_decoded"] == want_dec, (tot, want_dec)
+        assert tot["kv_bytes_moved"] > 0
+        assert st["obs"]["step_latency"]["count"] == st["steps"]
+        en = st["obs"]["energy"]
+        assert en["tokens"] == tot["tokens_decoded"]
+        assert en["joules_per_token"] > 0
+        assert st["events"]["admission"] == len(results)
+        assert st["events"]["retirement"] == len(results)
+        print(f"metrics OK: {tot['tokens_decoded']} tokens, "
+              f"{tot['kv_bytes_moved']} KV bytes, "
+              f"{en['joules_per_token']:.3f} J/token "
+              f"(${en['usd_per_mtok']:.2f}/Mtok)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,132 @@
+"""Energy accounting: joules/token and $/1M-tokens at any frontier
+voltage.
+
+The paper's headline results are *power* numbers -- 1.5x total saving
+inside the guardband (V_min = 0.98 V), 2.3x below it (0.85 V, where the
+stuck-bit capacitance drop compounds the V^2 law) -- but serving fleets
+buy *energy per unit of work*.  This module joins the calibrated power
+curve (:class:`repro.core.voltage.PowerModel`) with the byte counters
+the scheduler accumulates inside its donated step
+(:mod:`repro.obs.metrics`) into that unit:
+
+  * ``pj_per_byte(v)``: dynamic HBM energy per byte moved at voltage
+    ``v``, derived from the power curve -- nominal dynamic watts
+    (full-load minus idle) over peak bandwidth, scaled along the
+    frontier.  At (V_nom, 819 GB/s, 20 W) this lands ~16 pJ/byte,
+    the HBM2e-generation sibling of the 31.2 pJ/byte HBM2 figure
+    reallm-style cost models use.
+  * ``static_watts(v)``: the idle third of the rail (C10), paid for
+    wall time whether or not bytes move.
+  * ``step_joules(seconds, bytes_moved, v)`` = dynamic + static.  This
+    is algebraically identical to
+    ``PowerModel.energy_joules(seconds, v, util)`` at
+    ``util = bytes_moved / (bandwidth * seconds)`` -- the two paths are
+    the same model, one priced per byte, one per utilization.
+
+Because undervolting preserves frequency (and therefore bandwidth and
+step time), pricing the *same* measured workload at two voltages
+reproduces the paper's ratios exactly: joules/token improves 1.5x at
+0.98 V and 2.3x at 0.85 V, independent of utilization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core.faultmodel import V_NOM
+from repro.core.voltage import (DEFAULT_POWER_MODEL, W_HBM_NOMINAL_V5E,
+                                PowerModel)
+from repro.launch.roofline import HBM_BW
+
+# Joules per kWh: the $/1M-token conversion runs through the unit
+# datacenters are billed in.
+_J_PER_KWH = 3.6e6
+
+# Default energy price used for the $/1M-token reports.  A round
+# datacenter-ish $/kWh; like W_HBM_NOMINAL_V5E it scales absolute
+# reports only, never the validated ratios.
+COST_PER_KWH = 0.10
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyModel:
+    """Prices (bytes moved, wall seconds, tokens) at a rail voltage.
+
+    ``nominal_watts`` and ``bandwidth_bytes`` anchor the absolute
+    scale (HBM watts at full streaming load, peak bytes/sec);
+    ``cost_per_kwh`` converts joules into dollars.  All voltage
+    dependence comes from ``power_model`` -- the paper's calibrated
+    V^2 x alpha_factor curve -- so every ratio this model reports is a
+    ratio of that curve.
+    """
+
+    power_model: PowerModel = DEFAULT_POWER_MODEL
+    nominal_watts: float = W_HBM_NOMINAL_V5E
+    bandwidth_bytes: float = HBM_BW
+    cost_per_kwh: float = COST_PER_KWH
+
+    # ---- components ------------------------------------------------------
+    def watts(self, v: float, util: float = 1.0) -> float:
+        """Absolute HBM watts at voltage ``v`` and utilization."""
+        return float(self.nominal_watts * self.power_model.power(v, util))
+
+    def static_watts(self, v: float) -> float:
+        """Idle (zero-traffic) watts at voltage ``v``."""
+        return self.watts(v, 0.0)
+
+    def pj_per_byte(self, v: float = V_NOM) -> float:
+        """Dynamic energy per byte moved at voltage ``v`` (picojoules):
+        full-load minus idle watts, over peak bandwidth."""
+        dyn_watts = self.watts(v, 1.0) - self.watts(v, 0.0)
+        return dyn_watts / self.bandwidth_bytes * 1e12
+
+    def savings(self, v: float, util: float = 1.0) -> float:
+        """Energy-per-token improvement factor vs. nominal voltage for
+        the same workload (same bytes, same wall time -- undervolting
+        preserves f).  Exactly the paper's power-saving factor."""
+        return float(self.power_model.savings(v, util))
+
+    # ---- workload pricing ------------------------------------------------
+    def step_joules(self, *, seconds: float, bytes_moved: float,
+                    v: float) -> float:
+        """Energy of a measured serving interval at voltage ``v``."""
+        if seconds < 0 or bytes_moved < 0:
+            raise ValueError(
+                f"negative workload: seconds={seconds}, "
+                f"bytes_moved={bytes_moved}")
+        return (bytes_moved * self.pj_per_byte(v) * 1e-12
+                + self.static_watts(v) * seconds)
+
+    def joules_per_token(self, *, seconds: float, bytes_moved: float,
+                         tokens: int, v: float) -> float:
+        if tokens <= 0:
+            raise ValueError(f"tokens={tokens} must be positive")
+        return self.step_joules(seconds=seconds, bytes_moved=bytes_moved,
+                                v=v) / tokens
+
+    def usd_per_mtok(self, joules_per_token: float) -> float:
+        """Dollars per 1M tokens at the configured energy price."""
+        return joules_per_token * 1e6 / _J_PER_KWH * self.cost_per_kwh
+
+    def report(self, *, seconds: float, bytes_moved: float, tokens: int,
+               v: float) -> Dict[str, float]:
+        """Full per-setpoint pricing of one measured workload."""
+        joules = self.step_joules(seconds=seconds,
+                                  bytes_moved=bytes_moved, v=v)
+        jpt = joules / max(tokens, 1)
+        util = (bytes_moved / (self.bandwidth_bytes * seconds)
+                if seconds > 0 else 0.0)
+        return {
+            "voltage": float(v),
+            "joules": joules,
+            "joules_per_token": jpt,
+            "usd_per_mtok": self.usd_per_mtok(jpt),
+            "tokens_per_joule": (tokens / joules if joules > 0 else 0.0),
+            "watts_avg": (joules / seconds if seconds > 0 else 0.0),
+            "pj_per_byte": self.pj_per_byte(v),
+            "hbm_util": min(util, 1.0),
+            "savings_x": self.savings(v),
+        }
+
+
+DEFAULT_ENERGY_MODEL = EnergyModel()

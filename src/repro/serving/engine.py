@@ -90,6 +90,12 @@ class ServeConfig:
     # Reliability-pinned copy-on-write prefix sharing: tenants with a
     # common prompt prefix map the same physical pages read-only.
     share_prefix: bool = False
+    # Observability plane (repro.obs.ObsConfig): in-step metric
+    # counters on the donated state, host-side latency histograms,
+    # energy accounting, and the structured event trace.  None means
+    # the scheduler's default (enabled); pass ObsConfig(enabled=False)
+    # to strip the counter leaf from the compiled step entirely.
+    obs: Optional[object] = None
 
 
 def _kv_placement(bundle, cfg, batch_size, sc):

@@ -240,6 +240,9 @@ class PagePool:
         # Self-healing: pages retired for good (suspect rows); never
         # reinserted into the free lists, monotonically growing.
         self._quarantined: set = set()
+        # Observability hook: callable(kind, **data) the scheduler
+        # installs to trace pool-side events (quarantine/prefix_evict).
+        self.on_event = None
 
     # ---- static layout ---------------------------------------------------
     def _build_leaves(self) -> Tuple[_PoolLeaf, ...]:
@@ -450,6 +453,7 @@ class PagePool:
             raise PageSharingError(
                 f"quarantine of shared pages {held[:4]}: pages with live "
                 "holders must be migrated (migrate()) before retiring")
+        fresh = []
         for p in ids:
             if p in self._quarantined:
                 continue
@@ -462,6 +466,9 @@ class PagePool:
             elif p in self._weak:
                 self._weak.remove(p)
             self._quarantined.add(p)
+            fresh.append(p)
+        if fresh and self.on_event is not None:
+            self.on_event("quarantine", pages=fresh)
 
     def migrate(self, src, dst) -> None:
         """Host accounting of one page migration: ``dst`` (freshly
@@ -683,6 +690,8 @@ class PagePool:
         key = next(iter(self._prefix))
         pids = self._prefix.pop(key)
         self.release(pids, ("__prefix__", key))
+        if self.on_event is not None:
+            self.on_event("prefix_evict", pages=len(pids))
         return True
 
     # ---- exports ---------------------------------------------------------

@@ -83,6 +83,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -91,9 +92,12 @@ import numpy as np
 
 from repro.core.domains import ALIGN_WORDS, CapacityError, DomainAllocator
 from repro.core.engine import _static_value, resolve_method
-from repro.core.faultmodel import V_MIN
+from repro.core.faultmodel import V_MIN, V_NOM
 from repro.core.hbm import fleet_map_seeds
 from repro.models.base import ArchBundle, ArchConfig
+from repro.obs.metrics import (MetricsRegistry, ObsConfig,
+                               init_step_counters, step_counter_delta)
+from repro.obs.trace import EventTrace
 from repro.serving.engine import ServeConfig, sample_tokens
 from repro.serving.paged import PagedKVCache, PagePool, RequestPlacement
 
@@ -286,7 +290,8 @@ class ContinuousBatchingScheduler:
                  mesh_axis: str = "serve",
                  shard_seeds: Optional[Sequence[int]] = None,
                  shard_setpoints: Optional[Sequence[float]] = None,
-                 self_heal: Optional[SelfHealConfig] = None):
+                 self_heal: Optional[SelfHealConfig] = None,
+                 obs: Optional[ObsConfig] = None):
         if sc.kv_injection == "rewrite":
             raise ValueError(
                 "kv_injection='rewrite' re-injects whole contiguous "
@@ -516,6 +521,24 @@ class ContinuousBatchingScheduler:
         self.peak_active = 0
         self.traces: List[int] = []
 
+        # ---- observability plane (metrics + event trace) --------------
+        # Resolution order: explicit ctor kwarg > ServeConfig.obs >
+        # default-on ObsConfig().  Counters ride the donated state as
+        # one (n_shards, N_STEP_COUNTERS) int32 leaf -- accumulated
+        # with pure jnp inside the compiled step (zero extra pallas
+        # launches); events and latency are host-side only.
+        self.obs = (obs if obs is not None
+                    else sc.obs if sc.obs is not None else ObsConfig())
+        self.metrics: Optional[MetricsRegistry] = None
+        self.trace: Optional[EventTrace] = None
+        if self.obs.enabled:
+            self.metrics = MetricsRegistry(
+                self.n_shards, self._shards[0].pool, config=self.obs)
+            self.trace = EventTrace(capacity=self.obs.trace_capacity)
+            for sh in self._shards:
+                sh.pool.on_event = functools.partial(
+                    self._pool_event, sh.index)
+
         self.state = self._init_state()
         if mesh is not None:
             from repro.launch.sharding import serve_sharding
@@ -544,7 +567,7 @@ class ContinuousBatchingScheduler:
         n, s, c = self.n_shards, self.slots_per_shard, self.chunk
         pools = [sh.kvc.init_pool() for sh in self._shards]
         p = self._shards[0].pool
-        return {
+        out = {
             "pool": jax.tree_util.tree_map(
                 lambda *xs: jnp.stack(xs), *pools),
             "ptab": jnp.full((n, s, p.n_logical_pages),
@@ -571,6 +594,11 @@ class ContinuousBatchingScheduler:
             "mig_dst": jnp.full((n, self._mig_slots), p.scratch_id,
                                 jnp.int32),
         }
+        if self.obs.enabled:
+            # In-step metric counters (see obs.metrics.STEP_COUNTERS):
+            # donated with the rest of the state, diffed on host.
+            out["mtr"] = init_step_counters(n)
+        return out
 
     def _sample_one(self, logits, key):
         """Standalone-identical sampling on one (1, vocab) logits row
@@ -683,6 +711,16 @@ class ContinuousBatchingScheduler:
             "mig_src": state["mig_src"],
             "mig_dst": state["mig_dst"],
         }
+        if self.obs.enabled:
+            # In-step metrics: pure jnp over masks already live in this
+            # trace (no extra launches, no host sync) -- computed from
+            # the PRE-step phase/cursor values, matching what this step
+            # actually did.
+            new_state["mtr"] = state["mtr"] + step_counter_delta(
+                act=act, dec=dec, cursor=cursor, plen=plen,
+                wstart=state["wstart"], chunk=c,
+                n_logical_pages=sh.pool.n_logical_pages,
+                mig_src=state["mig_src"], scratch_id=sh.pool.scratch_id)
         return new_state, nt
 
     def _step_fn(self, params, state, v):
@@ -936,6 +974,9 @@ class ContinuousBatchingScheduler:
                         else self.sc.max_new_tokens)
             if not any(self._try_admit_on(k, req, prompt, n_new)
                        for k in self._shard_order()):
+                self._emit("backpressure", rid=req.rid,
+                           queued=len(self.queue),
+                           active=self.n_active)
                 break                          # backpressure: wait
             n += 1
         return n
@@ -989,6 +1030,15 @@ class ContinuousBatchingScheduler:
             pages_shared=plan.fs, shard=k)
         self.admitted += 1
         self.peak_active = max(self.peak_active, self.n_active)
+        self._emit("admission", shard=k, rid=req.rid, plen=int(plen),
+                   n_new=int(n_new), pages_shared=int(plan.fs),
+                   voltage=(float(sh.voltage)
+                            if p.placement is not None else None))
+        if plan.fork_rows:
+            self._emit("cow_fork", shard=k, rid=req.rid,
+                       src=int(plan.fork_src),
+                       dst=int(plan.row[plan.fs]),
+                       rows=int(plan.fork_rows))
 
     def _transition(self, g: int) -> None:
         """Prefill finished this step: publish shareable pages, inject
@@ -1044,6 +1094,9 @@ class ContinuousBatchingScheduler:
         res = self._meta.pop(rid)
         res.tokens = np.asarray(self._out.pop(rid), np.int32)[None, :]
         self.results[rid] = res
+        self._emit("retirement", shard=k, rid=rid,
+                   tokens=int(res.tokens.shape[1]),
+                   ttft_steps=res.ttft_steps)
         if len(self._slot_shared[g]):
             sh.pool.release(self._slot_shared[g], ("__req__", rid))
         if len(self._slot_priv[g]):
@@ -1093,14 +1146,18 @@ class ContinuousBatchingScheduler:
         sh = self._shards[k]
         if (self._heal is None or sh.governor is None
                 or sh.setpoint is None
-                or sh.governor.config.mode not in ("rate", "adaptive")
+                or sh.governor.config.mode not in ("rate", "adaptive",
+                                                   "efficiency")
                 or not sh.pool.quarantined_pages):
             return False
         cap = float(self._heal.setpoint_cap)
         if sh.setpoint >= cap:
             return False
+        old = sh.setpoint
         sh.setpoint = min(sh.setpoint * 10.0, cap)
         sh.setpoint_escalations += 1
+        self._emit("escalation", shard=k, setpoint_from=old,
+                   setpoint_to=sh.setpoint)
         return True
 
     def weaken_row(self, k: int, pc: int, row: int) -> np.ndarray:
@@ -1196,6 +1253,8 @@ class ContinuousBatchingScheduler:
             if pairs:
                 for src, dst in pairs:
                     p.migrate(src, dst)
+                    self._emit("migration", shard=k, src=int(src),
+                               dst=int(dst))
                 sh.migrations += len(pairs)
 
                 def rewrite(arr):
@@ -1239,10 +1298,14 @@ class ContinuousBatchingScheduler:
                 not in sh.retired_blocks]
             if segs:
                 sh.allocator.quarantine(tuple(segs))
-                sh.retired_blocks.update(
+                new_blocks = [
                     (s.pc,
                      (s.phys_base_word - s.pc * wpc) // ALIGN_WORDS)
-                    for s in segs)
+                    for s in segs]
+                sh.retired_blocks.update(new_blocks)
+                for pc, blk in new_blocks:
+                    self._emit("block_retire", shard=k, pc=int(pc),
+                               block=int(blk))
 
     def _fold_telemetry(self) -> None:
         """Diff the donated correction counters (read host-side at the
@@ -1271,6 +1334,28 @@ class ContinuousBatchingScheduler:
                 if (sh.governor is not None
                         and sh.governor.config.mode == "adaptive"):
                     sh.governor.replan(sh.posterior)
+                    self._emit("replan", shard=k,
+                               suspect_rows=len(new))
+
+    # ---- observability hooks ----------------------------------------------
+    def _emit(self, kind: str, **kw) -> None:
+        """Emit one trace event stamped with the current step index
+        (no-op when tracing is disabled)."""
+        if self.trace is not None:
+            self.trace.emit(kind, step=self.steps, **kw)
+
+    def _pool_event(self, shard: int, kind: str, **data) -> None:
+        """Pool-side event hook (quarantine / prefix_evict), bound
+        per shard at construction."""
+        self._emit(kind, shard=shard, **data)
+
+    @property
+    def pricing_voltages(self) -> List[float]:
+        """Per-shard voltage the energy accountant prices HBM traffic
+        at: the operating rail for placed (undervolted) shards, the
+        nominal rail for clean ones."""
+        return [sh.voltage if sh.pool.placement is not None else V_NOM
+                for sh in self._shards]
 
     def step_once(self) -> None:
         """One mixed step: every prefilling slot consumes a prompt
@@ -1280,10 +1365,15 @@ class ContinuousBatchingScheduler:
         self._feed_chunks()
         if self._heal is not None:
             self._plan_self_heal()
+        t0 = time.perf_counter()
         self.state, nt = self._step(self.params, self.state,
                                     self._volt_vec())
         # (n_shards, S, 1) -> global slot order g = shard * S + slot
         toks = np.asarray(nt).reshape(-1)
+        if self.metrics is not None:
+            # toks materialization above is the device sync, so this
+            # wall-clock span covers the whole donated step
+            self.metrics.record_step(time.perf_counter() - t0)
         self.steps += 1
         if self._heal is not None:
             self._finalize_self_heal()
@@ -1392,4 +1482,9 @@ class ContinuousBatchingScheduler:
                 [sh.governor for sh in self._shards],
                 [sh.voltage for sh in self._shards],
                 [sh.setpoint for sh in self._shards])
+        if self.metrics is not None:
+            out["obs"] = self.metrics.snapshot(
+                self.state, voltages=self.pricing_voltages)
+        if self.trace is not None:
+            out["events"] = dict(self.trace.counts)
         return out

@@ -15,8 +15,18 @@ every step with *traced* setpoints:
     budget.
   * ``mode='rate'``: given a tolerable worst-PC stuck-cell rate, run at
     the deepest voltage -- maximum savings -- that still meets it.
+  * ``mode='efficiency'``: walk the frontier to *maximize tokens per
+    joule* under a fault-rate SLO.  Undervolting preserves frequency
+    (bandwidth and step time are constant), so at fixed throughput
+    tokens/joule is 1/power -- but the deepest point is not free:
+    tokens served through an uncorrectable-prone cache must be
+    retried, and the expected retry fraction grows with the worst-PC
+    stuck rate.  The efficiency score
+    ``(1 - rate)^read_words_per_token / power(v)`` prices both, and
+    its argmax over the SLO-feasible frontier is an *interior* point,
+    not merely the deepest feasible voltage.
 
-Both walks are a ``searchsorted`` over precomputed monotone arrays, so a
+All walks are pure jnp over precomputed monotone arrays, so a
 jitted train step re-plans voltage *every step* and still compiles
 exactly once: the chosen voltage flows into the arena injection engine
 through the PR-1 traced-voltage override path.
@@ -50,17 +60,25 @@ class GovernorConfig:
     usable at any chosen voltage.  ``setpoint`` is the default walk
     target when a step supplies none: a normalized power factor in
     ``mode='power'`` (1.0 = nominal power), a worst-PC stuck-cell rate
-    in ``mode='rate'``.
+    in ``mode='rate'`` / ``'adaptive'`` / ``'efficiency'`` (for
+    efficiency it is the fault-rate SLO constraining the
+    tokens-per-joule argmax).
+
+    ``read_words_per_token`` (``mode='efficiency'`` only) is the
+    exposure scale converting a per-word stuck rate into a per-token
+    retry probability: the governed KV-cache words one decoded token
+    reads through the paged attention gather.
     """
 
     domain: str
-    mode: str = "power"              # 'power' | 'rate' | 'adaptive'
+    mode: str = "power"    # 'power' | 'rate' | 'adaptive' | 'efficiency'
     tolerable_rate: float = 1e-6
     required_bytes: int = 0
     setpoint: float = 1.0
     v_hi: float = V_MIN
     v_lo: float = 0.86
     step: float = 0.01
+    read_words_per_token: int = 4096
 
 
 class VoltageGovernor:
@@ -73,8 +91,12 @@ class VoltageGovernor:
 
     def __init__(self, plan, config: GovernorConfig,
                  power_model: PowerModel = DEFAULT_POWER_MODEL):
-        if config.mode not in ("power", "rate", "adaptive"):
+        if config.mode not in ("power", "rate", "adaptive", "efficiency"):
             raise ValueError(f"unknown governor mode {config.mode!r}")
+        if config.read_words_per_token < 1:
+            raise ValueError(
+                f"read_words_per_token={config.read_words_per_token} "
+                "must be >= 1 (the per-token fault exposure scale)")
         if config.domain not in plan.domains:
             raise ValueError(
                 f"governor domain {config.domain!r} not in plan domains "
@@ -111,10 +133,23 @@ class VoltageGovernor:
         self._v = jnp.asarray(self._v_np[feasible])
         self._power = jnp.asarray(power[feasible], jnp.float32)
         self._rate_rev = jnp.asarray(worst[feasible][::-1], jnp.float32)
+        self._rate_asc = jnp.asarray(worst[feasible], jnp.float32)
         self._n = int(feasible.sum())
         self._feasible = feasible
         self._dom_pcs = dom_pcs
+        # Tokens-per-joule score for mode='efficiency': the expected
+        # fraction of tokens NOT needing a retry (a token is clean iff
+        # none of the read_words_per_token governed words it reads is
+        # stuck) over the normalized power factor.  Relative units --
+        # only the argmax and ratios matter.
+        self._tpj_np = self._tpj_from(self._rate_np)
+        self._tpj = jnp.asarray(self._tpj_np[feasible], jnp.float32)
         self.replans = 0
+
+    def _tpj_from(self, worst: np.ndarray) -> np.ndarray:
+        k = float(self.config.read_words_per_token)
+        p_clean = np.exp(k * np.log1p(-np.minimum(worst, 0.5)))
+        return p_clean / self._power_np
 
     # ---- online re-plan (mode='adaptive') -------------------------------
     def replan(self, posterior) -> None:
@@ -155,13 +190,20 @@ class VoltageGovernor:
         setpoint (clamped to the deepest feasible voltage when even that
         exceeds the budget).  ``mode='rate'``: deepest feasible voltage
         with worst-PC rate <= setpoint (clamped to the highest feasible
-        voltage when even it is too faulty).
+        voltage when even it is too faulty).  ``mode='efficiency'``:
+        among feasible points with worst-PC rate <= setpoint (the
+        fault-rate SLO), the tokens-per-joule argmax -- clamped to the
+        highest feasible voltage when nothing meets the SLO.
         """
         if setpoint is None:
             setpoint = self.config.setpoint
         s = jnp.asarray(setpoint, jnp.float32)
         if self.config.mode == "power":
             idx = jnp.searchsorted(self._power, s, side="right") - 1
+        elif self.config.mode == "efficiency":
+            ok = self._rate_asc <= s
+            idx = jnp.argmax(jnp.where(ok, self._tpj, -1.0))
+            idx = jnp.where(ok.any(), idx, self._n - 1)
         else:
             idx = self._n - jnp.searchsorted(self._rate_rev, s,
                                              side="right")
@@ -185,6 +227,13 @@ class VoltageGovernor:
             lr = np.log10(np.maximum(self._rate_np, 1e-300))
         return float(10.0 ** np.interp(float(voltage), self._v_np, lr))
 
+    def efficiency_at(self, voltage: float) -> float:
+        """Relative tokens-per-joule score at ``voltage`` (host-side
+        interpolation of the ``mode='efficiency'`` objective: expected
+        retry-free token fraction over normalized power).  Comparable
+        across voltages of the SAME governor only."""
+        return float(np.interp(float(voltage), self._v_np, self._tpj_np))
+
     # ---- admission-time re-plan (host-side, concrete) -------------------
     def admit(self, required_bytes: int,
               setpoint: Optional[float] = None) -> float:
@@ -196,11 +245,16 @@ class VoltageGovernor:
         ``setpoint`` additionally caps the worst-PC rate; in
         ``mode='power'`` it caps the power factor (a *floor* on voltage
         never helps admission, so the budget only rules out voltages
-        above it).
+        above it).  ``mode='efficiency'`` always applies its fault-rate
+        SLO (the passed setpoint, else the configured one) and picks
+        the tokens-per-joule argmax among the surviving points instead
+        of the deepest.
         """
+        if setpoint is None and self.config.mode == "efficiency":
+            setpoint = self.config.setpoint
         ok = self._cap_np >= max(int(required_bytes), 0)
         if setpoint is not None:
-            if self.config.mode in ("rate", "adaptive"):
+            if self.config.mode in ("rate", "adaptive", "efficiency"):
                 ok &= self._rate_np <= float(setpoint)
             else:
                 ok &= self._power_np <= float(setpoint)
@@ -212,12 +266,15 @@ class VoltageGovernor:
                 f"admission infeasible on [{self.config.v_lo}, "
                 f"{self.config.v_hi}] at tolerable rate "
                 f"{self.config.tolerable_rate:g}")
+        if self.config.mode == "efficiency":
+            return float(self._v_np[hits[np.argmax(self._tpj_np[hits])]])
         return float(self._v_np[hits[0]])       # ascending grid: deepest
 
 
-def fleet_report(governors, voltages, setpoints=None) -> Dict[str, object]:
+def fleet_report(governors, voltages, setpoints=None,
+                 energy=None) -> Dict[str, object]:
     """Aggregate heterogeneous per-shard operating points into one
-    fleet-level power/rate summary.
+    fleet-level power/rate/energy summary.
 
     ``governors`` is one :class:`VoltageGovernor` per shard (entries may
     be ``None`` for ungoverned shards -- they are skipped in the rate
@@ -227,9 +284,18 @@ def fleet_report(governors, voltages, setpoints=None) -> Dict[str, object]:
     sum and the normalized factor is the mean) and the fleet's fault
     exposure is the *worst* shard's worst-PC rate -- a fleet SLO is only
     as good as its most aggressive shard.
+
+    ``energy`` (an :class:`repro.obs.energy.EnergyModel`, default the
+    shared one) prices each shard's operating point absolutely:
+    full-load watts and dynamic pJ/byte at its voltage, plus the
+    fleet-total watts -- the bridge from normalized power factors to
+    the joules/token accounting in :mod:`repro.obs`.
     """
+    if energy is None:
+        from repro.obs.energy import DEFAULT_ENERGY_MODEL
+        energy = DEFAULT_ENERGY_MODEL
     per_shard = []
-    powers, rates = [], []
+    powers, rates, watts = [], [], []
     for k, (gov, v) in enumerate(zip(governors, voltages)):
         entry = {"shard": k, "voltage": float(v)}
         if setpoints is not None and setpoints[k] is not None:
@@ -241,12 +307,16 @@ def fleet_report(governors, voltages, setpoints=None) -> Dict[str, object]:
         else:
             entry["power_factor"] = float(
                 DEFAULT_POWER_MODEL.power(float(v)))
+        entry["watts"] = energy.watts(float(v), 1.0)
+        entry["pj_per_byte"] = energy.pj_per_byte(float(v))
         powers.append(entry["power_factor"])
+        watts.append(entry["watts"])
         per_shard.append(entry)
     out: Dict[str, object] = {
         "shards": per_shard,
         "power_factor_mean": float(np.mean(powers)),
         "power_factor_max": float(np.max(powers)),
+        "watts_total": float(np.sum(watts)),
     }
     if rates:
         out["worst_rate"] = float(np.max(rates))

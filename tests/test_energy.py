@@ -1,0 +1,169 @@
+"""Energy accounting + the efficiency governor.
+
+The EnergyModel's contract is an algebraic identity with the paper's
+power curve: pricing a recorded workload (bytes moved over wall time)
+at voltage ``v`` must equal ``PowerModel.energy_joules`` at the
+implied HBM utilization -- so re-pricing the SAME workload at two
+voltages reproduces the paper's power ratios in joules/token exactly
+(~1.5x at the 0.98 V guardband, ~2.3x at the deepest 0.85 V point),
+independent of what the workload was.
+
+``mode='efficiency'`` picks, among frontier points meeting a fault-
+rate SLO, the tokens-per-joule argmax -- an INTERIOR optimum (the
+retry-probability penalty makes the deepest feasible point lose), no
+worse than any fixed setpoint, and walkable with a traced SLO.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.domains import CapacityError, MemoryDomain
+from repro.core.faultmodel import V_NOM
+from repro.core.hbm import VCU128
+from repro.core.voltage import DEFAULT_POWER_MODEL
+from repro.obs.energy import DEFAULT_ENERGY_MODEL, EnergyModel
+from repro.training.governor import GovernorConfig, fleet_report
+from repro.training.undervolt import UndervoltPlan
+
+ALL_PCS = tuple(range(VCU128.num_pcs))
+
+
+def _plan(v, ecc=False):
+    return UndervoltPlan(
+        domains={"kv": MemoryDomain("kv", v, ALL_PCS, ecc=ecc)},
+        policy={"kv_cache": "kv"}, geometry=VCU128)
+
+
+# ---------------------------------------------------------------------------
+# EnergyModel
+# ---------------------------------------------------------------------------
+def test_step_joules_is_power_model_identity():
+    """step_joules == PowerModel.energy_joules at util = bytes/(bw*s),
+    exactly -- the accountant is the power curve, not a refit."""
+    em = DEFAULT_ENERGY_MODEL
+    s, v = 2.5, 0.93
+    nbytes = 0.4 * em.bandwidth_bytes * s          # util 0.4
+    j = em.step_joules(seconds=s, bytes_moved=nbytes, v=v)
+    ref = DEFAULT_POWER_MODEL.energy_joules(
+        s, v, util=nbytes / (em.bandwidth_bytes * s))
+    assert j == pytest.approx(ref, rel=1e-12)
+
+
+@pytest.mark.parametrize("util", [0.05, 0.5, 1.0])
+def test_repriced_workload_reproduces_paper_ratios(util):
+    """The SAME workload priced at two voltages gives exactly the
+    power-curve ratio in joules/token -- 1.5x-class at the guardband,
+    2.3x-class at the deepest point -- at ANY utilization."""
+    em = DEFAULT_ENERGY_MODEL
+    s = 3.0
+    nbytes = util * em.bandwidth_bytes * s
+    jpt = {v: em.joules_per_token(seconds=s, bytes_moved=nbytes,
+                                  tokens=1000, v=v)
+           for v in (V_NOM, 0.98, 0.85)}
+    assert jpt[V_NOM] / jpt[0.98] == pytest.approx(1.4994, rel=1e-3)
+    assert jpt[V_NOM] / jpt[0.85] == pytest.approx(2.3175, rel=1e-3)
+
+
+def test_usd_scales_linearly_with_rate_and_joules():
+    em = DEFAULT_ENERGY_MODEL
+    em2 = EnergyModel(cost_per_kwh=2 * em.cost_per_kwh)
+    assert em2.usd_per_mtok(0.5) == pytest.approx(
+        2 * em.usd_per_mtok(0.5))
+    assert em.usd_per_mtok(1.0) == pytest.approx(
+        2 * em.usd_per_mtok(0.5))
+    # 1 J/token at $0.10/kWh: 1e6 J / 3.6e6 J-per-kWh * 0.10 $/kWh
+    assert em.usd_per_mtok(1.0) == pytest.approx(1e6 / 3.6e6 * 0.10)
+
+
+def test_report_fields_and_validation():
+    em = DEFAULT_ENERGY_MODEL
+    rep = em.report(seconds=1.0, bytes_moved=1e9, tokens=100, v=0.95)
+    for key in ("voltage", "joules", "joules_per_token", "usd_per_mtok",
+                "tokens_per_joule", "watts_avg", "pj_per_byte",
+                "hbm_util", "savings_x"):
+        assert key in rep, key
+    assert rep["joules_per_token"] * rep["tokens_per_joule"] == (
+        pytest.approx(1.0))
+    assert rep["savings_x"] > 1.0            # 0.95 V beats nominal
+    with pytest.raises(ValueError):
+        em.step_joules(seconds=-1.0, bytes_moved=1.0, v=0.95)
+    with pytest.raises(ValueError):
+        em.joules_per_token(seconds=1.0, bytes_moved=1.0, tokens=0,
+                            v=0.95)
+
+
+# ---------------------------------------------------------------------------
+# mode='efficiency'
+# ---------------------------------------------------------------------------
+def _gov(**kw):
+    kw.setdefault("mode", "efficiency")
+    kw.setdefault("tolerable_rate", 1e-4)
+    kw.setdefault("setpoint", 1e-4)
+    kw.setdefault("v_lo", 0.85)
+    return _plan(0.88).make_governor("kv", **kw)
+
+
+def test_efficiency_interior_argmax_beats_fixed_setpoints():
+    gov = _gov()
+    v_eff = float(gov.voltage_at(1e-4))
+    # the optimum is interior: strictly below the guardband, strictly
+    # above the deepest feasible point
+    assert 0.85 < v_eff < 0.98, v_eff
+    tpj_eff = float(gov.efficiency_at(v_eff))
+    for v in (0.98, 0.95, 0.92, 0.90, 0.88, 0.86):
+        assert tpj_eff + 1e-9 >= float(gov.efficiency_at(v)), (
+            v_eff, v, tpj_eff, gov.efficiency_at(v))
+
+
+def test_efficiency_respects_rate_slo():
+    gov = _gov()
+    v = float(gov.voltage_at(1e-4))
+    rate = float(np.interp(v, gov._v_np, gov._rate_np))
+    assert rate <= 1e-4, (v, rate)
+    # an impossible SLO clamps to the highest feasible voltage
+    v_clamp = float(gov.voltage_at(0.0))
+    assert v_clamp == pytest.approx(float(gov._v_np[gov._feasible][-1]))
+
+
+def test_efficiency_walk_is_traceable():
+    gov = _gov()
+    walked = jax.jit(gov.voltage_at)(jnp.float32(1e-4))
+    assert float(walked) == pytest.approx(float(gov.voltage_at(1e-4)))
+
+
+def test_efficiency_admit_and_capacity():
+    gov = _gov()
+    v = gov.admit(4096)                    # tiny ask: SLO governs
+    assert v == pytest.approx(float(gov.voltage_at(1e-4)))
+    with pytest.raises(CapacityError):
+        gov.admit(10 ** 15)
+
+
+def test_efficiency_sharper_exposure_prefers_shallower():
+    """More governed words read per token -> a given stuck rate costs
+    more retries -> the argmax moves up (shallower), never down."""
+    v_lo = float(_gov(read_words_per_token=256).voltage_at(1e-4))
+    v_hi = float(_gov(read_words_per_token=65536).voltage_at(1e-4))
+    assert v_hi >= v_lo, (v_lo, v_hi)
+
+
+def test_unknown_mode_and_bad_exposure_rejected():
+    with pytest.raises(ValueError):
+        _plan(0.88).make_governor("kv", mode="thermal")
+    with pytest.raises(ValueError):
+        _gov(read_words_per_token=0)
+
+
+def test_fleet_report_carries_energy_columns():
+    gov = _gov()
+    v = float(gov.voltage_at(1e-4))
+    rep = fleet_report([gov], [v], [1e-4])
+    sh = rep["shards"][0]
+    assert sh["watts"] > 0
+    assert sh["pj_per_byte"] > 0
+    assert rep["watts_total"] == pytest.approx(
+        sum(s["watts"] for s in rep["shards"]))
+    # pricing at nominal costs more watts than the governed point
+    em = DEFAULT_ENERGY_MODEL
+    assert em.watts(V_NOM, 1.0) > sh["watts"]
