@@ -30,9 +30,18 @@ row's pages migrate inside the decode step, and the row is
 quarantined -- watch the printed migration/quarantine counters while
 every request still finishes (and ``decode_traces`` still stays 1).
 
+With ``--arch NAME`` the stream runs any registered architecture
+through the SAME scheduler front door: paged families take the lane
+above, everything else (MoE, recurrent hybrids, xLSTM, whisper, VLM)
+transparently dispatches to the state-arena route -- modality extras
+(audio frames, image patches) ride the requests, one request is
+replayed solo through ``generate()`` on its placement to prove
+bit-equivalence, and ``decode_traces`` still stays 1.
+
   PYTHONPATH=src python examples/serve_many.py
   PYTHONPATH=src python examples/serve_many.py --devices 4
   PYTHONPATH=src python examples/serve_many.py --chaos
+  PYTHONPATH=src python examples/serve_many.py --arch whisper-large-v3
 """
 import argparse
 import os
@@ -49,6 +58,11 @@ def _parse():
                     "watch the self-healing loop detect it from the "
                     "SECDED counters, migrate its pages and "
                     "quarantine the row")
+    ap.add_argument("--arch", default=None,
+                    help="serve this registered architecture instead "
+                    "of the default llama3.2-3b stream: the scheduler "
+                    "front door dispatches paged vs state-arena by "
+                    "family (incompatible with --devices/--chaos)")
     ap.add_argument("--metrics", action="store_true",
                     help="print the observability plane after the "
                     "drain: the Prometheus text exposition (in-step "
@@ -77,7 +91,74 @@ from repro.serving.scheduler import (                 # noqa: E402
 from repro.training.undervolt import UndervoltPlan    # noqa: E402
 
 
+def zoo_main(arch):
+    """Any-family lane: run ``--arch`` through the one scheduler front
+    door, print the route it dispatched to, and prove one request
+    bit-identical to its solo ``generate()`` replay."""
+    import dataclasses
+
+    from repro.serving.engine import generate
+
+    if ARGS.devices > 1 or ARGS.chaos:
+        raise SystemExit("--arch is a single-shard lane; drop "
+                         "--devices/--chaos")
+    bundle = get_arch(arch)
+    cfg = bundle.reduced
+    params = init_params(bundle.module.param_specs(cfg),
+                         jax.random.PRNGKey(0))
+    plan = UndervoltPlan(
+        domains={"kv": MemoryDomain("kv", 0.90,
+                                    tuple(range(VCU128.num_pcs)))},
+        policy={"kv_cache": "kv"}, geometry=VCU128)
+    sc = ServeConfig(max_len=32, max_new_tokens=6, undervolt=plan,
+                     kv_injection="write", kv_method="bitwise")
+    sched = ContinuousBatchingScheduler(
+        bundle, cfg, params, sc, num_slots=2, num_pages=16,
+        page_slots=8)
+    rng = np.random.RandomState(0)
+    reqs = []
+    for i in range(3):
+        extras = None
+        if cfg.family == "audio":
+            extras = {"frames": rng.standard_normal(
+                (cfg.enc_len, cfg.d_model)).astype(np.float32)}
+        elif cfg.family == "vlm":
+            extras = {"patches": rng.standard_normal(
+                (cfg.enc_len, cfg.frontend_dim)).astype(np.float32)}
+        reqs.append((rng.randint(0, cfg.vocab, (4 + 2 * i,)), 3 + i,
+                     extras))
+        sched.submit(Request(
+            rid=f"req{i}", tokens=reqs[-1][0], max_new_tokens=3 + i,
+            key=jax.random.PRNGKey(7 * i), extras=extras))
+    results = sched.run()
+    st = sched.stats
+    print(f"{arch} [{cfg.family}] route={st['route']} "
+          f"layouts={sorted(set(st['cache_layouts']))} "
+          f"steps={st['steps']} decode_traces={st['decode_traces']}")
+    for i in range(3):
+        r = results[f"req{i}"]
+        print(f"req{i} v={r.voltage:.2f} tokens={r.tokens[0].tolist()}")
+    assert st["decode_traces"] == 1, st
+
+    # solo replay of req1 on its placement: the bit-equivalence
+    # contract, same as tests/test_zoo_serving.py's matrix
+    toks, n_new, extras = reqs[1]
+    batch = {"tokens": toks[None]}
+    for k, v in (extras or {}).items():
+        batch[k] = v[None]
+    solo = generate(bundle, cfg, params, batch,
+                    dataclasses.replace(sc, max_new_tokens=n_new),
+                    key=jax.random.PRNGKey(7),
+                    kv_placement=results["req1"].placement)
+    np.testing.assert_array_equal(np.asarray(solo),
+                                  results["req1"].tokens)
+    print("solo replay: bit-identical")
+
+
 def main():
+    if ARGS.arch is not None:
+        zoo_main(ARGS.arch)
+        return
     n_shards = ARGS.devices
     bundle = get_arch("llama3.2-3b")
     cfg = bundle.reduced

@@ -408,6 +408,15 @@ def inject_placement_slice(tree, placement: GroupPlacement,
     recurrent/bookkeeping states).  With ``pos=None`` every included
     leaf is corrupted whole (the post-prefill initialization).
 
+    Whole-leaf corruption of carried state is the PERSISTENT-fault
+    semantic of the model zoo's ``state``-layout leaves (RG-LRU
+    h/conv, mLSTM matrix memories): the state is rewritten on every
+    decode step, so the same deterministic per-word stuck-at masks
+    re-apply to each new value -- a cell that faults on write stays
+    faulted for the request's lifetime (corrupt-once-on-write), while
+    a ring K/V row, written once, is only ever re-masked to the value
+    it already has.
+
     ``skip_paths``: keystr paths handled elsewhere (e.g. K/V leaves
     corrupted on the read path by the fused attention kernel).
 

@@ -452,6 +452,13 @@ def paged_decode_attention(q, k_pool, v_pool, pos_pool, page_table, *,
     pos_pool: (num_pages, PS) int32 -- paged absolute positions.
     page_table: (S, n_lp) int32 -- physical page of each slot's
     logical page (inactive slots point at the pool's scratch page).
+    The logical ring length is *derived* from the table width
+    (``n_lp * PS``), which is what makes the kernel window-modular:
+    a sliding-window leaf hands in the leading ``window // PS`` table
+    entries and the ring arithmetic (slot = pos % length, store-buffer
+    clean-slot exemption included) lands on the window ring, while
+    full-length leaves pass their whole table.  One kernel, both
+    layouts.
     q_pos: (S,) int32 -- per-slot absolute decode position.
     k_tables / v_tables: (page_base, page_thr) for this layer's leaf
     slice, thresholds gathered at the current (possibly traced)

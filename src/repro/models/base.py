@@ -26,6 +26,17 @@ import numpy as np
 # Parameter specs
 # ---------------------------------------------------------------------------
 
+# Cache-leaf layout kinds (the CacheLayout descriptor).  Every decode-state
+# leaf is one of:
+#   full    -- ring buffer covering the whole max_len sequence (classic KV)
+#   window  -- ring buffer shorter than max_len (sliding-window attention);
+#              pages window-modularly: slot(p) = p % window
+#   cross   -- written once at prefill, read-only afterwards (encoder K/V
+#              of enc-dec models); shareable copy-on-write across requests
+#   state   -- slotless carried state (recurrent h/conv, mLSTM matrix
+#              memory); faults here are persistent, not per-read
+CACHE_LAYOUTS = ("full", "window", "cross", "state")
+
 
 @dataclasses.dataclass(frozen=True)
 class ParamSpec:
@@ -36,9 +47,12 @@ class ParamSpec:
     dtype: Any = jnp.bfloat16
     init: str = "normal"                 # normal | zeros | ones | scaled
     scale: float = 1.0
+    # cache-leaf layout override (see leaf_layout); None = infer from axes
+    layout: Optional[str] = None
 
     def __post_init__(self):
         assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+        assert self.layout in (None,) + CACHE_LAYOUTS, self.layout
 
     @property
     def aval(self) -> jax.ShapeDtypeStruct:
@@ -68,6 +82,51 @@ def cache_slot_axes(specs) -> Any:
                 if CACHE_SLOT_AXIS in s.axes else -1)
     return jax.tree_util.tree_map(
         ax, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def cache_batch_axes(specs) -> Any:
+    """Per-leaf index of the serving-batch axis, located by name
+    ('batch'), -1 for batch-free bookkeeping leaves.  Stacked period
+    leaves (leading 'layers' axis) shift automatically.  The state-
+    arena scheduler scatters/slices per-request cache rows along this
+    axis -- it is NOT always dim 0 (period-stacked leaves carry the
+    layer stack in front)."""
+    def ax(s: ParamSpec) -> int:
+        return s.axes.index("batch") if "batch" in s.axes else -1
+    return jax.tree_util.tree_map(
+        ax, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def leaf_layout(spec: ParamSpec, max_len: int) -> str:
+    """Layout kind of one cache leaf (see CACHE_LAYOUTS).
+
+    Families may pin a kind explicitly via ParamSpec.layout (whisper's
+    encoder K/V is ``cross``); otherwise leaves with a ring-slot axis
+    classify as ``full``/``window`` by comparing the ring length against
+    ``max_len``, and slotless leaves are carried ``state``.
+    """
+    if spec.layout is not None:
+        return spec.layout
+    if CACHE_SLOT_AXIS in spec.axes:
+        ln = spec.shape[spec.axes.index(CACHE_SLOT_AXIS)]
+        return "full" if ln >= max_len else "window"
+    return "state"
+
+
+def cache_layouts(specs, max_len: int) -> Any:
+    """Per-leaf layout kind for a cache-spec tree."""
+    return jax.tree_util.tree_map(
+        lambda s: leaf_layout(s, max_len), specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def ring_lengths(specs) -> Any:
+    """Per-leaf ring length (slots along CACHE_SLOT_AXIS), 0 if slotless."""
+    def ln(s: ParamSpec) -> int:
+        return (s.shape[s.axes.index(CACHE_SLOT_AXIS)]
+                if CACHE_SLOT_AXIS in s.axes else 0)
+    return jax.tree_util.tree_map(
+        ln, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
 
 
 def init_params(specs, key) -> Any:

@@ -64,6 +64,55 @@ def ring_update(cache: Dict[str, jax.Array], new: Dict[str, jax.Array],
     return out
 
 
+def ring_update_rows(cache: Dict[str, jax.Array], new: Dict[str, jax.Array],
+                     pos: jax.Array) -> Dict[str, jax.Array]:
+    """Per-row twin of :func:`ring_update` for serving-slot batches.
+
+    ``pos`` is an (B,) int32 vector -- each batch row writes its own
+    ring slot ``pos[b] % L``.  Rows with a negative position (inactive
+    serving slots, chunk padding) are left untouched, so one traced
+    program serves lanes at heterogeneous positions.  ``new`` entries
+    are (B, 1, ...) single-token chunks like :func:`ring_update`.
+    """
+    ln = cache["pos"].shape[1]
+    qp = jnp.reshape(pos, (-1,)).astype(jnp.int32)
+    valid = qp >= 0
+    slot = jnp.where(valid, qp, 0) % ln
+    b = jnp.arange(qp.shape[0])
+    out = {}
+    for k, arr in new.items():
+        row = arr[:, 0]
+        keep = cache[k][b, slot]
+        vmask = jnp.reshape(valid, (-1,) + (1,) * (row.ndim - 1))
+        out[k] = cache[k].at[b, slot].set(jnp.where(vmask, row, keep))
+    out["pos"] = cache["pos"].at[b, slot].set(
+        jnp.where(valid, qp, cache["pos"][b, slot]))
+    return out
+
+
+def ring_write(cache: Dict[str, jax.Array], new: Dict[str, jax.Array],
+               pos: jax.Array) -> Dict[str, jax.Array]:
+    """Decode ring write that accepts either a scalar position (solo
+    decode, every row at the same step) or a (B,) per-row vector
+    (state-arena serving slots at heterogeneous positions)."""
+    if jnp.ndim(pos) == 0:
+        return ring_update(cache, new, pos)
+    return ring_update_rows(cache, new, pos)
+
+
+def decode_positions(pos: jax.Array, b: int, c: int) -> jax.Array:
+    """(B, C) query-position grid for a decode step from a scalar or a
+    (B,) per-row position.  ``broadcast_to(pos, (b, c))`` only handles
+    the scalar case -- a (B,) vector must expand along a new token
+    axis, not the batch axis."""
+    qp = jnp.asarray(pos, jnp.int32)
+    if qp.ndim == 0:
+        return jnp.broadcast_to(qp, (b, c))
+    if qp.ndim == 1:
+        return jnp.broadcast_to(jnp.reshape(qp, (b, 1)), (b, c))
+    return qp  # already a (B, C) per-token grid (mixed serving step)
+
+
 def paged_update(cache: Dict[str, jax.Array], new: Dict[str, jax.Array],
                  pos: jax.Array, page_table: jax.Array, length: int,
                  page_slots: int, wstart: jax.Array = None,

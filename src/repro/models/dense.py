@@ -125,7 +125,7 @@ def attn_mlp_apply(cfg: ArchConfig, kind: str, p, x, cache,
             out = fault_ctx.attend(slot_ref[0], slot_ref[1], q, new_cache,
                                    q_pos=pos, causal=causal, window=window)
         else:
-            new_cache = C.ring_update(cache, {"k": k, "v": v}, pos)
+            new_cache = C.ring_write(cache, {"k": k, "v": v}, pos)
             valid = new_cache["pos"] >= 0
             out = L.attention(q, new_cache["k"], new_cache["v"],
                               q_positions=positions,
@@ -241,16 +241,18 @@ def prefill(params, batch, cfg: ArchConfig, max_len: int, dist=None,
 def decode_step(params, cache, batch, pos, cfg: ArchConfig, dist=None,
                 fault_ctx=None):
     """batch["tokens"]: (B, C); pos: scalar int32 absolute position
-    (C=1, returns (B, vocab) logits) or a (B, C) per-token position
-    array (mixed prefill-chunk/decode serving step, returns full
-    (B, C, vocab) logits -- the caller picks each slot's sample column).
+    (C=1, returns (B, vocab) logits), a (B,) per-row vector (state-arena
+    serving slots at heterogeneous positions; rows with pos < 0 skip
+    their ring write), or a (B, C) per-token position array (mixed
+    prefill-chunk/decode serving step, returns full (B, C, vocab)
+    logits -- the caller picks each slot's sample column).
 
     ``fault_ctx``: optional read-path injection context -- attention
     layers it covers corrupt their K/V tiles at load time instead of
     requiring the cache to be re-injected between steps."""
     tokens = batch["tokens"]
     b, c = tokens.shape
-    positions = jnp.broadcast_to(pos, (b, c)).astype(jnp.int32)
+    positions = C.decode_positions(pos, b, c)
     x = L.embed(tokens, params["embed"])
     x, cache = _run_stack(cfg, params, x, positions, cache, "decode",
                           pos=pos, fault_ctx=fault_ctx)

@@ -108,7 +108,7 @@ def mla_attn(cfg: ArchConfig, p, x, cache, positions, mode, pos=None):
             new_cache = C.ring_fill(cache, {"ckv": ckv, "kpe": kpe},
                                     positions)
     else:  # absorbed decode
-        new_cache = C.ring_update(cache, {"ckv": ckv, "kpe": kpe}, pos)
+        new_cache = C.ring_write(cache, {"ckv": ckv, "kpe": kpe}, pos)
         q_c = jnp.einsum("bshd,khd->bshk", q_nope, p["w_uk"])
         q_cat = jnp.concatenate([q_c, q_pe], axis=-1)       # (B,1,H,kvl+dr)
         k_cat = jnp.concatenate([new_cache["ckv"], new_cache["kpe"]],
@@ -162,6 +162,14 @@ def moe_ffn(cfg: ArchConfig, p, x, dist: DistContext):
     t_loc = (b // int(np.prod([dist.mesh.shape[a]
                                for a in dist.batch_axes]))) * s
     cap = max(1, int(np.ceil(cfg.capacity_factor * t_loc * k / e)))
+    if s == 1:
+        # Decode capacity must never drop a token: serving batches many
+        # requests into one step, and their tokens compete for
+        # within-expert rank -- a drop the solo (b=1) replay of the
+        # same request wouldn't take breaks bit-exact replay.  Each
+        # token's top_k experts are distinct, so t_loc bounds the
+        # per-expert load; per-token outputs are independent of cap.
+        cap = max(cap, t_loc)
 
     def local_fn(xl, wl, el, wg, wu, wd):
         j = jax.lax.axis_index(dist.model_axis)
@@ -312,9 +320,38 @@ def decode_step(params, cache, batch, pos, cfg: ArchConfig, dist=None):
     dist = ensure(dist)
     tokens = batch["tokens"]
     b = tokens.shape[0]
-    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    positions = C.decode_positions(pos, b, 1)
     x = L.embed(tokens, params["embed"])
     x, _, cache = _run_stack(cfg, dist, params, x, positions, cache,
                              "decode", pos=pos)
     logits = L.unembed(x, params["unembed"])
     return logits[:, 0], cache
+
+
+def routing_frequency(params, tokens, cfg: ArchConfig) -> np.ndarray:
+    """Per-expert routing frequency over a probe token batch.
+
+    Cheap criticality probe for expert-weight placement: embeds the
+    tokens and runs every MoE layer's router on the *embeddings* (the
+    true router input is the post-attention residual; the embedding
+    approximation keeps the probe O(tokens * d * e) with no cache or
+    attention).  Returns a float64 (n_experts,) vector summing to 1 --
+    frequently-routed experts are criticality-tiered into shallower
+    (safer) arena tiers, rare experts ride the deep cheap tiers.
+    """
+    x = L.embed(jnp.asarray(tokens, jnp.int32), params["embed"])
+    counts = np.zeros(cfg.n_experts, np.float64)
+    groups = [g for c in ("prefix", "periods", "rest")
+              for g in params["stack"].get(c, {}).values()]
+    for grp in groups:
+        if "w_router" not in grp:
+            continue
+        wr = grp["w_router"]  # (layers, d, e) stacked periods or (d, e)
+        if wr.ndim == 2:
+            wr = wr[None]
+        logits = jnp.einsum("bsd,lde->lbse", x.astype(jnp.float32), wr)
+        _, top_e = jax.lax.top_k(logits, cfg.top_k)
+        hot = np.asarray(top_e).reshape(-1)
+        counts += np.bincount(hot, minlength=cfg.n_experts)
+    total = counts.sum()
+    return counts / total if total else counts + 1.0 / cfg.n_experts

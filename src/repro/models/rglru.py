@@ -193,7 +193,7 @@ def prefill(params, batch, cfg: ArchConfig, max_len: int, dist=None):
 def decode_step(params, cache, batch, pos, cfg: ArchConfig, dist=None):
     tokens = batch["tokens"]
     b = tokens.shape[0]
-    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    positions = C.decode_positions(pos, b, 1)
     x = L.embed(tokens, params["embed"]) * jnp.sqrt(float(cfg.d_model)
                                                     ).astype(cfg.dtype)
     x, cache = _run_stack(cfg, params, x, positions, cache, "decode",

@@ -49,7 +49,8 @@ def layout_from_kinds(kinds: Tuple[str, ...], period_len: int,
 
 def _stack_spec(spec: ParamSpec, n: int) -> ParamSpec:
     return ParamSpec(shape=(n,) + spec.shape, axes=("layers",) + spec.axes,
-                     dtype=spec.dtype, init=spec.init, scale=spec.scale)
+                     dtype=spec.dtype, init=spec.init, scale=spec.scale,
+                     layout=spec.layout)
 
 
 def stack_specs(layout: PeriodLayout,

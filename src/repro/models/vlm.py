@@ -65,4 +65,4 @@ def prefill(params, batch, cfg: ArchConfig, max_len: int, dist=None):
 
 
 def decode_step(params, cache, batch, pos, cfg: ArchConfig, dist=None):
-    return D.decode_step(params["lm"], cache, batch, pos, cfg)
+    return D.decode_step(params["lm"], cache, batch, pos, cfg, dist)

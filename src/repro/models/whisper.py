@@ -39,10 +39,13 @@ def dec_cache_specs(cfg: ArchConfig, batch: int,
                     max_len: int) -> Dict[str, ParamSpec]:
     out = dict(D.attn_cache_specs(cfg, "global", batch, max_len))
     cross = (batch, cfg.enc_len, cfg.n_kv_heads, cfg.head_dim)
+    # layout="cross": written once at prefill from the encoder output,
+    # read-only afterwards -- shareable across requests with identical
+    # audio (see CACHE_LAYOUTS in models/base.py).
     out["ck"] = ParamSpec(cross, ("batch", None, "kv_heads", "head_dim"),
-                          cfg.dtype, "zeros")
+                          cfg.dtype, "zeros", layout="cross")
     out["cv"] = ParamSpec(cross, ("batch", None, "kv_heads", "head_dim"),
-                          cfg.dtype, "zeros")
+                          cfg.dtype, "zeros", layout="cross")
     return out
 
 
@@ -77,7 +80,7 @@ def dec_apply(cfg, p, x, cache, positions, mode, pos, enc_out):
         new_cache = dict(new_self)
     else:
         self_cache = {k_: cache[k_] for k_ in ("k", "v", "pos")}
-        new_self = C.ring_update(self_cache, {"k": k, "v": v}, pos)
+        new_self = C.ring_write(self_cache, {"k": k, "v": v}, pos)
         out = L.attention(q, new_self["k"], new_self["v"],
                           q_positions=positions,
                           k_positions=new_self["pos"], causal=True,
@@ -191,7 +194,7 @@ def prefill(params, batch, cfg: ArchConfig, max_len: int, dist=None):
 def decode_step(params, cache, batch, pos, cfg: ArchConfig, dist=None):
     tokens = batch["tokens"]
     b = tokens.shape[0]
-    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    positions = C.decode_positions(pos, b, 1)
     x = L.embed(tokens, params["embed"])
     x, cache = _run_decoder(cfg, params, x, positions, cache, "decode",
                             pos, None)

@@ -105,18 +105,34 @@ class MetricsRegistry:
     reads the donated leaf once per ``stats()``/export call.
     """
 
-    def __init__(self, n_shards: int, pool, config: ObsConfig):
+    def __init__(self, n_shards: int, pool, config: ObsConfig, *,
+                 kv_page_bytes: Optional[int] = None,
+                 kv_slot_bytes: Optional[int] = None,
+                 layouts: Optional[Sequence[str]] = None):
         self.n_shards = int(n_shards)
         self.config = config
-        # Static K/V payload geometry (bytes): what one page-table read
-        # and one written cache slot move, over every k/v leaf & layer
-        # (``pos`` bookkeeping words excluded -- they are not payload).
-        self.kv_page_bytes = 4 * sum(
-            leaf.n_layers * leaf.page_words
-            for leaf in pool.leaves if leaf.which in ("k", "v"))
-        self.kv_slot_bytes = 4 * sum(
-            leaf.n_layers * leaf.wps
-            for leaf in pool.leaves if leaf.which in ("k", "v"))
+        # Which cache layouts this scheduler's counters price: the
+        # paged route tags "full"/"window", the state-arena route
+        # whatever mix its family carries ("full"/"cross"/"state").
+        self.layouts = tuple(layouts) if layouts is not None else None
+        if pool is not None:
+            # Static K/V payload geometry (bytes): what one page-table
+            # read and one written cache slot move, over every k/v leaf
+            # & layer (``pos`` bookkeeping words excluded -- they are
+            # not payload).
+            self.kv_page_bytes = 4 * sum(
+                leaf.n_layers * leaf.page_words
+                for leaf in pool.leaves if leaf.which in ("k", "v"))
+            self.kv_slot_bytes = 4 * sum(
+                leaf.n_layers * leaf.wps
+                for leaf in pool.leaves if leaf.which in ("k", "v"))
+        else:
+            # Pool-less (state-arena) route: the scheduler supplies its
+            # own static geometry -- ``kv_page_bytes`` is one lane's
+            # whole per-slot cache payload (read every step),
+            # ``kv_slot_bytes`` one lane's per-step write payload.
+            self.kv_page_bytes = int(kv_page_bytes or 0)
+            self.kv_slot_bytes = int(kv_slot_bytes or 0)
         cap = max(int(config.latency_capacity), 1)
         self._lat = np.zeros(cap, np.float64)
         self._lat_n = 0               # total recorded (ring may wrap)
@@ -214,6 +230,8 @@ class MetricsRegistry:
             "totals": self.totals(state),
             "step_latency": self.latency(),
         }
+        if self.layouts is not None:
+            out["cache_layouts"] = list(self.layouts)
         if voltages is not None:
             out["energy"] = self.energy(state, voltages)
         return out

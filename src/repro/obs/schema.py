@@ -13,7 +13,11 @@ Row shapes, by construction of the writers:
   * section-skip rows: ``{"name", "status": "skipped", "error"}``;
   * paper-figure rows: ``{"fig", ...}`` free-form numeric fields;
   * roofline cells: ``{"cell", ...}`` (ok cells carry the model
-    breakdown, skipped cells ``status``/``reason``).
+    breakdown, skipped cells ``status``/``reason``);
+  * model-zoo rows (``sched_zoo_*``): a structured ``zoo`` object --
+    arch/family/route/cache layouts plus tokens/sec and joules/token
+    as real numbers, so per-family dashboards never parse the
+    ``derived`` string.
 
 Usage::
 
@@ -52,6 +56,28 @@ BENCHMARKS_SCHEMA = {
                     "minProperties": 1,
                     "additionalProperties": {
                         "type": "number", "minimum": 0},
+                },
+                "zoo": {
+                    "type": "object",
+                    "required": ["arch", "family", "route",
+                                 "cache_layouts", "tokens_per_sec",
+                                 "joules_per_token", "decode_traces"],
+                    "properties": {
+                        "arch": {"type": "string", "minLength": 1},
+                        "family": {"type": "string", "minLength": 1},
+                        "route": {"enum": ["paged", "state"]},
+                        "cache_layouts": {
+                            "type": "array",
+                            "minItems": 1,
+                            "items": {"enum": ["full", "window",
+                                               "cross", "state"]},
+                        },
+                        "tokens_per_sec": {
+                            "type": "number", "exclusiveMinimum": 0},
+                        "joules_per_token": {
+                            "type": "number", "exclusiveMinimum": 0},
+                        "decode_traces": {"const": 1},
+                    },
                 },
             },
             # A named timing row that was not skipped must carry the

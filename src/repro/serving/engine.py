@@ -47,8 +47,8 @@ import numpy as np
 from repro.core import engine as arena
 from repro.core.engine import _static_value, resolve_method
 from repro.core.faultmodel import V_MIN
-from repro.models.base import (ArchBundle, ArchConfig, cache_slot_axes,
-                               spec_avals)
+from repro.models.base import (ArchBundle, ArchConfig, cache_layouts,
+                               cache_slot_axes, spec_avals)
 from repro.models.dist import DistContext
 from repro.serving import readpath
 from repro.training.undervolt import UndervoltPlan
@@ -140,13 +140,15 @@ class _BucketedPrefill:
         self.dist = dist
         self.traces: list = []
         # Padding rewrites ring rows at positions >= prompt_len, which
-        # is only sound when every cache ring is full-length (window
-        # caches rotate once the padded length exceeds the window).
+        # is only sound for full-length rings: window caches rotate
+        # once the padded length exceeds the window, and carried state
+        # ("state") or one-shot encoder K/V ("cross") leaves would see
+        # the pad tokens' writes.  Any non-"full" leaf layout routes
+        # every prompt length to the exact (per-shape) prefill instead.
         specs = module.cache_specs(cfg, 1, max_len)
-        flat = jax.tree_util.tree_leaves(spec_avals(specs))
-        axes = jax.tree_util.tree_leaves(cache_slot_axes(specs))
-        self.uniform = all(a.shape[ax] == self.max_len
-                           for a, ax in zip(flat, axes) if ax >= 0)
+        self.uniform = all(
+            lay == "full" for lay in jax.tree_util.tree_leaves(
+                cache_layouts(specs, max_len)))
         self._padded = jax.jit(self._traced)
         self._exact = jax.jit(
             lambda p, bt: module.prefill(p, bt, cfg, max_len, dist))

@@ -53,7 +53,7 @@ from repro.core.faultmap import NUM_THR_COLS, FaultMap
 from repro.kernels.bitflip.bitflip import BLOCK_WORDS
 from repro.kernels.ecc.ecc import arena_ecc_events
 from repro.kernels.flash_attention import faulty
-from repro.models.base import cache_slot_axes, spec_avals
+from repro.models.base import cache_layouts, cache_slot_axes, spec_avals
 
 # Chaos-injection column remap: a "row went weak at runtime" fault is
 # synthesized by overriding a page's *strong* thresholds with its weak
@@ -140,6 +140,9 @@ class _PoolLeaf:
     wps: int                   # uint32 words per cache slot
     page_words: int            # wps * page_slots
     layer_words: int           # words per layer slice of the pool leaf
+    length: int                # logical ring length (max_len or window)
+    n_pages: int               # length // page_slots (leaf's table width)
+    layout: str                # "full" | "window" (see base.CACHE_LAYOUTS)
     # Physical tables (None when the pool is unplaced / clean):
     page_base: Optional[np.ndarray]   # (n_layers, total_pages) uint32
     page_pc: Optional[np.ndarray]     # (n_layers, total_pages) int32
@@ -185,13 +188,13 @@ class PagePool:
         if page_slots <= 0 or max_len % page_slots:
             raise PagedLayoutError(
                 f"page_slots={page_slots} must positively divide "
-                f"max_len={max_len}: a request's logical cache is a "
-                "whole number of pages")
+                f"max_len={max_len} (ServeConfig.max_len): a request's "
+                "logical cache is a whole number of pages -- pick "
+                "page_slots from the divisors of max_len")
         self.module = module
         self.cfg = cfg
         self.max_len = int(max_len)
         self.page_slots = int(page_slots)
-        self.n_logical_pages = self.max_len // self.page_slots
         self.num_pages = int(num_pages)
         self.total_pages = self.num_pages + 1
         self.scratch_id = self.num_pages      # trailing page, never issued
@@ -219,6 +222,12 @@ class PagePool:
             self.faultmap = None
         self.leaves = self._build_leaves()
         self._by_path = {l.path: l for l in self.leaves}
+        # A request's page-table width is set by its *longest* ring:
+        # window leaves address only the first length//page_slots table
+        # entries window-modularly, so a family whose rings are all
+        # windows allocates fewer pages per request (rotated-out pages
+        # are never held -- the pool-level eviction win).
+        self.n_logical_pages = max(l.n_pages for l in self.leaves)
         # words one page id provisions across every leaf and layer
         self.page_set_words = sum(l.n_layers * l.page_words
                                   for l in self.leaves)
@@ -251,19 +260,43 @@ class PagePool:
         by_path = {}
         for (p, aval), ax in zip(flat, axes):
             by_path[jax.tree_util.keystr(p)] = (aval, ax)
-        # standalone specs tell us the request-side cache lengths
+        # standalone specs tell us the request-side ring length and
+        # layout kind of every leaf (full / window); state and cross
+        # leaves never reach the page pool -- the scheduler routes
+        # families carrying them through the per-slot state arena
         req_specs = self.module.cache_specs(self.cfg, 1, self.max_len)
         req_axes = jax.tree_util.tree_leaves(cache_slot_axes(req_specs))
+        req_layouts = jax.tree_util.tree_leaves(
+            cache_layouts(req_specs, self.max_len))
         req_flat, _ = jax.tree_util.tree_flatten_with_path(
             spec_avals(req_specs))
-        for (p, aval), ax in zip(req_flat, req_axes):
-            if ax >= 0 and aval.shape[ax] != self.max_len:
+        leaf_meta = {}
+        for (p, aval), ax, lay in zip(req_flat, req_axes, req_layouts):
+            path = jax.tree_util.keystr(p)
+            if lay in ("state", "cross"):
                 raise PagedLayoutError(
-                    f"cache leaf {jax.tree_util.keystr(p)} has ring "
-                    f"length {aval.shape[ax]} != max_len={self.max_len}; "
-                    "the paged scheduler shares one page-id space across "
-                    "layers and needs uniform cache lengths (window "
-                    "slots smaller than max_len are unsupported)")
+                    f"cache leaf {path} has layout {lay!r}: "
+                    "slotless carried state / cross-attention leaves "
+                    "cannot live in the page pool (accepted layouts: "
+                    "'full', 'window').  Serve this family through the "
+                    "scheduler's per-slot state arena instead")
+            length = aval.shape[ax]
+            if self.page_slots > length:
+                raise PagedLayoutError(
+                    f"cache leaf {path}: page_slots={self.page_slots} "
+                    f"exceeds the {lay!r} ring length {length} "
+                    "(cfg.window); a page must fit inside the ring -- "
+                    f"pick page_slots <= {length}")
+            if length % self.page_slots:
+                field = ("cfg.window" if lay == "window"
+                         else "ServeConfig.max_len")
+                raise PagedLayoutError(
+                    f"cache leaf {path}: page_slots={self.page_slots} "
+                    f"does not divide the leaf's ring length {length} "
+                    f"({field}); a {lay!r} ring pages window-modularly "
+                    "only when page_slots divides it -- pick page_slots "
+                    f"from the divisors of {length}")
+            leaf_meta[path] = (length, lay)
 
         placed = self.placement is not None
         tabs = (arena.leaf_block_tables(self.placement) if placed else None)
@@ -275,15 +308,20 @@ class PagePool:
             m = _LEAF_RE.match(path)
             if not m:
                 raise PagedLayoutError(
-                    f"cache leaf {path} is not a ring k/v/pos leaf; the "
-                    "paged serving cache only understands the shared "
-                    "attention cache layout")
+                    f"cache leaf {path} is not a ring k/v/pos leaf of "
+                    "the shared attention-cache layout (containers "
+                    "'prefix'/'periods'/'rest', leaves 'k'/'v'/'pos'); "
+                    "the page pool accepts 'full' and 'window' ring "
+                    "layouts only -- carried-state and cross-attention "
+                    "leaves serve through the per-slot state arena")
             aval, ax = by_path[path]
             stacked = m.group(1) == "periods"
             if (ax != (2 if stacked else 1)):
                 raise PagedLayoutError(
                     f"cache leaf {path}: slot axis {ax} is not the ring "
-                    "axis the paged layout expects")
+                    "axis the paged layout expects (axis 2 for stacked "
+                    "period leaves, axis 1 otherwise)")
+            length, layout = leaf_meta[path]
             n_layers = aval.shape[0] if stacked else 1
             wps = _leaf_words_per_slot(aval.shape, ax, aval.dtype)
             page_words = wps * self.page_slots
@@ -299,7 +337,9 @@ class PagePool:
                 raise PagedLayoutError(
                     f"cache leaf {path}: ECC domains need even page and "
                     f"slot word counts (codeword pairs), got page="
-                    f"{page_words} / slot={wps} words")
+                    f"{page_words} / slot={wps} words; use a head_dim/"
+                    "page_slots combination giving even word counts or "
+                    "drop ecc=True from the domain")
             layer_words = self.total_pages * page_words
             pb = pc = bb = bp = None
             if placed:
@@ -312,6 +352,8 @@ class PagePool:
                 path=path, container=m.group(1), slot_key=m.group(2),
                 which=m.group(3), stacked=stacked, n_layers=n_layers,
                 wps=wps, page_words=page_words, layer_words=layer_words,
+                length=length, n_pages=length // self.page_slots,
+                layout=layout,
                 page_base=pb, page_pc=pc, block_base=bb, block_pc=bp))
         return tuple(out)
 
@@ -352,6 +394,14 @@ class PagePool:
                               for c, a, b in zip(pc[l], r0, r1)])
                 weak |= w
         return weak, rate
+
+    @property
+    def uniform(self) -> bool:
+        """True when every ring leaf is full-length (no window leaves).
+        Copy-on-write prefix sharing keys on page-aligned *position*
+        prefixes, which only line up across requests for full rings --
+        the scheduler disables sharing for non-uniform layouts."""
+        return all(l.layout == "full" for l in self.leaves)
 
     # ---- allocation ------------------------------------------------------
     @property
@@ -707,11 +757,12 @@ class PagePool:
         assert pids.shape[0] == self.n_logical_pages, pids.shape
         leaves = []
         for leaf in self.leaves:
-            base = leaf.page_base[:, pids].reshape(-1)     # (nl * n_lp,)
-            pc = leaf.page_pc[:, pids].reshape(-1)
+            lp = pids[:leaf.n_pages]       # window leaves: leading slice
+            base = leaf.page_base[:, lp].reshape(-1)       # (nl * n_lp,)
+            pc = leaf.page_pc[:, lp].reshape(-1)
             leaves.append(PagedLeafPlacement(
                 path=leaf.path,
-                n_words=leaf.n_layers * self.max_len * leaf.wps,
+                n_words=leaf.n_layers * leaf.length * leaf.wps,
                 page_words=leaf.page_words,
                 page_base=np.ascontiguousarray(base, np.uint32),
                 page_pc=np.ascontiguousarray(pc, np.int32)))
@@ -736,6 +787,8 @@ class _PagedLeafEntry:
 class _PagedSlotEntry:
     k: _PagedLeafEntry
     v: _PagedLeafEntry
+    length: int = 0            # this ring's logical length (<= max_len)
+    n_pages: int = 0           # leading page-table entries it addresses
 
 
 @dataclasses.dataclass
@@ -766,10 +819,13 @@ class PagedServingCtx:
 
     def update(self, slot_key: str, cache, new, pos):
         """Paged ring write (see :func:`repro.models.cache.paged_update`)
-        of one decode token per serving slot."""
+        of one decode token per serving slot.  Window rings write
+        window-modularly through the leading ``n_pages`` table entries."""
         from repro.models.cache import paged_update
-        return paged_update(cache, new, pos, self.page_table,
-                            self.length, self.page_slots)
+        e = self.entries[slot_key]
+        return paged_update(cache, new, pos,
+                            self.page_table[:, :e.n_pages],
+                            e.length, self.page_slots)
 
     def attend(self, slot_key: str, layer_idx, q, cache, *, q_pos,
                causal: bool, window: int, scale=None):
@@ -780,8 +836,11 @@ class PagedServingCtx:
         kt = jax.lax.dynamic_index_in_dim(e.k.thr, idx, keepdims=False)
         vb = jax.lax.dynamic_index_in_dim(e.v.base, idx, keepdims=False)
         vt = jax.lax.dynamic_index_in_dim(e.v.thr, idx, keepdims=False)
+        # the kernel derives the ring length from the table width, so a
+        # window leaf hands it the leading window//page_slots entries
         return faulty.paged_decode_attention(
-            q, cache["k"], cache["v"], cache["pos"], self.page_table,
+            q, cache["k"], cache["v"], cache["pos"],
+            self.page_table[:, :e.n_pages],
             q_pos=jnp.reshape(q_pos, (-1,)).astype(jnp.int32),
             k_tables=(kb, kt), v_tables=(vb, vt), causal=causal,
             window=window, scale=scale, seed=self.seed,
@@ -811,16 +870,52 @@ class MixedServingCtx(PagedServingCtx):
     wstart: Optional[jax.Array] = None        # (S,) int32
     prefill_end: Optional[jax.Array] = None   # (S,) int32
     scratch_id: int = 0
+    # per-slot_key pre-write window snapshot + fresh chunk K/V, stashed
+    # by update() for attend() (see _stash_window)
+    _window: Dict[str, tuple] = dataclasses.field(default_factory=dict)
+
+    def _stash_window(self, slot_key: str, e: _PagedSlotEntry, cache,
+                      new, pos):
+        """Window rings under chunked prefill: an in-chunk ring write at
+        position p overwrites slot p % window, which may still hold a
+        pre-chunk position an *earlier* chunk query needs (window=8,
+        chunk=4: writing pos 12 evicts pos 4, which query 10 still
+        attends).  So before writing, gather the last ``window``
+        pre-chunk positions from the ring in ascending-position order
+        (bit-identical summation order to standalone prefill) and stash
+        them together with the fresh chunk K/V; prefill lanes attend
+        over the concatenation instead of re-gathering the clobbered
+        ring."""
+        w = e.length
+        qp = jnp.asarray(pos, jnp.int32)
+        if qp.ndim == 1:
+            qp = qp[:, None]
+        c0 = qp[:, 0]                          # chunk-start per slot
+        kpos = (c0[:, None] - w
+                + jnp.arange(w, dtype=jnp.int32)[None, :])   # ascending
+        slot = jnp.where(kpos >= 0, kpos, 0) % w
+        lp = slot // self.page_slots
+        row = slot % self.page_slots
+        pid = jnp.take_along_axis(self.page_table[:, :e.n_pages], lp,
+                                  axis=1)
+        rk = cache["k"][pid, row]              # (S, w, KH, D)
+        rv = cache["v"][pid, row]
+        self._window[slot_key] = (rk, rv, kpos, new["k"], new["v"], qp)
 
     def update(self, slot_key: str, cache, new, pos):
         from repro.models.cache import paged_update
-        return paged_update(cache, new, pos, self.page_table,
-                            self.length, self.page_slots,
+        e = self.entries[slot_key]
+        if e.length < self.length:
+            self._stash_window(slot_key, e, cache, new, pos)
+        return paged_update(cache, new, pos,
+                            self.page_table[:, :e.n_pages],
+                            e.length, self.page_slots,
                             wstart=self.wstart, scratch_id=self.scratch_id)
 
     def attend(self, slot_key: str, layer_idx, q, cache, *, q_pos,
                causal: bool, window: int, scale=None):
         from repro.models import layers as mlayers
+        e = self.entries[slot_key]
         qp = jnp.asarray(q_pos, jnp.int32)
         s = q.shape[0]
         qp = jnp.broadcast_to(qp.reshape(s, -1), q.shape[:2])
@@ -828,13 +923,23 @@ class MixedServingCtx(PagedServingCtx):
             self, slot_key, layer_idx, q[:, :1], cache,
             q_pos=jnp.maximum(qp[:, 0], 0), causal=causal, window=window,
             scale=scale)
-        gk = cache["k"][self.page_table]      # (S, n_lp, ps, KH, D)
-        gv = cache["v"][self.page_table]
-        gk = gk.reshape((s, self.length) + gk.shape[3:])
-        gv = gv.reshape((s, self.length) + gv.shape[3:])
-        kpos = jnp.broadcast_to(
-            jnp.arange(self.length, dtype=jnp.int32), (s, self.length))
-        kv_valid = kpos < self.prefill_end[:, None]
+        if e.length < self.length:
+            # window ring: pre-write snapshot + fresh chunk (stashed by
+            # update), both in ascending position order
+            rk, rv, rkpos, fk, fv, fqp = self._window[slot_key]
+            gk = jnp.concatenate([rk, fk], axis=1)
+            gv = jnp.concatenate([rv, fv], axis=1)
+            kpos = jnp.concatenate([rkpos, fqp], axis=1)
+            kv_valid = kpos >= 0
+        else:
+            gk = cache["k"][self.page_table]  # (S, n_lp, ps, KH, D)
+            gv = cache["v"][self.page_table]
+            gk = gk.reshape((s, self.length) + gk.shape[3:])
+            gv = gv.reshape((s, self.length) + gv.shape[3:])
+            kpos = jnp.broadcast_to(
+                jnp.arange(self.length, dtype=jnp.int32),
+                (s, self.length))
+            kv_valid = kpos < self.prefill_end[:, None]
         pref = mlayers.attention(q, gk, gv, q_positions=qp,
                                  k_positions=kpos, causal=causal,
                                  window=window, kv_valid=kv_valid,
@@ -909,9 +1014,11 @@ class PagedKVCache:
             wprl2, ecc, inject = 0, False, False
         wtab = (table[:, jnp.asarray(_WEAKEN_COLS)]
                 if table is not None and chaos is not None else None)
+        geom: Dict[str, Tuple[int, int]] = {}
         for leaf in p.leaves:
             if leaf.which not in ("k", "v"):
                 continue
+            geom[leaf.slot_key] = (leaf.length, leaf.n_pages)
             if table is not None:
                 pb, pc, _, _ = self._tables[leaf.path]
                 thr = table[pc]
@@ -925,7 +1032,9 @@ class PagedKVCache:
                     thr=jnp.zeros((nl, tp, NUM_THR_COLS), jnp.uint32))
             entries.setdefault(leaf.slot_key, {})[leaf.which] = e
         kw = dict(
-            entries={k: _PagedSlotEntry(k=h["k"], v=h["v"])
+            entries={k: _PagedSlotEntry(k=h["k"], v=h["v"],
+                                        length=geom[k][0],
+                                        n_pages=geom[k][1])
                      for k, h in entries.items()},
             page_table=page_table, length=p.max_len,
             page_slots=p.page_slots, seed=(seed if seed is not None else 0),
@@ -1029,9 +1138,10 @@ class PagedKVCache:
             arr_l = self._leaf_arrays(tree, leaf)
             src = self._leaf_arrays(cache, leaf)             # (nl, 1, L, ...)
             tail = src.shape[3:]
-            src = src.reshape((leaf.n_layers, p.n_logical_pages,
+            src = src.reshape((leaf.n_layers, leaf.n_pages,
                                p.page_slots) + tail)
-            self._store(tree, leaf, arr_l.at[:, pids].set(src))
+            self._store(tree, leaf,
+                        arr_l.at[:, pids[:leaf.n_pages]].set(src))
         return tree
 
     def reset_and_fork(self, tree, page_ids, fork_src, fork_dst,
@@ -1132,26 +1242,31 @@ class PagedKVCache:
         kw = dict(seed=p.faultmap.seed, method=method,
                   words_per_row_log2=p.faultmap.words_per_row_log2)
         qp = jnp.reshape(q_pos, (-1,)).astype(jnp.int32)
-        slot = qp % p.max_len
-        lp = slot // p.page_slots
-        row = slot % p.page_slots
-        pid = jnp.take_along_axis(page_table, lp[:, None], axis=1)[:, 0]
         n_s = qp.shape[0]
         for leaf in p.leaves:
             if mode == "read" and leaf.which in ("k", "v"):
                 continue
+            # window-modular: each leaf's ring slot for position p is
+            # p % length, addressed through the leading length//ps
+            # entries of the request's page table
+            slot = qp % leaf.length
+            lp = slot // p.page_slots
+            row = slot % p.page_slots
+            pid = jnp.take_along_axis(page_table, lp[:, None],
+                                      axis=1)[:, 0]
             _, _, bb, bp = self._tables[leaf.path]
             bt = table[bp]
             arr_l = self._leaf_arrays(tree, leaf)
             if leaf.which == "pos" and p.domain.ecc:
                 # single positions split ECC codewords: corrupt the
                 # whole pos pages (cheap -- pos is 1 word per slot)
-                vals = arr_l[:, page_table]      # (nl, S, n_lp, ps)
+                ptab_l = page_table[:, :leaf.n_pages]
+                vals = arr_l[:, ptab_l]          # (nl, S, n_lp, ps)
                 u32 = jax.lax.bitcast_convert_type(vals, jnp.uint32)
                 off = (jnp.arange(leaf.n_layers,
                                   dtype=jnp.uint32)[:, None, None, None]
                        * np.uint32(leaf.layer_words)
-                       + page_table.astype(jnp.uint32)[None, :, :, None]
+                       + ptab_l.astype(jnp.uint32)[None, :, :, None]
                        * np.uint32(leaf.page_words)
                        + jnp.arange(p.page_slots,
                                     dtype=jnp.uint32)[None, None, None, :])
@@ -1159,7 +1274,7 @@ class PagedKVCache:
                                              **kw)
                 out = jax.lax.bitcast_convert_type(out, vals.dtype)
                 self._store(tree, leaf,
-                            arr_l.at[:, page_table].set(out))
+                            arr_l.at[:, ptab_l].set(out))
                 continue
             vals = arr_l[:, pid, row]            # (nl, S, ...)
             shape = vals.shape

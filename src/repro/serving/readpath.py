@@ -44,6 +44,25 @@ def supports(module) -> bool:
     return bool(getattr(module, "SUPPORTS_READ_PATH", False))
 
 
+def state_leaf_paths(specs, max_len: int) -> Tuple[str, ...]:
+    """Keystr paths of the carried-``state`` cache leaves of a family.
+
+    These are the leaves the read path can never cover: recurrent
+    state (RG-LRU h/conv, mLSTM matrix memories) is rewritten whole on
+    every decode step, so write-path injection re-applies the domain's
+    stuck-at masks to each new value -- a fault acquired on write
+    PERSISTS for the lifetime of the request (corrupt-once-on-write),
+    unlike ring K/V rows which are written once and only re-masked
+    idempotently.  The persistent-fault oracle test keys on this list
+    to know which leaves to difference across steps.
+    """
+    from repro.models.base import cache_layouts
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        cache_layouts(specs, max_len))
+    return tuple(jax.tree_util.keystr(p) for p, lay in flat
+                 if lay == "state")
+
+
 @dataclasses.dataclass(frozen=True)
 class _LeafEntry:
     base: jax.Array           # (num_blocks,) uint32 physical block bases

@@ -94,7 +94,7 @@ from repro.core.domains import ALIGN_WORDS, CapacityError, DomainAllocator
 from repro.core.engine import _static_value, resolve_method
 from repro.core.faultmodel import V_MIN, V_NOM
 from repro.core.hbm import fleet_map_seeds
-from repro.models.base import ArchBundle, ArchConfig
+from repro.models.base import ArchBundle, ArchConfig, cache_layouts
 from repro.obs.metrics import (MetricsRegistry, ObsConfig,
                                init_step_counters, step_counter_delta)
 from repro.obs.trace import EventTrace
@@ -176,6 +176,12 @@ class Request:
     max_new_tokens: Optional[int] = None
     tier: Any = "cheap"
     key: Optional[jax.Array] = None
+    # Modality inputs beyond tokens, UNBATCHED (whisper ``frames`` of
+    # shape (enc_len, d_model), VLM ``patches`` of (enc_len,
+    # frontend_dim)); the scheduler adds the batch axis at admission.
+    # Only consumed on the state-arena route; the paged route serves
+    # token-only families and rejects extras.
+    extras: Optional[Dict[str, Any]] = None
 
 
 @dataclasses.dataclass
@@ -280,7 +286,23 @@ class ContinuousBatchingScheduler:
     single-device map) and, under a governor, admits against its own
     ``shard_setpoints`` entry -- a heterogeneous-voltage fleet on one
     compiled step.
+
+    This class is also the zoo's single serving front door: families
+    whose cache does not page (no ``SUPPORTS_PAGED`` on the module --
+    MoE/MLA, recurrent-state hybrids, xLSTM, whisper, VLM) are
+    dispatched from ``__new__`` to the state-arena route
+    (:class:`repro.serving.statearena.StateArenaScheduler`), which
+    honors the same construction surface and the same contracts (one
+    donated step, flat trace/launch budgets, bit-exact solo replay).
     """
+
+    def __new__(cls, bundle: Optional[ArchBundle] = None, *args,
+                **kwargs):
+        if (cls is ContinuousBatchingScheduler and bundle is not None
+                and not getattr(bundle.module, "SUPPORTS_PAGED", False)):
+            from repro.serving.statearena import StateArenaScheduler
+            return object.__new__(StateArenaScheduler)
+        return object.__new__(cls)
 
     def __init__(self, bundle: ArchBundle, cfg: ArchConfig, params,
                  sc: ServeConfig, *, num_slots: int, num_pages: int,
@@ -529,11 +551,16 @@ class ContinuousBatchingScheduler:
         # launches); events and latency are host-side only.
         self.obs = (obs if obs is not None
                     else sc.obs if sc.obs is not None else ObsConfig())
+        self.layout_kinds = tuple(sorted(set(
+            jax.tree_util.tree_leaves(cache_layouts(
+                bundle.module.cache_specs(cfg, 1, sc.max_len),
+                sc.max_len)))))
         self.metrics: Optional[MetricsRegistry] = None
         self.trace: Optional[EventTrace] = None
         if self.obs.enabled:
             self.metrics = MetricsRegistry(
-                self.n_shards, self._shards[0].pool, config=self.obs)
+                self.n_shards, self._shards[0].pool, config=self.obs,
+                layouts=self.layout_kinds)
             self.trace = EventTrace(capacity=self.obs.trace_capacity)
             for sh in self._shards:
                 sh.pool.on_event = functools.partial(
@@ -797,6 +824,13 @@ class ContinuousBatchingScheduler:
         if plen < 1:
             raise ValueError(
                 f"request {request.rid!r}: empty prompt")
+        if request.extras:
+            raise ValueError(
+                f"request {request.rid!r}: extras "
+                f"{sorted(request.extras)} on the paged route; the "
+                f"{self.cfg.family!r} family is token-only (modality "
+                "extras belong to state-arena families: whisper frames, "
+                "vlm patches)")
         if plen > self.sc.max_len:
             raise ValueError(
                 f"request {request.rid!r}: prompt length {plen} exceeds "
@@ -854,8 +888,12 @@ class ContinuousBatchingScheduler:
         plen = prompt.shape[0]
         holder = ("__req__", req.rid)
         # no sharing when generation would wrap the ring into the
-        # read-only prefix pages
-        eligible = bool(self.sc.share_prefix) and plen + n_new <= p.max_len
+        # read-only prefix pages, and none at all on non-uniform
+        # (window) layouts: COW prefix matching keys on page-aligned
+        # position prefixes, which only line up across requests when
+        # every ring is full-length (window tables are position-modular)
+        eligible = (bool(self.sc.share_prefix) and p.uniform
+                    and plen + n_new <= p.max_len)
         if eligible:
             matched, spids = p.match_prefix(prompt)
         else:
@@ -1339,9 +1377,11 @@ class ContinuousBatchingScheduler:
 
     # ---- observability hooks ----------------------------------------------
     def _emit(self, kind: str, **kw) -> None:
-        """Emit one trace event stamped with the current step index
-        (no-op when tracing is disabled)."""
+        """Emit one trace event stamped with the current step index and
+        the scheduler's cache-layout mix (no-op when tracing is
+        disabled)."""
         if self.trace is not None:
+            kw.setdefault("layout", "+".join(self.layout_kinds))
             self.trace.emit(kind, step=self.steps, **kw)
 
     def _pool_event(self, shard: int, kind: str, **data) -> None:
@@ -1458,6 +1498,8 @@ class ContinuousBatchingScheduler:
                                          else 0),
                 })
         out = {
+            "route": "paged",
+            "cache_layouts": list(self.layout_kinds),
             "steps": self.steps,
             "admitted": self.admitted,
             "peak_active": self.peak_active,

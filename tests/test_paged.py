@@ -264,10 +264,15 @@ def test_pool_layout_errors_are_typed_and_actionable():
     # 3 slots -> 24-word pages; 4096 % 24 != 0)
     with pytest.raises(PagedLayoutError, match="block size"):
         _pool(page_slots=3, max_len=24)
-    # non-uniform ring lengths (sliding-window layers) are rejected
+    # window rings page cleanly now (window-modular tables), but a ring
+    # shorter than one page cannot hold it: page must fit in the window
     cfg = dataclasses.replace(CFG, pattern=("local", "global"), window=8)
-    with pytest.raises(PagedLayoutError, match="uniform"):
-        _pool(cfg=cfg)
+    with pytest.raises(PagedLayoutError, match="page_slots <= 8"):
+        _pool(cfg=cfg, page_slots=16)
+    # and the page size must divide the window (cfg.window named)
+    cfg = dataclasses.replace(CFG, pattern=("local", "global"), window=12)
+    with pytest.raises(PagedLayoutError, match="cfg.window"):
+        _pool(cfg=cfg, page_slots=8)
     # ECC pools need even per-slot word counts (codeword pairs):
     # 1 kv-head x head_dim 2 = one bf16 word per slot
     cfg = dataclasses.replace(CFG, n_kv_heads=1, head_dim=2, n_heads=3)
